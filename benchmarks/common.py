@@ -1,0 +1,44 @@
+"""Shared helpers for the paper-table benchmarks."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+ART_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench")
+
+
+def save_artifact(name: str, obj) -> str:
+    os.makedirs(ART_DIR, exist_ok=True)
+    path = os.path.join(ART_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=lambda o: (
+            o.tolist() if isinstance(o, np.ndarray) else str(o)))
+    return path
+
+
+def classification_data(preset: str, n_clients: int, *, non_iid: bool,
+                        n_train=6000, n_test=1500, seed=0):
+    from repro.data import (make_classification, partition_iid,
+                            partition_label_skew)
+    x, y, xt, yt = make_classification(preset, n_train=n_train, n_test=n_test,
+                                       seed=seed)
+    if non_iid:
+        parts = partition_label_skew(y, n_clients, 2, seed=seed)
+    else:
+        parts = partition_iid(len(y), n_clients, seed=seed)
+    return (x, y, xt, yt, parts)
+
+
+def timed(fn, *args, reps=20, warmup=3):
+    import jax
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6   # us per call

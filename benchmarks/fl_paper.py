@@ -1,0 +1,112 @@
+"""Paper experiment benchmarks (one per figure/table of Sec. 5):
+
+  fig1_table2   — MNIST-like non-IID, 1/3 slow: FedAvg/QuAFL/FedBuff/FAVAS
+                  accuracy vs simulated time (Fig. 1, Table 2 col 2)
+  fig2_stragglers — same but 8/9 slow (Table 2 col 3, Fig. 2): FedBuff's
+                  fast-client bias vs FAVAS robustness
+  fig3a_cifar   — CIFAR-like non-IID (Fig. 3a)
+  fig3b_tiny    — TinyImageNet-like proxy, 200 classes, IID (Fig. 3b)
+  fig7_quant    — FAVAS[QNN] LUQ quantization + selection-size sweep (Fig. 7)
+
+Real datasets are not fetchable offline; dimensionality/class counts match
+and the *relative* paper claims are what EXPERIMENTS.md validates.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import classification_data, save_artifact
+from repro.core.fl_sim import SimConfig, run_simulation
+
+METHODS = ["fedavg", "quafl", "fedbuff", "favas"]
+
+
+def _grid(quick: bool):
+    # K=20 local steps and FedBuff Z=10 are the paper's settings (Sec. 5).
+    if quick:
+        return dict(n_clients=27, s_selected=6, K=20, buffer_z=10,
+                    total_time=1400.0, eval_every=350.0, batch_size=64,
+                    n_train=8000)
+    return dict(n_clients=60, s_selected=12, K=20, buffer_z=10,
+                total_time=3500.0, eval_every=500.0, batch_size=96,
+                n_train=12000)
+
+
+def _run_methods(preset, *, non_iid, slow_fraction, quick, eta=0.5, seeds=(0,),
+                 methods=METHODS, d_hidden=96, quant_bits=0, s_override=None,
+                 slow_step_time=16.0):
+    g = _grid(quick)
+    rows = {}
+    for method in methods:
+        finals, curves = [], []
+        for seed in seeds:
+            data = classification_data(preset, g["n_clients"], non_iid=non_iid,
+                                       n_train=g["n_train"], seed=seed)
+            cfg = SimConfig(method=method, n_clients=g["n_clients"],
+                            s_selected=s_override or g["s_selected"],
+                            K=g["K"], buffer_z=g["buffer_z"], eta=eta,
+                            total_time=g["total_time"],
+                            eval_every=g["eval_every"],
+                            batch_size=g["batch_size"],
+                            slow_fraction=slow_fraction,
+                            slow_step_time=slow_step_time,
+                            quant_bits=quant_bits if method == "favas" else 0,
+                            seed=seed)
+            r = run_simulation(cfg, data, d_hidden=d_hidden)
+            finals.append(r["final_accuracy"])
+            curves.append({"times": r["times"].tolist(),
+                           "accuracy": r["accuracy"].tolist(),
+                           "variance": r["variance"].tolist()})
+        rows[method] = {"final_mean": float(np.mean(finals)),
+                        "final_std": float(np.std(finals)),
+                        "curves": curves}
+    return rows
+
+
+def fig1_table2(quick=True):
+    rows = _run_methods("mnist-like", non_iid=True, slow_fraction=1 / 3,
+                        quick=quick)
+    save_artifact("fig1_table2_mnist_noniid", rows)
+    return rows
+
+
+def fig2_stragglers(quick=True):
+    """1/9 fast clients. slow_step_time=64 (vs 16 in fig1): the paper's
+    geometric speed model gives slow clients a long staleness tail; our
+    deterministic clock needs a larger fast/slow ratio to match that regime
+    (EXPERIMENTS.md §Repro discusses the mapping)."""
+    rows = _run_methods("mnist-like", non_iid=True, slow_fraction=8 / 9,
+                        quick=quick, slow_step_time=64.0,
+                        methods=["fedavg", "quafl", "fedbuff", "favas"])
+    save_artifact("fig2_mnist_noniid_1of9fast", rows)
+    return rows
+
+
+def fig3a_cifar(quick=True):
+    rows = _run_methods("cifar-like", non_iid=True, slow_fraction=1 / 3,
+                        quick=quick, eta=0.3, seeds=(0,))
+    save_artifact("fig3a_cifar_noniid", rows)
+    return rows
+
+
+def fig3b_tiny(quick=True):
+    rows = _run_methods("tiny-like", non_iid=False, slow_fraction=1 / 3,
+                        quick=quick, eta=0.3, seeds=(0,), d_hidden=128)
+    save_artifact("fig3b_tiny_iid", rows)
+    return rows
+
+
+def fig7_quant(quick=True):
+    out = {}
+    for bits in (0, 4, 3):
+        rows = _run_methods("cifar-like", non_iid=True, slow_fraction=1 / 3,
+                            quick=quick, eta=0.3, seeds=(0,),
+                            methods=["favas"], quant_bits=bits)
+        out[f"favas_bits{bits or 32}"] = rows["favas"]
+    for s in ((3, 10) if quick else (5, 20, 50)):
+        rows = _run_methods("cifar-like", non_iid=True, slow_fraction=1 / 3,
+                            quick=quick, eta=0.3, seeds=(0,),
+                            methods=["favas"], s_override=s)
+        out[f"favas_s{s}"] = rows["favas"]
+    save_artifact("fig7_quant_and_s", out)
+    return out

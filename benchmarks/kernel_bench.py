@@ -1,0 +1,43 @@
+"""Kernel microbenchmarks: fused Pallas path (interpret on CPU — structural
+check; MXU timings are a TPU artifact) vs the jnp oracle, plus the jitted
+oracle timing that the CPU CI actually optimizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed, save_artifact
+from repro.kernels import ref
+from repro.kernels.ops import favas_aggregate_flat, luq_quantize
+
+
+def run(quick=True):
+    key = jax.random.PRNGKey(0)
+    n, D = (8, 1 << 20) if quick else (32, 1 << 24)
+    ks = jax.random.split(key, 5)
+    server = jax.random.normal(ks[0], (D,))
+    clients = jax.random.normal(ks[1], (n, D))
+    inits = jax.random.normal(ks[2], (n, D))
+    alpha = jax.random.uniform(ks[3], (n,), minval=1.0, maxval=8.0)
+    mask = (jax.random.uniform(ks[4], (n,)) > 0.5).astype(jnp.float32)
+
+    agg_ref = jax.jit(lambda *a: ref.favas_agg_ref(*a, 4.0))
+    t_ref = timed(agg_ref, server, clients, inits, alpha, mask, reps=10)
+
+    x = jax.random.normal(key, (D,))
+    luq_ref_fn = jax.jit(lambda x, k: luq_quantize(x, 4, k, use_kernel=False))
+    t_luq = timed(luq_ref_fn, x, key, reps=10)
+
+    bytes_agg = (2 * n + 2) * D * 4
+    rows = {
+        "favas_agg_jnp_us": t_ref,
+        "favas_agg_gbps": bytes_agg / (t_ref * 1e-6) / 1e9,
+        "luq_jnp_us": t_luq,
+        "elements": D,
+        "clients": n,
+        "note": "Pallas kernels validated vs these refs in tests/test_kernels.py;"
+                " interpret-mode timing is not meaningful, TPU is the target.",
+    }
+    save_artifact("kernel_bench", rows)
+    return rows

@@ -1,0 +1,60 @@
+"""Roofline table (deliverable g): collates the dry-run artifacts under
+experiments/dryrun into the per-(arch x shape x mesh) three-term table that
+EXPERIMENTS.md §Roofline embeds.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_artifact
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+HEADER = ("arch,shape,mesh,variant,status,compute_s,memory_s,collective_s,"
+          "dominant,model_flops,useful_ratio,temp_bytes,arg_bytes,coll_bytes")
+
+
+def rows():
+    out = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        variant = r.get("variant", "base")
+        if r.get("status") == "skipped":
+            out.append(dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                            variant=variant, status="skipped"))
+            continue
+        if r.get("status") != "ok":
+            out.append(dict(arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+                            variant=variant, status="error", error=r.get("error")))
+            continue
+        rf = r["roofline"]
+        out.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], variant=variant,
+            status="ok",
+            compute_s=rf["compute_s"], memory_s=rf["memory_s"],
+            collective_s=rf["collective_s"], dominant=rf["dominant"],
+            model_flops=rf["model_flops"], useful_ratio=rf["useful_ratio"],
+            temp_bytes=r["memory"]["temp_bytes"],
+            arg_bytes=r["memory"]["argument_bytes"],
+            coll_bytes=r["collectives"]["total_bytes"]))
+    return out
+
+
+def run(quick=True):
+    table = rows()
+    print(HEADER)
+    for r in table:
+        if r["status"] != "ok":
+            print(f"{r['arch']},{r['shape']},{r['mesh']},{r['variant']},"
+                  f"{r['status']},,,,,,,,,")
+            continue
+        print(f"{r['arch']},{r['shape']},{r['mesh']},{r['variant']},ok,"
+              f"{r['compute_s']:.3e},{r['memory_s']:.3e},"
+              f"{r['collective_s']:.3e},{r['dominant']},"
+              f"{r['model_flops']:.3e},{r['useful_ratio']:.3f},"
+              f"{r['temp_bytes']},{r['arg_bytes']},{r['coll_bytes']:.3e}")
+    save_artifact("roofline_table", table)
+    return table

@@ -1,0 +1,83 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness (deliverable d): one entry per paper table/figure plus
+the roofline/kernel harnesses. ``--full`` runs paper-scale FL simulations
+(slow); the default quick mode keeps CPU CI in minutes.
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args, _ = ap.parse_known_args()
+    quick = not args.full
+
+    from benchmarks import (fl_paper, theory_table, kernel_bench,
+                            roofline_table, ablation_reweight)
+
+    suite = [
+        ("table1_theory", lambda: theory_table.run(quick)),
+        ("kernel_bench", lambda: kernel_bench.run(quick)),
+        ("roofline_table", lambda: roofline_table.run(quick)),
+        ("fig1_table2_mnist", lambda: fl_paper.fig1_table2(quick)),
+        ("fig2_stragglers_1of9fast", lambda: fl_paper.fig2_stragglers(quick)),
+        ("fig3a_cifar", lambda: fl_paper.fig3a_cifar(quick)),
+        ("fig3b_tinyimagenet_proxy", lambda: fl_paper.fig3b_tiny(quick)),
+        ("fig7_quant_luq", lambda: fl_paper.fig7_quant(quick)),
+        ("ablation_reweight", lambda: ablation_reweight.run(quick)),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suite:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.perf_counter()
+        try:
+            out = fn()
+            us = (time.perf_counter() - t0) * 1e6
+            derived = _derive(name, out)
+            print(f"{name},{us:.0f},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},NA,ERROR:{type(e).__name__}")
+    raise SystemExit(1 if failures else 0)
+
+
+def _derive(name: str, out) -> str:
+    """A one-cell human-meaningful summary per benchmark."""
+    try:
+        if name.startswith("table1"):
+            t = out["table1"]
+            best = min(t, key=t.get)
+            return f"best_bound={best}"
+        if name == "kernel_bench":
+            return f"agg_jnp={out['favas_agg_jnp_us']:.0f}us"
+        if name == "ablation_reweight":
+            return ";".join(
+                f"{k}={v['final_mean']:.3f}/rec{v['slow_class_recall']:.3f}"
+                for k, v in out.items())
+        if name == "roofline_table":
+            ok = sum(1 for r in out if r["status"] == "ok")
+            sk = sum(1 for r in out if r["status"] == "skipped")
+            return f"ok={ok};skipped={sk}"
+        if name.startswith("fig7"):
+            fp = out.get("favas_bits32", {}).get("final_mean")
+            q4 = out.get("favas_bits4", {}).get("final_mean")
+            return f"fp32={fp:.3f};luq4={q4:.3f}"
+        finals = {m: r["final_mean"] for m, r in out.items()}
+        order = sorted(finals, key=finals.get, reverse=True)
+        return ";".join(f"{m}={finals[m]:.3f}" for m in order)
+    except Exception:  # noqa: BLE001
+        return "ok"
+
+
+if __name__ == '__main__':
+    main()

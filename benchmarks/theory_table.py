@@ -1,0 +1,20 @@
+"""Table 1: analytic units-of-time to epsilon for all five methods, plus the
+straggler-severity sweep that illustrates the paper's tau_max discussion
+(two workers, 1 vs 1000 time units -> FedBuff/AsyncSGD degrade, FAVAS not).
+"""
+from __future__ import annotations
+
+from benchmarks.common import save_artifact
+from repro.core.theory import TheoryParams, units_of_time
+
+
+def run(quick=True):
+    base = TheoryParams()
+    table = units_of_time(base)
+    sweep = {}
+    for slow in (16.0, 100.0, 1000.0):
+        sweep[f"slow={slow:g}"] = units_of_time(
+            TheoryParams(slow_step_time=slow))
+    out = {"table1": table, "straggler_sweep": sweep}
+    save_artifact("table1_theory", out)
+    return out

@@ -1,0 +1,43 @@
+"""Serving example: continuous batching — 8 requests of different prompt and
+output lengths stream through 3 decode slots (vLLM-style, TPU static
+shapes). Watch slot utilization as requests retire and new ones are
+admitted mid-flight.
+
+  PYTHONPATH=src python examples/continuous_batching.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.launch.steps import serve_config
+from repro.models.model import init_params
+from repro.serving import Request, ContinuousBatcher
+from repro.serving.engine import DecodeEngine
+
+cfg = serve_config(get_reduced_config("llama3-8b"))
+key = jax.random.PRNGKey(0)
+params = init_params(key, cfg)
+
+engine = DecodeEngine(params, cfg, batch_slots=3, max_seq=64)
+sched = ContinuousBatcher(3, engine.step_fn, vocab_raw=cfg.vocab_size_raw)
+
+rng = jax.random.PRNGKey(7)
+for uid in range(8):
+    rng, sub = jax.random.split(rng)
+    plen = 2 + uid % 5
+    prompt = jax.random.randint(sub, (plen,), 0, cfg.vocab_size_raw).tolist()
+    sched.submit(Request(uid=uid, prompt=prompt, max_new_tokens=4 + uid % 7))
+
+while sched.has_work():
+    sched.step(temperature=0.0)
+    if sched.steps % 5 == 0:
+        print(f"step {sched.steps:3d} | slots busy {sched.utilization():.2f} "
+              f"| finished {len(sched.finished)}/8")
+
+print()
+for uid in sorted(sched.finished):
+    r = sched.finished[uid]
+    print(f"req {uid}: prompt[{len(r.prompt)}] -> {r.output}")
+print(f"\ntotal engine steps: {sched.steps} "
+      f"(naive one-at-a-time would need "
+      f"{sum(len(r.prompt)+len(r.output) for r in sched.finished.values())})")

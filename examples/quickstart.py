@@ -1,0 +1,46 @@
+"""Quickstart: FAVAS in ~40 lines of public API.
+
+Trains a reduced Qwen3-family model with 4 asynchronous clients (1/3 slow)
+on a synthetic non-IID LM corpus, for 30 server rounds on CPU.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_reduced_config
+from repro.core import (FavasConfig, favas_init, favas_round, favas_variance,
+                        client_lambdas)
+from repro.data import make_lm_corpus
+from repro.data.pipeline import lm_round_batch
+from repro.models.model import init_params, loss_fn
+
+ARCH = "qwen3-4b"
+
+cfg = get_reduced_config(ARCH)
+fcfg = FavasConfig(n_clients=4, s_selected=2, local_steps=4, eta=0.05)
+
+key = jax.random.PRNGKey(0)
+state = favas_init(init_params(key, cfg), fcfg, key)
+lambdas = jnp.asarray(client_lambdas(fcfg))   # 1/3 slow clients
+
+step = jax.jit(functools.partial(
+    favas_round, cfg=fcfg,
+    loss_fn=lambda p, b: loss_fn(p, cfg, b),
+    lambdas=lambdas))
+
+tokens, domains = make_lm_corpus(cfg.vocab_size_raw, 200_000, n_domains=4)
+rng = np.random.default_rng(0)
+
+for t in range(30):
+    batch = lm_round_batch(tokens, domains, fcfg.n_clients, fcfg.R,
+                           batch=2, seq=64, rng=rng)
+    state, metrics = step(state, {"tokens": jnp.asarray(batch)})
+    if (t + 1) % 5 == 0:
+        print(f"round {t+1:3d}  loss={float(metrics['loss']):.3f}  "
+              f"client-dispersion={float(favas_variance(state)):.3e}")
+
+print("done — the server model in state.server is the trained artifact")

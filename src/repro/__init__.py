@@ -1,0 +1,3 @@
+"""repro — FAVAS/FAVANO (asynchronous federated averaging with unbiased
+straggler reweighting) as a multi-pod JAX training/inference framework."""
+__version__ = "1.0.0"

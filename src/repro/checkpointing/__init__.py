@@ -1,0 +1,1 @@
+from repro.checkpointing.ckpt import save_checkpoint, load_checkpoint, latest_checkpoint

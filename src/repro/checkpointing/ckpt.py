@@ -1,0 +1,69 @@
+"""Checkpointing: pytree <-> flat .npz with '/'-joined key paths (orbax is
+not available offline). Atomic write via tmp-rename; restores into the
+reference tree's structure and dtypes, so sharded trees round-trip after a
+device_get.
+"""
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    os.makedirs(directory, exist_ok=True)
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":       # npz can't serialize ml_dtypes
+            arr = arr.astype(np.float32)       # lossless widening
+        flat[_path_str(path)] = arr
+    final = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, final)
+    return final
+
+
+def load_checkpoint(path: str, reference: Any) -> Any:
+    """Restore into ``reference``'s structure (shapes/dtypes validated)."""
+    with np.load(path) as data:
+        paths, treedef = jax.tree_util.tree_flatten_with_path(reference)
+        leaves = []
+        for p, ref in paths:
+            key = _path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+            leaves.append(np.asarray(jax.numpy.asarray(arr).astype(ref.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for f in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+        if m and (best is None or int(m.group(1)) > best[0]):
+            best = (int(m.group(1)), os.path.join(directory, f))
+    return best[1] if best else None

@@ -1,0 +1,38 @@
+"""Architecture config registry: ``--arch <id>`` resolution.
+
+Each module cites its source paper / model card; IDs match the task
+assignment. ``favano`` is accepted as an alias namespace for the FL configs.
+"""
+from repro.models.model import ModelConfig, make_reduced
+
+_REGISTRY = {
+    "codeqwen1.5-7b": "repro.configs.codeqwen1_5_7b",
+    "whisper-medium": "repro.configs.whisper_medium",
+    "granite-moe-3b-a800m": "repro.configs.granite_moe_3b",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "llama3-8b": "repro.configs.llama3_8b",
+    "llama3-8b-swa": "repro.configs.llama3_8b_swa",   # beyond-paper SWA variant
+    "qwen2-vl-7b": "repro.configs.qwen2_vl_7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "mamba2-1.3b": "repro.configs.mamba2_1_3b",
+}
+
+ASSIGNED = [k for k in _REGISTRY if k != "llama3-8b-swa"]
+
+
+def list_archs():
+    return list(_REGISTRY)
+
+
+def get_config(name: str) -> ModelConfig:
+    import importlib
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return importlib.import_module(_REGISTRY[name]).CONFIG
+
+
+def get_reduced_config(name: str) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    return make_reduced(get_config(name))

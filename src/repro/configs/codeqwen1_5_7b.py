@@ -1,0 +1,10 @@
+"""CodeQwen1.5-7B [hf:Qwen/CodeQwen1.5-7B] — dense, GQA kv=32 (MHA), qkv bias."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", arch_type="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=13440, vocab_size_raw=92416,
+    rope_theta=1_000_000.0, attn_bias=True,
+    seq_shard_friendly=False,  # MHA: full-width K/V gathers lose (§Perf iter 5)
+)

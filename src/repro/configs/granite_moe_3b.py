@@ -1,0 +1,10 @@
+"""Granite MoE 3B-a800m [hf:ibm-granite/granite-3.0-1b-a400m-base family] —
+40 experts top-8, per-expert d_ff=512."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-moe-3b-a800m", arch_type="moe",
+    n_layers=32, d_model=1536, n_heads=24, n_kv_heads=8, head_dim=64,
+    d_ff=512, vocab_size_raw=49155,
+    n_experts=40, top_k=8, rope_theta=10_000.0,
+)

@@ -1,0 +1,9 @@
+"""Llama-3-8B [arXiv:2407.21783] — dense, GQA kv=8, 128k vocab."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-8b", arch_type="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab_size_raw=128256,
+    rope_theta=500_000.0,
+)

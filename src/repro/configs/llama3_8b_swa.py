@@ -1,0 +1,6 @@
+"""Beyond-paper variant: Llama-3-8B with sliding-window attention (window
+4096) so a dense arch can serve the long_500k shape sub-quadratically."""
+import dataclasses
+from repro.configs.llama3_8b import CONFIG as _BASE
+
+CONFIG = dataclasses.replace(_BASE, name="llama3-8b-swa", window=4096)

@@ -1,0 +1,10 @@
+"""Mamba2-1.3B [arXiv:2405.21060] — attention-free SSD, 48 layers, state 128."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b", arch_type="ssm",
+    n_layers=48, d_model=2048, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size_raw=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_groups=1, ssm_conv=4,
+    seq_shard_friendly=False,  # SSD cross-chunk scan: seq-sharding regressed (§Perf iter 5)
+)

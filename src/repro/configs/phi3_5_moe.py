@@ -1,0 +1,10 @@
+"""Phi-3.5-MoE 42B-a6.6B [hf:microsoft/Phi-3.5-MoE-instruct] — 16 experts top-2."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", arch_type="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=6400, vocab_size_raw=32064,
+    n_experts=16, top_k=2, rope_theta=10_000.0,
+    seq_shard_friendly=False,  # 42B expert weights dominate gathers (§Perf iter 5)
+)

@@ -1,0 +1,11 @@
+"""Qwen2-VL-7B [arXiv:2409.12191] — VLM backbone with M-RoPE (3D positions).
+ViT encoder is STUBBED: input_specs supplies precomputed patch embeddings."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b", arch_type="vlm",
+    n_layers=28, d_model=3584, n_heads=28, n_kv_heads=4, head_dim=128,
+    d_ff=18944, vocab_size_raw=152064,
+    rope_theta=1_000_000.0, mrope=True, mrope_sections=(16, 24, 24),
+    attn_bias=True,
+)

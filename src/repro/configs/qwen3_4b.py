@@ -1,0 +1,9 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family] — dense, qk_norm, GQA kv=8, head_dim 128."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", arch_type="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=9728, vocab_size_raw=151936,
+    rope_theta=1_000_000.0, qk_norm=True,
+)

@@ -1,0 +1,12 @@
+"""RecurrentGemma-2B [arXiv:2402.19427] — Griffin hybrid: RG-LRU + local attn
+1:2 pattern, window 2048, GQA kv=1 (MQA), head_dim 256."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", arch_type="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab_size_raw=256000,
+    rnn_width=2560, conv_width=4, window=0,
+    block_pattern=("rglru", "rglru", "local_attn"),
+    rope_theta=10_000.0, scan_layers=False,
+)

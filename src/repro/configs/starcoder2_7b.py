@@ -1,0 +1,9 @@
+"""StarCoder2-7B [arXiv:2402.19173] — dense, GQA kv=4, RoPE, GeLU MLP, LN."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-7b", arch_type="dense",
+    n_layers=32, d_model=4608, n_heads=36, n_kv_heads=4, head_dim=128,
+    d_ff=18432, vocab_size_raw=49152,
+    rope_theta=100_000.0, mlp_type="gelu", norm_type="ln", attn_bias=True,
+)

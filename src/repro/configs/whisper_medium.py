@@ -1,0 +1,12 @@
+"""Whisper-medium [arXiv:2212.04356] — enc-dec audio backbone.
+Conv/mel frontend is STUBBED: input_specs supplies (B, 1500, d) frame embeds."""
+from repro.models.model import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-medium", arch_type="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=4096, vocab_size_raw=51865,
+    enc_layers=24, enc_seq=1500,
+    mlp_type="gelu", norm_type="ln", attn_bias=True, scan_layers=False,
+    seq_shard_friendly=False,  # MHA (kv=16=H): §Perf iter 5
+)

@@ -1,0 +1,13 @@
+# FAVAS — the paper's primary contribution as a composable JAX module.
+from repro.core.favas import (
+    FavasConfig,
+    FavasState,
+    favas_init,
+    favas_round,
+    favas_variance,
+    favas_mu,
+    client_lambdas,
+    deterministic_alphas,
+)
+from repro.core.quant import luq_quantize, quantize_tree
+from repro.core.fl_sim import SimConfig, run_simulation

@@ -1,0 +1,198 @@
+"""FAVAS server round — Algorithm 1 of the paper, vectorized over resident
+clients and jit/pjit-compatible.
+
+State layout (all pytrees of jnp arrays):
+  server    : current server model w_t                      (model-sharded)
+  clients   : stacked client models w^i, leading axis n     (client+model sharded)
+  inits     : stacked w_init^i (last server model received)
+  counters  : q^i in {0..K} — local steps since last reset
+  opt_state : stacked per-client local-optimizer state (reset on selection)
+
+One round (server timestep t -> t+1):
+  1. draw per-round step increments d^i ~ shifted-Geom(lambda^i)  [App. C.2]
+  2. every client runs up to R masked local SGD steps: step k executes iff
+     q^i + k < min(q^i + d^i, K)  — stragglers simply mask out; cost is
+     uniform across the client mesh axis (no stragglers on the TPU itself,
+     heterogeneity is *modeled*, as in the paper's simulation)
+  3. draw S_t (Gumbel top-s), each selected client submits
+     w_unbiased^i = w_init^i + (w^i - w_init^i)/alpha^i        [eq. (3)]
+  4. w_{t+1} = (w_t + sum_{i in S_t} w_unbiased^i) / (s+1)     [line 10]
+  5. selected clients reset: w^i = w_init^i = w_{t+1}, q^i = 0
+
+The aggregation in step 4 is a masked weighted reduction over the client
+mesh axis — on hardware an all-reduce over ("pod","data"); `kernels/ops.py`
+provides the fused Pallas path for the per-leaf arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sampler, reweight
+from repro.core.quant import quantize_tree
+from repro.utils.tree import tree_map, tree_sq_dist
+
+
+@dataclasses.dataclass(frozen=True)
+class FavasConfig:
+    n_clients: int = 16
+    s_selected: int = 4
+    local_steps: int = 8            # K
+    max_steps_per_round: int = 0    # R; 0 -> R = K
+    eta: float = 0.1                # client LR (plain SGD, as in the paper)
+    reweight: str = "stochastic"    # "stochastic" | "deterministic"
+    slow_fraction: float = 1.0 / 3.0
+    lam_fast: float = 1.0 / 16.0
+    lam_slow: float = 0.5
+    quant_bits: int = 0             # >0: LUQ-quantize client messages
+    server_momentum: float = 0.0    # beyond-paper server-side momentum (off)
+    seed: int = 0
+
+    @property
+    def R(self) -> int:
+        return self.max_steps_per_round or self.local_steps
+
+
+def client_lambdas(cfg: FavasConfig) -> np.ndarray:
+    return sampler.make_lambdas(cfg.n_clients, cfg.slow_fraction,
+                                cfg.lam_fast, cfg.lam_slow, cfg.seed)
+
+
+def deterministic_alphas(cfg: FavasConfig) -> np.ndarray:
+    poll_prob = cfg.s_selected / cfg.n_clients
+    return reweight.alpha_deterministic(client_lambdas(cfg), cfg.local_steps,
+                                        poll_prob)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class FavasState:
+    server: Any
+    clients: Any
+    inits: Any
+    counters: jnp.ndarray          # (n,) int32
+    key: jnp.ndarray
+    t: jnp.ndarray                 # scalar int32
+
+    def tree_flatten(self):
+        return ((self.server, self.clients, self.inits, self.counters,
+                 self.key, self.t), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def favas_init(params, cfg: FavasConfig, key) -> FavasState:
+    """All clients start from the server model (Algorithm 1 line 16)."""
+    n = cfg.n_clients
+    stacked = tree_map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params)
+    return FavasState(
+        server=params,
+        clients=stacked,
+        inits=stacked,
+        counters=jnp.zeros((n,), jnp.int32),
+        key=key,
+        t=jnp.zeros((), jnp.int32),
+    )
+
+
+def _local_training(loss_fn: Callable, cfg: FavasConfig, clients, counters,
+                    new_counters, batch):
+    """Masked K-step local SGD, vmapped over the client axis.
+
+    batch: pytree with leading dims (n, R, ...) — one microbatch per client
+    per potential local step."""
+
+    def one_client(params, data, q0, q1):
+        def step(p, inp):
+            k, batch_k = inp
+            loss, g = jax.value_and_grad(loss_fn)(p, batch_k)
+            live = ((q0 + k) < q1).astype(jnp.float32)
+            p = tree_map(lambda pp, gg: pp - cfg.eta * live * gg.astype(pp.dtype),
+                         p, g)
+            return p, loss * live
+        ks = jnp.arange(cfg.R)
+        params, losses = jax.lax.scan(step, params, (ks, data))
+        denom = jnp.maximum((q1 - q0).astype(jnp.float32), 1.0)
+        return params, jnp.sum(losses) / denom
+
+    return jax.vmap(one_client)(clients, batch, counters, new_counters)
+
+
+def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable,
+                lambdas, det_alpha: Optional[jnp.ndarray] = None):
+    """One server round. Returns (new_state, metrics). Jit/pjit this."""
+    n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
+    key, k_inc, k_sel, k_q = jax.random.split(state.key, 4)
+
+    # 1. heterogeneous progress this round
+    d = sampler.sample_increments(k_inc, lambdas)              # (n,)
+    new_counters = jnp.minimum(state.counters + d, K)
+
+    # 2. masked local SGD
+    trained, mean_loss = _local_training(loss_fn, cfg, state.clients,
+                                         state.counters, new_counters, batch)
+
+    # 3. unbiased client messages (eq. 3)
+    if cfg.reweight == "deterministic":
+        alpha = det_alpha
+    else:
+        alpha = reweight.alpha_stochastic(new_counters, p_pos=1.0)
+    progress = tree_map(jnp.subtract, trained, state.inits)
+    if cfg.quant_bits > 0:
+        progress = quantize_tree(progress, cfg.quant_bits, k_q)
+    msgs = tree_map(
+        lambda init, prog: init + prog / alpha.reshape((n,) + (1,) * (prog.ndim - 1)),
+        state.inits, progress)
+
+    # 4. server aggregation (line 10): masked sum over the client axis
+    m = sampler.sample_selection(k_sel, n, s)                  # (n,) float
+    def agg(server_leaf, msg_leaf):
+        mm = m.reshape((n,) + (1,) * (msg_leaf.ndim - 1))
+        total = jnp.sum(mm * msg_leaf.astype(jnp.float32), axis=0)
+        return ((server_leaf.astype(jnp.float32) + total) / (s + 1.0)
+                ).astype(server_leaf.dtype)
+    server_new = tree_map(agg, state.server, msgs)
+
+    # 5. reset selected clients to the fresh server model
+    def reset(new_global, cur):
+        mm = m.reshape((n,) + (1,) * (cur.ndim - 1))
+        return (mm * new_global[None].astype(jnp.float32)
+                + (1.0 - mm) * cur.astype(jnp.float32)).astype(cur.dtype)
+    clients_new = tree_map(reset, server_new, trained)
+    inits_new = tree_map(reset, server_new, state.inits)
+    counters_new = jnp.where(m > 0, 0, new_counters).astype(jnp.int32)
+
+    new_state = FavasState(server=server_new, clients=clients_new,
+                           inits=inits_new, counters=counters_new,
+                           key=key, t=state.t + 1)
+    metrics = {
+        "loss": jnp.mean(mean_loss),
+        "mean_steps": jnp.mean(new_counters.astype(jnp.float32)),
+        "selected": jnp.sum(m),
+    }
+    return new_state, metrics
+
+
+def favas_variance(state: FavasState) -> jnp.ndarray:
+    """Paper's reported dispersion  sum_i ||w^i - w_t||^2  (Sec. 5).
+    Vectorized: sum over leaves of sum((W - w)^2)."""
+    d = tree_map(lambda W, w: jnp.sum(
+        jnp.square(W.astype(jnp.float32) - w[None].astype(jnp.float32))),
+        state.clients, state.server)
+    return sum(jax.tree_util.tree_leaves(d))
+
+
+def favas_mu(state: FavasState):
+    """mu_t = (w_t + sum_i w_t^i) / (n+1) — the averaged model the theory
+    tracks (eq. 4)."""
+    n = state.counters.shape[0]
+    return tree_map(
+        lambda w, W: (w.astype(jnp.float32) + jnp.sum(W.astype(jnp.float32), 0))
+        / (n + 1.0), state.server, state.clients)

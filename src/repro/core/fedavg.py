@@ -1,0 +1,46 @@
+"""Synchronous FedAvg (McMahan et al., 2017) at the distributed-trainer
+level — the paper's primary synchronous baseline, with the same resident-
+client layout as favas_round so the two are drop-in comparable on the mesh.
+
+One round: the server broadcasts w_t to the s selected clients, each runs
+exactly K local SGD steps on its shard, the server averages the s results.
+On real hardware the round blocks on the slowest selected client — which is
+the paper's whole point; the simulated-time benchmarks charge that cost via
+the App. C.2 clock (core/fl_sim.py).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampler
+from repro.core.favas import FavasConfig
+from repro.utils.tree import tree_map
+
+
+def fedavg_round(server, key, batch, *, cfg: FavasConfig, loss_fn: Callable):
+    """server: model pytree; batch: (n, K, B, ...) like favas_round.
+    Returns (new_server, new_key, metrics). All n resident slots compute
+    (uniform cost on the mesh); only the s selected contribute."""
+    n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
+    key, k_sel = jax.random.split(key)
+    m = sampler.sample_selection(k_sel, n, s)                # (n,)
+
+    def one_client(data):
+        def step(p, batch_k):
+            loss, g = jax.value_and_grad(loss_fn)(p, batch_k)
+            p = tree_map(lambda pp, gg: pp - cfg.eta * gg.astype(pp.dtype), p, g)
+            return p, loss
+        p, losses = jax.lax.scan(step, server, data)
+        return p, jnp.mean(losses)
+
+    trained, losses = jax.vmap(one_client)(batch)            # stacked (n, ...)
+
+    def avg(w, T):
+        mm = m.reshape((n,) + (1,) * (T.ndim - 1))
+        return (jnp.sum(mm * T.astype(jnp.float32), 0) / s).astype(w.dtype)
+    new_server = tree_map(avg, server, trained)
+    metrics = {"loss": jnp.sum(m * losses) / s, "selected": jnp.sum(m)}
+    return new_server, key, metrics

@@ -1,0 +1,276 @@
+"""Simulated-time federated-learning harness — reproduces the paper's
+experimental protocol (Sec. 5 + App. C.1/C.2) for FAVAS and its baselines
+(FedAvg, QuAFL, FedBuff, AsyncSGD) on the small classifier models.
+
+Time model (App. C.2):
+  * server waiting time 4, server interaction time 3;
+  * deterministic per-step client runtimes: fast = 2, slow = 16 time units
+    (1/3 slow unless stated);
+  * FAVAS/QuAFL server rounds last wait+interact = 7; clients train
+    concurrently, capped at K local steps since their last reset;
+  * FedAvg rounds last interact + K * (slowest selected client's step time);
+  * FedBuff rounds complete when Z client updates arrive (fast clients feed
+    the buffer — the bias FAVAS removes);
+  * AsyncSGD applies every arriving single-gradient update immediately.
+
+This level is the *paper-experiment* engine (small models, CPU); the
+distributed production trainer for the assigned architectures lives in
+``repro.core.favas`` + ``repro.launch.train``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import heapq
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.classifier import mlp_init, mlp_apply, classifier_loss, accuracy
+from repro.core.quant import quantize_tree
+from repro.utils.tree import tree_map
+
+SERVER_WAIT = 4.0
+SERVER_INTERACT = 3.0
+
+
+@dataclasses.dataclass
+class SimConfig:
+    method: str = "favas"            # favas|quafl|fedbuff|fedavg|asyncsgd
+    n_clients: int = 30
+    s_selected: int = 6
+    K: int = 10
+    buffer_z: int = 5                # FedBuff
+    eta: float = 0.2
+    server_eta: float = 1.0          # FedBuff global LR
+    total_time: float = 2000.0
+    eval_every: float = 100.0
+    batch_size: int = 64
+    fast_step_time: float = 2.0
+    slow_step_time: float = 16.0
+    slow_fraction: float = 1.0 / 3.0
+    reweight: str = "stochastic"
+    quant_bits: int = 0              # FAVAS[QNN]
+    permute_speeds: bool = True      # False: clients [0, n_slow) are the slow
+    #                                  ones (for speed/data-correlated setups)
+    seed: int = 0
+
+
+def _step_times(cfg: SimConfig, rng) -> np.ndarray:
+    n_slow = int(round(cfg.slow_fraction * cfg.n_clients))
+    t = np.full(cfg.n_clients, cfg.fast_step_time)
+    t[:n_slow] = cfg.slow_step_time
+    return rng.permutation(t) if cfg.permute_speeds else t
+
+
+def _local_sgd_batched(loss_fn, eta, R):
+    """vmapped masked local SGD: params (n,...), data (n,R,B,...), steps (n,)."""
+    def one(params, xs, ys, n_steps):
+        def step(p, inp):
+            k, x, y = inp
+            g = jax.grad(loss_fn)(p, x, y)
+            live = (k < n_steps).astype(jnp.float32)
+            return tree_map(lambda pp, gg: pp - eta * live * gg, p, g), None
+        p, _ = jax.lax.scan(step, params, (jnp.arange(R), xs, ys))
+        return p
+    return jax.jit(jax.vmap(one))
+
+
+def _local_sgd_single(loss_fn, eta):
+    def run(params, xs, ys):
+        def step(p, inp):
+            x, y = inp
+            g = jax.grad(loss_fn)(p, x, y)
+            return tree_map(lambda pp, gg: pp - eta * gg, p, g), None
+        p, _ = jax.lax.scan(step, params, (xs, ys))
+        return p
+    return jax.jit(run)
+
+
+def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
+    """data = (x_train, y_train, x_test, y_test, parts). Returns curves."""
+    xtr, ytr, xte, yte, parts = data
+    n_classes = int(ytr.max()) + 1
+    d_in = xtr.shape[1]
+    rng = np.random.default_rng(cfg.seed)
+    key = jax.random.PRNGKey(cfg.seed)
+
+    loss_fn = functools.partial(classifier_loss, apply_fn=mlp_apply,
+                                n_classes=n_classes)
+    loss_fn = lambda p, x, y: classifier_loss(p, mlp_apply, x, y, n_classes)
+    server = mlp_init(key, d_in, d_hidden, n_classes)
+    n = cfg.n_clients
+    clients = tree_map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(),
+                       server)
+    inits = clients
+    step_time = _step_times(cfg, rng)
+
+    from repro.data.pipeline import FederatedBatcher
+    batcher = FederatedBatcher(xtr, ytr, parts, cfg.batch_size, cfg.seed)
+
+    eval_fn = jax.jit(lambda p: accuracy(p, mlp_apply, xte, yte))
+    var_fn = jax.jit(lambda W, w: sum(jax.tree_util.tree_leaves(tree_map(
+        lambda a, b: jnp.sum((a - b[None]) ** 2), W, w))))
+
+    times, accs, variances, server_steps = [], [], [], []
+    t_now, next_eval, srv_step = 0.0, 0.0, 0
+
+    def record():
+        times.append(t_now)
+        accs.append(float(eval_fn(server)))
+        variances.append(float(var_fn(clients, server)))
+        server_steps.append(srv_step)
+
+    if cfg.method in ("favas", "quafl"):
+        round_dur = SERVER_WAIT + SERVER_INTERACT
+        R = int(np.ceil(round_dur / step_time.min()))
+        sgd = _local_sgd_batched(loss_fn, cfg.eta, R)
+        q = np.zeros(n)                   # steps since reset (cap K)
+        credit = np.zeros(n)              # fractional time credit
+        qkey = key
+        while t_now < cfg.total_time:
+            if t_now >= next_eval:
+                record(); next_eval += cfg.eval_every
+            # concurrent local compute during this round
+            credit += round_dur
+            avail = np.floor(credit / step_time)
+            credit -= avail * step_time
+            do = np.minimum(avail, cfg.K - q)
+            xs, ys = batcher.round_batch(R)
+            clients = sgd(clients, jnp.asarray(xs), jnp.asarray(ys),
+                          jnp.asarray(do, jnp.int32))
+            q = q + do
+            # server poll
+            sel = rng.choice(n, cfg.s_selected, replace=False)
+            mask = np.zeros(n); mask[sel] = 1.0
+            mj = jnp.asarray(mask)
+            if cfg.method == "favas":
+                if cfg.reweight == "deterministic":
+                    alpha_np = np.maximum(_det_alpha(cfg, step_time, round_dur), 1e-6)
+                elif cfg.reweight == "none":
+                    alpha_np = np.ones(n)        # ablation: biased (no eq. 3)
+                else:
+                    alpha_np = np.maximum(q, 1.0)
+                alpha = jnp.asarray(alpha_np, jnp.float32)
+                prog = tree_map(jnp.subtract, clients, inits)
+                if cfg.quant_bits > 0:
+                    qkey, sub = jax.random.split(qkey)
+                    prog = quantize_tree(prog, cfg.quant_bits, sub)
+                msgs = tree_map(
+                    lambda i_, p_: i_ + p_ / alpha.reshape((n,) + (1,) * (p_.ndim - 1)),
+                    inits, prog)
+                server = tree_map(
+                    lambda w, M: (w + jnp.sum(
+                        mj.reshape((n,) + (1,) * (M.ndim - 1)) * M, 0))
+                    / (cfg.s_selected + 1.0), server, msgs)
+                # reset selected
+                clients = tree_map(
+                    lambda W, w: jnp.where(
+                        mj.reshape((n,) + (1,) * (W.ndim - 1)) > 0, w[None], W),
+                    clients, server)
+                inits = tree_map(
+                    lambda I, w: jnp.where(
+                        mj.reshape((n,) + (1,) * (I.ndim - 1)) > 0, w[None], I),
+                    inits, server)
+                q[sel] = 0.0
+            else:  # QuAFL (Zakerinia et al. 2022): convex combos, no reweight
+                server_new = tree_map(
+                    lambda w, W: (w + jnp.sum(
+                        mj.reshape((n,) + (1,) * (W.ndim - 1)) * W, 0))
+                    / (cfg.s_selected + 1.0), server, clients)
+                clients = tree_map(
+                    lambda W, w: jnp.where(
+                        mj.reshape((n,) + (1,) * (W.ndim - 1)) > 0,
+                        (w[None] + cfg.s_selected * W) / (cfg.s_selected + 1.0), W),
+                    clients, server_new)
+                server = server_new
+                q[sel] = 0.0
+            t_now += round_dur
+            srv_step += 1
+
+    elif cfg.method == "fedavg":
+        sgd = _local_sgd_single(loss_fn, cfg.eta)
+        while t_now < cfg.total_time:
+            if t_now >= next_eval:
+                record(); next_eval += cfg.eval_every
+            sel = rng.choice(n, cfg.s_selected, replace=False)
+            newp = []
+            for i in sel:
+                xs, ys = zip(*[batcher.client_batch(i) for _ in range(cfg.K)])
+                newp.append(sgd(server, jnp.asarray(np.stack(xs)),
+                                jnp.asarray(np.stack(ys))))
+            server = tree_map(lambda *ps: sum(ps) / len(ps), *newp)
+            t_now += SERVER_INTERACT + cfg.K * step_time[sel].max()
+            srv_step += 1
+
+    elif cfg.method == "fedbuff":
+        sgd = _local_sgd_single(loss_fn, cfg.eta)
+        # event queue: (finish_time, client); each job = K local steps
+        heap = [(cfg.K * step_time[i] * (1 + 0.01 * rng.random()), i)
+                for i in range(n)]
+        heapq.heapify(heap)
+        client_base = [server] * n
+        buffer: List = []
+        while t_now < cfg.total_time and heap:
+            if t_now >= next_eval:
+                record(); next_eval += cfg.eval_every
+            t_done, i = heapq.heappop(heap)
+            t_now = t_done
+            xs, ys = zip(*[batcher.client_batch(i) for _ in range(cfg.K)])
+            trained = sgd(client_base[i], jnp.asarray(np.stack(xs)),
+                          jnp.asarray(np.stack(ys)))
+            delta = tree_map(jnp.subtract, client_base[i], trained)  # = eta*sum g
+            buffer.append(delta)
+            if len(buffer) >= cfg.buffer_z:
+                mean_d = tree_map(lambda *ds: sum(ds) / len(ds), *buffer)
+                server = tree_map(lambda w, d: w - cfg.server_eta * d,
+                                  server, mean_d)
+                buffer = []
+                srv_step += 1
+                t_now += SERVER_INTERACT
+            client_base[i] = server
+            heapq.heappush(heap, (t_now + cfg.K * step_time[i], i))
+
+    elif cfg.method == "asyncsgd":
+        grad_fn = jax.jit(jax.grad(loss_fn))
+        heap = [(step_time[i] * (1 + 0.01 * rng.random()), i) for i in range(n)]
+        heapq.heapify(heap)
+        client_model = [server] * n
+        while t_now < cfg.total_time and heap:
+            if t_now >= next_eval:
+                record(); next_eval += cfg.eval_every
+            t_done, i = heapq.heappop(heap)
+            t_now = t_done
+            x, y = batcher.client_batch(i)
+            g = grad_fn(client_model[i], jnp.asarray(x), jnp.asarray(y))
+            server = tree_map(lambda w, gg: w - cfg.eta * gg, server, g)
+            client_model[i] = server
+            heapq.heappush(heap, (t_now + step_time[i], i))
+            srv_step += 1
+    else:
+        raise ValueError(cfg.method)
+
+    record()
+    return {"times": np.array(times), "accuracy": np.array(accs),
+            "variance": np.array(variances),
+            "server_steps": np.array(server_steps),
+            "final_accuracy": accs[-1], "method": cfg.method,
+            "server": server}
+
+
+def _det_alpha(cfg: SimConfig, step_time: np.ndarray, round_dur: float):
+    """Deterministic alpha = E[E ∧ K]: with deterministic step times and
+    poll probability s/n per round, computed by the sampler's DP using the
+    per-round step rate."""
+    from repro.core.sampler import moments_at_poll
+    out = np.empty(cfg.n_clients, np.float32)
+    poll_p = cfg.s_selected / cfg.n_clients
+    cache = {}
+    for i, st in enumerate(step_time):
+        lam = min(max(st / round_dur, 1e-3), 0.999)  # approx 1/steps-per-round
+        if lam not in cache:
+            cache[lam] = moments_at_poll(lam, cfg.K, poll_p)[1]
+        out[i] = cache[lam]
+    return out

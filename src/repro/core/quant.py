@@ -1,0 +1,57 @@
+"""LUQ — Logarithmic Unbiased Quantization (Chmiel et al., 2021), as used by
+FAVAS[QNN] (paper Remark 1 / Remark 6 / Fig. 7).
+
+Grid: sign * scale * 2^{-j}, j in {0 .. L-1}, L = 2^(bits-1) - 1 exponent
+levels, plus 0. Two unbiasedness mechanisms:
+  * values below the smallest level are *stochastically pruned*: kept at the
+    smallest level with probability value/min_level (E[q] = value);
+  * mantissas are *stochastically rounded* in log2 domain:
+    round exponent up with prob (m/2^floor(log2 m) - 1), so E[2^e_hat] = m.
+
+The paper's Remark 5 only needs ||Q(x) - x||^2 <= r_d; LUQ additionally
+gives E[Q(x)] = x, which our property tests check.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def luq_quantize(x, bits: int, key):
+    """Unbiased log quantization of ``x``. Returns dequantized values
+    (same shape/dtype) — simulation of low-precision comms/training."""
+    if bits <= 1:
+        raise ValueError("LUQ needs >= 2 bits (sign + >=1 exponent bit)")
+    levels = 2 ** (bits - 1) - 1                    # exponent levels
+    xf = x.astype(jnp.float32)
+    sign = jnp.sign(xf)
+    mag = jnp.abs(xf)
+    scale = jnp.max(mag)
+    scale = jnp.where(scale > 0, scale, 1.0)
+    m = mag / scale                                  # in [0, 1]
+    min_level = 2.0 ** (-(levels - 1))
+
+    k_prune, k_round = jax.random.split(key)
+    u_prune = jax.random.uniform(k_prune, x.shape)
+    u_round = jax.random.uniform(k_round, x.shape)
+
+    # stochastic pruning of the underflow region (unbiased)
+    below = m < min_level
+    keep = u_prune < (m / min_level)
+    m_pruned = jnp.where(below, jnp.where(keep, min_level, 0.0), m)
+
+    # log-domain stochastic rounding (unbiased): m = 2^e * f, f in [1,2)
+    e = jnp.floor(jnp.log2(jnp.maximum(m_pruned, min_level)))
+    f = m_pruned / jnp.exp2(e)
+    e_hat = e + (u_round < (f - 1.0)).astype(jnp.float32)
+    q = jnp.where(m_pruned == 0.0, 0.0, jnp.exp2(jnp.clip(e_hat, -(levels - 1), 0.0)))
+    return (sign * scale * q).astype(x.dtype)
+
+
+def quantize_tree(tree, bits: int, key):
+    """LUQ-quantize every floating leaf with independent keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = [luq_quantize(l, bits, k) if jnp.issubdtype(l.dtype, jnp.floating) else l
+           for l, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,40 @@
+"""FAVAS unbiased straggler reweighting — paper eq. (3) and Lemma 10.
+
+The client message is  w_unbiased^i = w_init^i + (w^i - w_init^i) / alpha^i,
+with two admissible alphas:
+  * "stochastic":     alpha^i = P(E^i > 0) * (E^i ∧ K)   (uses realized steps)
+  * "deterministic":  alpha^i = E[E^i ∧ K]               (analytic moment)
+Both make the expected submitted progress equal one full local pass
+(Lemma 10: M1, M2 unbiased), removing the fast-client bias.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampler import moments_at_poll
+
+
+def alpha_stochastic(q_steps, p_pos) -> jnp.ndarray:
+    """alpha^i = P(E>0) * (E ∧ K); ``q_steps`` already capped at K.
+    With shifted-geometric increments P(E>0) = 1."""
+    return jnp.maximum(q_steps.astype(jnp.float32), 1e-6) * p_pos
+
+
+def alpha_deterministic(lambdas: np.ndarray, K: int, poll_prob: float) -> np.ndarray:
+    """alpha^i = E[E^i ∧ K] for each client (numpy, computed once offline)."""
+    out = np.empty(lambdas.shape[0], np.float32)
+    cache = {}
+    for i, lam in enumerate(lambdas):
+        lam_f = float(lam)
+        if lam_f not in cache:
+            cache[lam_f] = moments_at_poll(lam_f, K, poll_prob)[1]
+        out[i] = cache[lam_f]
+    return out
+
+
+def unbiased_message_leaf(w_init, w, alpha):
+    """One pytree leaf of the client message; ``alpha`` broadcasts over the
+    leading client axis."""
+    a = alpha.reshape((alpha.shape[0],) + (1,) * (w.ndim - 1))
+    return w_init + (w - w_init) / a

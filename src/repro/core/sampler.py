@@ -1,0 +1,93 @@
+"""Client heterogeneity and selection sampling (paper App. C.2).
+
+* Per-round local-step increments d_t^i ~ shifted-Geometric(lambda_i)
+  (support {1, 2, ...}, mean 1/lambda_i). Fast clients: lambda = 1/16
+  (≈16 steps/round); slow: lambda = 1/2 (≈2 steps/round). The paper's text
+  labels these by "running time"; we parameterize by steps-per-round so fast
+  clients make more progress, which is the behaviour its experiments need.
+* Server selection S_t: s of n uniformly without replacement, drawn in-jit
+  via Gumbel top-s (exact uniform w/o replacement).
+
+Everything is drawn inside the jitted round from explicit PRNG keys.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def make_lambdas(n: int, slow_fraction: float = 1.0 / 3.0,
+                 lam_fast: float = 1.0 / 16.0, lam_slow: float = 0.5,
+                 seed: int = 0) -> np.ndarray:
+    """Per-client geometric parameters; first ``slow_fraction`` are slow
+    (assignment randomized by seed)."""
+    rng = np.random.default_rng(seed)
+    lam = np.where(np.arange(n) < int(round(slow_fraction * n)), lam_slow, lam_fast)
+    return rng.permutation(lam).astype(np.float32)
+
+
+def sample_increments(key, lambdas) -> jnp.ndarray:
+    """d_i ~ 1 + Geom0(lambda_i): support {1,2,...}, E[d] = 1/lambda."""
+    u = jax.random.uniform(key, lambdas.shape, minval=1e-7, maxval=1.0)
+    d = 1 + jnp.floor(jnp.log(u) / jnp.log1p(-lambdas)).astype(jnp.int32)
+    return jnp.maximum(d, 1)
+
+
+def sample_selection(key, n: int, s: int) -> jnp.ndarray:
+    """Uniform s-of-n without replacement -> float mask (n,) with sum s."""
+    z = jax.random.gumbel(key, (n,))
+    _, idx = jax.lax.top_k(z, s)
+    return jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+
+
+# ---------------------------------------------------------------------------
+# Analytic moments of E ∧ K (E = steps between consecutive polls)
+# ---------------------------------------------------------------------------
+
+def poll_steps_distribution(lam: float, K: int, poll_prob: float,
+                            max_rounds: int = 2000) -> np.ndarray:
+    """Exact (to truncation) pmf of q_poll = min(K, sum_{j<=M} d_j) where
+    d_j ~ shifted-Geom(lam) per round and M ~ Geom(poll_prob) rounds between
+    polls. Used for the deterministic reweight alpha = E[E ∧ K] and the
+    Theorem-3 constants. Dynamic program over capped step counts."""
+    # pmf of one round's increment, capped at K
+    j = np.arange(1, K + 1)
+    inc = lam * (1.0 - lam) ** (j - 1)
+    inc[-1] = (1.0 - lam) ** (K - 1)          # P(d >= K) mass into cap
+    # state pmf over {0..K} steps accumulated (capped)
+    state = np.zeros(K + 1)
+    state[0] = 1.0
+    out = np.zeros(K + 1)
+    survive = 1.0
+    for _ in range(max_rounds):
+        # advance one round of local compute
+        new = np.zeros(K + 1)
+        for q in range(K + 1):
+            if state[q] <= 0:
+                continue
+            if q == K:
+                new[K] += state[q]
+                continue
+            add = np.minimum(q + j, K)
+            np.add.at(new, add, state[q] * inc)
+        state = new
+        # poll happens after this round w.p. poll_prob: P(M=m) = (1-p)^{m-1} p
+        out += poll_prob * survive * state
+        survive *= (1.0 - poll_prob)
+        if survive < 1e-9:
+            break
+    out /= max(out.sum(), 1e-12)
+    return out
+
+
+def moments_at_poll(lam: float, K: int, poll_prob: float):
+    """(P(E>0), E[E∧K], E[(E∧K)^2], E[1(E>0)/(E∧K)]) for the poll-interval
+    step count. With shifted-geometric increments E >= 1 a.s."""
+    pmf = poll_steps_distribution(lam, K, poll_prob)
+    q = np.arange(K + 1)
+    p_pos = pmf[1:].sum()
+    e1 = float((pmf * q).sum())
+    e2 = float((pmf * q * q).sum())
+    einv = float((pmf[1:] / q[1:]).sum())
+    return float(p_pos), e1, e2, einv

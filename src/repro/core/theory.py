@@ -1,0 +1,123 @@
+"""Table-1 calculator: units-of-time to reach epsilon accuracy for
+FedAvg / FedBuff / AsyncSGD / QuAFL / FAVAS, with the paper's constants.
+
+For FAVAS the client-speed statistics (a^i, b) of Theorem 3 are computed
+from the speed distribution via ``sampler.moments_at_poll``:
+  stochastic alpha:    a^i = (1/P(E>0)) (P(E>0)/K^2 + E[1(E>0)/(E∧K)]),
+                       b   = max_i 1/P(E>0)
+  deterministic alpha: a^i = 1/E[E∧K] + E[(E∧K)^2]/(K^2 E[E∧K]),
+                       b   = max_i E[(E∧K)^2]/E[E∧K]
+Per-method C_ constants are the expected time between consecutive server
+steps under the App. C.2 time model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import numpy as np
+
+from repro.core.sampler import moments_at_poll
+
+SERVER_WAIT, SERVER_INTERACT = 4.0, 3.0
+
+
+@dataclasses.dataclass
+class TheoryParams:
+    n: int = 100
+    s: int = 20
+    K: int = 20
+    buffer_z: int = 10
+    L: float = 1.0            # smoothness
+    sigma2: float = 1.0       # A3 gradient variance
+    G2: float = 1.0           # A4 dissimilarity
+    B2: float = 1.0
+    F: float = 1.0            # f(w0) - f*
+    eps: float = 1e-2
+    fast_step_time: float = 2.0
+    slow_step_time: float = 16.0
+    slow_fraction: float = 1.0 / 3.0
+    reweight: str = "stochastic"
+
+
+def favas_speed_constants(p: TheoryParams):
+    """(mean_a, b) of Theorem 3 over the client population."""
+    round_dur = SERVER_WAIT + SERVER_INTERACT
+    poll_p = p.s / p.n
+    a_vals, b_vals = [], []
+    for st, frac in ((p.fast_step_time, 1 - p.slow_fraction),
+                     (p.slow_step_time, p.slow_fraction)):
+        lam = min(max(st / round_dur, 1e-3), 0.999)   # ~ 1/steps-per-round
+        p_pos, e1, e2, einv = moments_at_poll(lam, p.K, poll_p)
+        if p.reweight == "stochastic":
+            a = (1.0 / max(p_pos, 1e-9)) * (p_pos / p.K ** 2 + einv)
+            b = 1.0 / max(p_pos, 1e-9)
+        else:
+            a = 1.0 / max(e1, 1e-9) + e2 / (p.K ** 2 * max(e1, 1e-9))
+            b = e2 / max(e1, 1e-9)
+        a_vals.append((a, frac))
+        b_vals.append(b)
+    mean_a = sum(a * f for a, f in a_vals)
+    return mean_a, max(b_vals)
+
+
+def _time_constants(p: TheoryParams) -> Dict[str, float]:
+    """Expected time between consecutive server steps per method (C_)."""
+    exp_max_slow = 1 - (1 - p.slow_fraction) ** p.s     # P(round has a slow client)
+    fedavg_round = SERVER_INTERACT + p.K * (
+        exp_max_slow * p.slow_step_time + (1 - exp_max_slow) * p.fast_step_time)
+    # FedBuff: Z updates; arrival rate = sum_i 1/(K tau_i)
+    rate = (p.n * (1 - p.slow_fraction) / (p.K * p.fast_step_time)
+            + p.n * p.slow_fraction / (p.K * p.slow_step_time))
+    fedbuff_round = SERVER_INTERACT + p.buffer_z / rate
+    async_rate = (p.n * (1 - p.slow_fraction) / p.fast_step_time
+                  + p.n * p.slow_fraction / p.slow_step_time)
+    return {
+        "FedAvg": fedavg_round,
+        "FedBuff": fedbuff_round,
+        "AsyncSGD": 1.0 / async_rate,
+        "QuAFL": SERVER_WAIT + SERVER_INTERACT,
+        "FAVAS": SERVER_WAIT + SERVER_INTERACT,
+    }
+
+
+def tau_max_estimate(p: TheoryParams) -> float:
+    """Delay bound entering FedBuff/AsyncSGD analyses: ratio of slowest to
+    fastest update production (the paper's 1 vs 1000 workers discussion)."""
+    return p.slow_step_time / p.fast_step_time * p.n
+
+
+def units_of_time(p: TheoryParams) -> Dict[str, float]:
+    """Evaluate every row of Table 1 (constants dropped, as in the paper)."""
+    L, s2, G2, B2, F, K, n, s, eps = (p.L, p.sigma2, p.G2, p.B2, p.F, p.K,
+                                      p.n, p.s, p.eps)
+    C = _time_constants(p)
+    tmax = tau_max_estimate(p)
+    tavg = tmax / 4.0
+    E_mean = (1 - p.slow_fraction) * min(K, (SERVER_WAIT + SERVER_INTERACT)
+                                         / p.fast_step_time * n / s) \
+        + p.slow_fraction * min(K, (SERVER_WAIT + SERVER_INTERACT)
+                                / p.slow_step_time * n / s)
+    a_mean, b = favas_speed_constants(p)
+
+    T = {}
+    T["FedAvg"] = ((F * L * s2 + (1 - s / n) * K * G2) / (s * K) * eps ** -2
+                   + F * L ** 0.5 * G2 ** 0.5 * eps ** -1.5
+                   + L * F * B2 / eps) * C["FedAvg"]
+    T["FedBuff"] = (F * L * (s2 + G2) * eps ** -2
+                    + F * L * ((tmax ** 2 / s ** 2 + 1) * (s2 + n * G2)) ** 0.5
+                    * eps ** -1.5 + F * L / eps) * C["FedBuff"]
+    T["AsyncSGD"] = (F * L * (3 * s2 + 4 * G2) * eps ** -2
+                     + F * L * G2 ** 0.5 * (s * tavg) ** 0.5 * eps ** -1.5
+                     + (s * tmax * F) ** 0.5 / eps) * C["AsyncSGD"]
+    T["QuAFL"] = (F * L * K * (s2 + 2 * K * G2) / E_mean ** 2 * eps ** -2
+                  + n ** 1.5 / (E_mean * (E_mean * s) ** 0.5) * F * K * L
+                  * (s2 + 2 * K * G2) ** 0.5 * eps ** -1.5
+                  + n ** 1.5 / (E_mean * s ** 0.5) * F * B2 ** 0.5 * K ** 2 * L
+                  / eps) * C["QuAFL"]
+    T["FAVAS"] = (F * L * (s2 * a_mean + 8 * G2 * b) * eps ** -2
+                  + (n / s) * F * L ** 2 * (K ** 2 * s2 + L ** 2 * K ** 2 * G2
+                                            + s ** 2 * s2 * a_mean
+                                            + s ** 2 * G2 * b) ** 0.5 * eps ** -1.5
+                  + n * F * B2 * K * L * b / eps) * C["FAVAS"]
+    return T

@@ -1,0 +1,3 @@
+from repro.data.synthetic import make_classification, make_lm_corpus
+from repro.data.partition import partition_iid, partition_label_skew
+from repro.data.pipeline import FederatedBatcher, lm_round_batch

@@ -1,0 +1,39 @@
+"""Federated partitioners. ``partition_label_skew`` reproduces the paper's
+non-IID split: "each client takes two classes (out of the ten possible)
+without replacement" (Sec. 5)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def partition_iid(n_samples: int, n_clients: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    idx = rng.permutation(n_samples)
+    return np.array_split(idx, n_clients)
+
+
+def partition_label_skew(labels: np.ndarray, n_clients: int,
+                         classes_per_client: int = 2, seed: int = 0):
+    """Each client draws ``classes_per_client`` classes; samples of each class
+    are split evenly among the clients holding it."""
+    rng = np.random.default_rng(seed)
+    C = int(labels.max()) + 1
+    # assign classes to clients, cycling so every class is covered
+    class_choices = []
+    deck = []
+    for i in range(n_clients):
+        if len(deck) < classes_per_client:
+            deck = list(rng.permutation(C))
+        class_choices.append([deck.pop() for _ in range(classes_per_client)])
+    holders = {c: [] for c in range(C)}
+    for i, cs in enumerate(class_choices):
+        for c in cs:
+            holders[c].append(i)
+    parts = [[] for _ in range(n_clients)]
+    for c in range(C):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        who = holders[c] or [int(rng.integers(0, n_clients))]
+        for j, chunk in enumerate(np.array_split(idx, len(who))):
+            parts[who[j]].extend(chunk.tolist())
+    return [np.array(sorted(p), dtype=np.int64) for p in parts]

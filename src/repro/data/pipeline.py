@@ -1,0 +1,52 @@
+"""Batch pipelines.
+
+* ``FederatedBatcher`` — per-client minibatch streams for the FL simulator
+  and the distributed trainer: each call yields a (n_clients, R, B, ...)
+  stack (one microbatch per client per potential local step).
+* ``lm_round_batch`` — token batches for the assigned-architecture trainer:
+  clients are mapped to corpus domains (non-IID domain skew).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class FederatedBatcher:
+    def __init__(self, x, y, parts, batch_size: int, seed: int = 0):
+        self.x, self.y = x, y
+        self.parts = parts
+        self.B = batch_size
+        self.rng = np.random.default_rng(seed)
+
+    def client_batch(self, i: int):
+        idx = self.parts[i]
+        take = self.rng.choice(idx, self.B, replace=len(idx) < self.B)
+        return self.x[take], self.y[take]
+
+    def round_batch(self, n_steps: int):
+        """(n, R, B, d) x, (n, R, B) y for one server round."""
+        n = len(self.parts)
+        xs = np.empty((n, n_steps, self.B) + self.x.shape[1:], self.x.dtype)
+        ys = np.empty((n, n_steps, self.B), self.y.dtype)
+        for i in range(n):
+            for k in range(n_steps):
+                xs[i, k], ys[i, k] = self.client_batch(i)
+        return xs, ys
+
+
+def lm_round_batch(tokens: np.ndarray, domains: np.ndarray, n_clients: int,
+                   n_steps: int, batch: int, seq: int, rng: np.random.Generator):
+    """(n, R, B, S) int32 token batch; client i samples from domain
+    i % n_domains (domain-skew non-IID)."""
+    n_domains = int(domains.max()) + 1
+    out = np.empty((n_clients, n_steps, batch, seq), np.int32)
+    dom_index = [np.where(domains == d)[0] for d in range(n_domains)]
+    for i in range(n_clients):
+        pool = dom_index[i % n_domains]
+        lo, hi = pool.min(), pool.max() - seq - 1
+        starts = rng.integers(lo, max(hi, lo + 1), (n_steps, batch))
+        for k in range(n_steps):
+            for b in range(batch):
+                s = int(starts[k, b])
+                out[i, k, b] = tokens[s:s + seq]
+    return out

@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the paper's memory-bound hot spots:
+#   favas_agg — fused masked reweighted client aggregation (Alg. 1 line 10 + eq. 3)
+#   luq       — LUQ logarithmic unbiased quantization (FAVAS[QNN], Remark 1)
+# ops.py = jit wrappers (kernel on TPU, interpret=True on CPU);
+# ref.py = pure-jnp oracles; tests sweep shapes/dtypes with assert_allclose.
+from repro.kernels.ops import favas_aggregate_flat, favas_aggregate_tree, luq_quantize

@@ -1,0 +1,76 @@
+"""Pallas TPU kernel: LUQ logarithmic unbiased quantization (FAVAS[QNN],
+paper Remark 1 / Chmiel et al. 2021).
+
+Fuses threshold + stochastic prune + log2 + stochastic exponent rounding +
+dequant in one VMEM pass over (8*R, 128*C)-aligned tiles. The global scale
+(max |x|) is a cheap separate reduction; the uniform random fields are
+passed in as inputs so CPU interpret-mode tests are bit-identical to the
+jnp oracle (a production TPU build would draw them on-chip with
+``pltpu.prng_random_bits`` — noted in DESIGN.md §7).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, COLS = 256, 1024  # (sublane, lane) tile — multiples of (8, 128)
+
+
+def _luq_kernel(x_ref, up_ref, ur_ref, scale_ref, out_ref, *, levels: int):
+    x = x_ref[...].astype(jnp.float32)
+    up = up_ref[...].astype(jnp.float32)
+    ur = ur_ref[...].astype(jnp.float32)
+    scale = scale_ref[0, 0].astype(jnp.float32)
+    scale = jnp.where(scale > 0, scale, 1.0)
+    sign = jnp.sign(x)
+    m = jnp.abs(x) / scale
+    min_level = 2.0 ** (-(levels - 1))
+    below = m < min_level
+    keep = up < (m / min_level)
+    m_pruned = jnp.where(below, jnp.where(keep, min_level, 0.0), m)
+    e = jnp.floor(jnp.log2(jnp.maximum(m_pruned, min_level)))
+    f = m_pruned / jnp.exp2(e)
+    e_hat = e + (ur < (f - 1.0)).astype(jnp.float32)
+    q = jnp.where(m_pruned == 0.0, 0.0,
+                  jnp.exp2(jnp.clip(e_hat, -(levels - 1), 0.0)))
+    out_ref[...] = (sign * scale * q).astype(out_ref.dtype)
+
+
+def luq_pallas(x, u_prune, u_round, bits: int, *, interpret: bool = True):
+    """Elementwise over any shape; flattened to (R, COLS) tiles."""
+    levels = 2 ** (bits - 1) - 1
+    orig_shape, dtype = x.shape, x.dtype
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32))).reshape(1, 1)
+    flat = x.reshape(-1)
+    D = flat.shape[0]
+    width = ROWS * COLS
+    pad = (-D) % width
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+        u_prune = jnp.pad(u_prune.reshape(-1), (0, pad))
+        u_round = jnp.pad(u_round.reshape(-1), (0, pad))
+    else:
+        u_prune = u_prune.reshape(-1)
+        u_round = u_round.reshape(-1)
+    rows = flat.shape[0] // COLS
+    x2 = flat.reshape(rows, COLS)
+    up2 = u_prune.reshape(rows, COLS)
+    ur2 = u_round.reshape(rows, COLS)
+    grid = (rows // ROWS,)
+    out = pl.pallas_call(
+        functools.partial(_luq_kernel, levels=levels),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROWS, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, COLS), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, COLS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, COLS), dtype),
+        interpret=interpret,
+    )(x2, up2, ur2, scale)
+    return out.reshape(-1)[:D].reshape(orig_shape)

@@ -1,0 +1,53 @@
+"""Jit'd public wrappers over the Pallas kernels, with automatic fallback:
+the kernels run natively on TPU and in interpret mode on CPU; ``use_kernel=
+False`` selects the pure-jnp oracle path (used by the default pjit trainer,
+where XLA fusion already handles the arithmetic — the kernel path is the
+single-host / kernel-benchmark configuration).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.favas_agg import favas_agg_pallas
+from repro.kernels.luq import luq_pallas
+
+
+def _is_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def favas_aggregate_flat(server, clients, inits, alpha, mask, s: float,
+                         *, use_kernel: bool = True):
+    """Flat-buffer FAVAS aggregation; see kernels/favas_agg.py."""
+    if use_kernel:
+        return favas_agg_pallas(server, clients, inits, alpha, mask, s,
+                                interpret=not _is_tpu())
+    return ref.favas_agg_ref(server, clients, inits, alpha, mask, s)
+
+
+def favas_aggregate_tree(server_tree, clients_tree, inits_tree, alpha, mask,
+                         s: float, *, use_kernel: bool = True):
+    """Leafwise fused aggregation over parameter pytrees (leaves flattened
+    to (n, D) / (D,) buffers)."""
+    def one(w, C, I):
+        D = w.size
+        out = favas_aggregate_flat(w.reshape(-1), C.reshape(C.shape[0], -1),
+                                   I.reshape(I.shape[0], -1), alpha, mask, s,
+                                   use_kernel=use_kernel)
+        return out.reshape(w.shape)
+    return jax.tree_util.tree_map(one, server_tree, clients_tree, inits_tree)
+
+
+def luq_quantize(x, bits: int, key, *, use_kernel: bool = True):
+    """LUQ quantization with explicit PRNG key (kernel or oracle path)."""
+    k1, k2 = jax.random.split(key)
+    up = jax.random.uniform(k1, x.shape)
+    ur = jax.random.uniform(k2, x.shape)
+    if use_kernel:
+        return luq_pallas(x, up, ur, bits, interpret=not _is_tpu())
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return ref.luq_ref(x, up, ur, scale, bits)

@@ -1,0 +1,42 @@
+"""Pure-jnp oracles for the Pallas kernels. Tests assert_allclose the
+kernels (interpret=True on CPU) against these across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def favas_agg_ref(server, clients, inits, alpha, mask, s: float):
+    """Fused FAVAS server aggregation over flattened parameter buffers.
+
+    server: (D,), clients/inits: (n, D), alpha/mask: (n,).
+    out = (server + sum_i mask_i * (init_i + (client_i - init_i)/alpha_i)) / (s+1)
+    """
+    a = alpha[:, None].astype(jnp.float32)
+    m = mask[:, None].astype(jnp.float32)
+    msg = inits.astype(jnp.float32) + (clients.astype(jnp.float32)
+                                       - inits.astype(jnp.float32)) / a
+    total = jnp.sum(m * msg, axis=0)
+    return ((server.astype(jnp.float32) + total) / (s + 1.0)).astype(server.dtype)
+
+
+def luq_ref(x, u_prune, u_round, scale, bits: int):
+    """LUQ log-domain unbiased quantization (see core/quant.py), with the
+    randomness and the global scale passed in (kernel parity)."""
+    levels = 2 ** (bits - 1) - 1
+    xf = x.astype(jnp.float32)
+    sign = jnp.sign(xf)
+    mag = jnp.abs(xf)
+    scale = jnp.where(scale > 0, scale, 1.0).astype(jnp.float32)
+    m = mag / scale
+    min_level = 2.0 ** (-(levels - 1))
+    below = m < min_level
+    keep = u_prune < (m / min_level)
+    m_pruned = jnp.where(below, jnp.where(keep, min_level, 0.0), m)
+    e = jnp.floor(jnp.log2(jnp.maximum(m_pruned, min_level)))
+    f = m_pruned / jnp.exp2(e)
+    e_hat = e + (u_round < (f - 1.0)).astype(jnp.float32)
+    q = jnp.where(m_pruned == 0.0, 0.0,
+                  jnp.exp2(jnp.clip(e_hat, -(levels - 1), 0.0)))
+    return (sign * scale * q).astype(x.dtype)

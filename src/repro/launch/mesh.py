@@ -1,0 +1,31 @@
+"""Production meshes (TPU v5e target).
+
+single pod : (16, 16)      axes ("data", "model")          = 256 chips
+multi pod  : (2, 16, 16)   axes ("pod", "data", "model")   = 512 chips
+
+FAVAS clients live on the ("pod", "data") product axis — one resident client
+per data-parallel coordinate; "model" is tensor parallelism. Defined as a
+FUNCTION so importing this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple:
+    """The mesh axes that carry clients/batch (everything but "model")."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def n_client_slots(mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = 1
+    for a in data_axes(mesh):
+        out *= sizes[a]
+    return out

@@ -1,0 +1,356 @@
+"""Roofline analysis from compiled dry-run artifacts (CPU container — terms
+are *derived*, not timed; TPU v5e is the target).
+
+Terms per (arch, shape, mesh), all in seconds:
+  compute    = FLOPs_per_chip / 197e12          (bf16 peak)
+  memory     = HBM_bytes_per_chip / 819e9
+  collective = collective_bytes_per_chip / 50e9 (per-link ICI)
+
+Sources:
+* collective bytes — parsed from ``compiled.as_text()``; XLA:CPU while loops
+  carry ``backend_config={"known_trip_count":{"n":N}}``, so collectives inside
+  scan bodies are multiplied by their (possibly nested) trip counts. This
+  fixes the body-counted-once problem exactly for comms.
+* ``compiled.cost_analysis()`` flops/bytes are recorded raw but — caveat —
+  XLA's HloCostAnalysis counts while bodies ONCE; for scanned layers/steps
+  the raw number underestimates by ~L*K. The roofline compute/memory terms
+  therefore use the ANALYTIC estimators below (6*N*D etc.), and the raw
+  numbers are kept as a cross-check column.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 / chip, TPU v5e
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->.*\{\s*$")
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*(\w+)\[([\d,]*)\][^ ]*\s+(" + "|".join(COLLECTIVES) + r")\(")
+_WHILE_RE = re.compile(r"while\(.*?body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*\(?\s*(\w+)\[([\d,]*)\]")
+_DOT_RE = re.compile(
+    r"=\s*(\w+)\[([\d,]*)\][^ ]*\s+dot\(\s*%?([\w.\-]+)\s*,")
+_DOT_LHS_CONTR_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_PARAM_RE = re.compile(r"%?([\w.\-]+)\s*:\s*\(?(\w+)\[([\d,]*)\]")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)          # [n_groups, group_size]
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2                                     # conservative default
+
+
+def _wire_factor(kind: str, g: int) -> float:
+    """Per-device ICI wire bytes as a multiple of the op's OUTPUT bytes.
+    S = gathered (full) size: AG out = S, RS out = S/g, AR out = S."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return (g - 1) / g
+    if kind == "reduce-scatter":
+        return float(g - 1)                      # input = g * output
+    if kind == "all-to-all":
+        return (g - 1) / g
+    return 1.0                                   # collective-permute
+
+
+# JAX einsum subscripts whose outputs are compute-dtype (bf16) on TPU.
+# XLA:CPU float-normalizes bf16 dots to f32, so the CPU-compiled HLO shows
+# f32 collectives where the TPU program moves bf16 — collectives whose
+# op_name metadata stems from these einsums are counted at half width.
+BF16_DOT_TAGS = ("...d,df->...f", "ecd,edf->ecf", "ecf,efd->ecd")
+
+
+def parse_hlo_collectives(hlo_text: str, *, bf16_dot_comms: bool = False) -> Dict:
+    """Trip-count-aware collective byte accounting (per-device program).
+
+    Returns {kind: bytes} plus per-kind op counts and the top shapes.
+    ``bf16_dot_comms``: apply the TPU-dtype correction above (set when the
+    model's compute dtype is bf16).
+    """
+    # 1. split into computations: header = "<name> (sig) -> ... {",
+    #    body runs until a lone "}" (HLO computations are flat).
+    comps: Dict[str, List[str]] = {}
+    entry = None
+    cur = None
+    name_re = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if cur is None:
+            if s.endswith("{") and "->" in s:
+                m = name_re.match(s)
+                if m:
+                    cur = m.group(1)
+                    comps[cur] = []
+                    if s.startswith("ENTRY"):
+                        entry = cur
+        else:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+
+    # 2. per-computation collectives, dots, and calls
+    comp_coll: Dict[str, List[Tuple[str, int, float]]] = {}
+    comp_flops: Dict[str, float] = {}
+    comp_calls: Dict[str, List[Tuple[str, int]]] = {}   # (callee, multiplier)
+    for name, lines in comps.items():
+        colls, calls = [], []
+        flops = 0.0
+        # local symbol table: op/param name -> (dtype, dims) for dot operands
+        symtab: Dict[str, Tuple[str, str]] = {}
+        for ln in lines:
+            dm = _DEF_RE.match(ln)
+            if dm:
+                symtab[dm.group(1)] = (dm.group(2), dm.group(3))
+        for ln in lines:
+            cm = _COLL_RE.search(ln)
+            if cm:
+                dtype, dims, kind = cm.groups()
+                out_bytes = _shape_bytes(dtype, dims)
+                if (bf16_dot_comms and dtype == "f32"
+                        and any(t in ln for t in BF16_DOT_TAGS)):
+                    out_bytes //= 2              # bf16 on the TPU target
+                wire = out_bytes * _wire_factor(kind, _group_size(ln))
+                colls.append((kind, out_bytes, wire))
+            dot = _DOT_RE.search(ln)
+            if dot:
+                _, out_dims, lhs_name = dot.groups()
+                out_elems = 1
+                for d in out_dims.split(","):
+                    if d:
+                        out_elems *= int(d)
+                contr = 1
+                lhs = symtab.get(lhs_name)
+                cdm = _DOT_LHS_CONTR_RE.search(ln)
+                if lhs and cdm and cdm.group(1):
+                    lhs_dims = [int(d) for d in lhs[1].split(",") if d]
+                    for ci in cdm.group(1).split(","):
+                        ci = int(ci)
+                        if ci < len(lhs_dims):
+                            contr *= lhs_dims[ci]
+                flops += 2.0 * out_elems * contr
+            if " while(" in ln:
+                wm = _WHILE_RE.search(ln)
+                tm = _TRIP_RE.search(ln)
+                if wm:
+                    calls.append((wm.group(1), int(tm.group(1)) if tm else 1))
+            else:
+                for callee in _CALL_RE.findall(ln):
+                    calls.append((callee, 1))
+        comp_coll[name] = colls
+        comp_calls[name] = calls
+        comp_flops[name] = flops
+
+    # 3. walk from ENTRY with multipliers
+    totals: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    wire_totals: Dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in COLLECTIVES}
+    shapes: Dict[str, float] = {}
+    seen_stack = []
+    dot_flops = [0.0]
+
+    def walk(name: str, mult: float):
+        if name not in comps or name in seen_stack:
+            return
+        seen_stack.append(name)
+        for kind, out_bytes, wire in comp_coll.get(name, ()):
+            totals[kind] += mult * out_bytes
+            wire_totals[kind] += mult * wire
+            counts[kind] += int(mult)
+            key = f"{kind}:{out_bytes}"
+            shapes[key] = shapes.get(key, 0) + mult * wire
+        dot_flops[0] += mult * comp_flops.get(name, 0.0)
+        for callee, m in comp_calls.get(name, ()):
+            walk(callee, mult * m)
+        seen_stack.pop()
+
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    walk(entry, 1.0)
+    top = sorted(shapes.items(), key=lambda kv: -kv[1])[:8]
+    return {"bytes_by_kind": totals, "op_counts": counts,
+            "wire_bytes_by_kind": wire_totals,
+            "total_bytes": sum(wire_totals.values()),
+            "output_bytes": sum(totals.values()),
+            "dot_flops": dot_flops[0],
+            "top_contributors": top}
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOPs / bytes estimators
+# ---------------------------------------------------------------------------
+
+def model_param_counts(cfg) -> Dict[str, int]:
+    """Exact param counts via eval_shape (no allocation)."""
+    import jax
+    import functools
+    from repro.models.model import init_params
+    from repro.utils.tree import tree_param_count
+    key = jax.ShapeDtypeStruct((2,), "uint32")
+    sds = jax.eval_shape(functools.partial(init_params, cfg=cfg), key)
+    total = tree_param_count(sds)
+    embed = tree_param_count(sds["embed"])
+    expert = 0
+    if cfg.arch_type == "moe":
+        def moe_leaves(t):
+            out = 0
+            layers = t["layers"]
+            mlp = layers["mlp"] if isinstance(layers, dict) else None
+            if mlp is not None:
+                for k in ("gate", "up", "down"):
+                    out += mlp[k].size if hasattr(mlp[k], "size") else 0
+            return out
+        expert = moe_leaves(sds)
+    active = total - expert + (expert * cfg.top_k // max(cfg.n_experts, 1)
+                               if expert else 0)
+    return {"total": total, "embed": embed, "expert": expert, "active": active}
+
+
+def analytic_flops(cfg, shape_info: dict, n_chips: int, local_steps: int = 0,
+                   window_override: Optional[int] = None) -> Dict[str, float]:
+    """MODEL_FLOPS per the task spec + attention extras, whole-program."""
+    counts = model_param_counts(cfg)
+    N = counts["active"] if cfg.arch_type == "moe" else counts["total"]
+    S, B = shape_info["seq"], shape_info["global_batch"]
+    kind = shape_info["kind"]
+    hd = cfg.head_dim or 0
+    Hq = cfg.n_heads
+    L_attn = sum(1 for k in cfg.layer_kinds() if k in ("attn", "local_attn"))
+    win = window_override if window_override is not None else cfg.window
+
+    if kind == "train":
+        tokens = B * S * max(local_steps, 1)
+        flops = 6.0 * N * tokens
+        kv_span = min(win, S) if win else S
+        flops += 3 * 2 * 2 * B * max(local_steps, 1) * Hq * hd * S * kv_span \
+            / 2 * L_attn
+    elif kind == "prefill":
+        tokens = B * S
+        flops = 2.0 * N * tokens
+        kv_span = min(win, S) if win else S
+        flops += 2 * 2 * B * Hq * hd * S * kv_span / 2 * L_attn
+    else:  # decode: one token, cache of length S
+        tokens = B
+        flops = 2.0 * N * tokens
+        span = min(win, S) if win else S
+        if cfg.arch_type == "hybrid":
+            span = min(2048, S)
+        flops += 2 * 2 * B * Hq * hd * span * L_attn
+    return {"model_flops": flops, "per_chip": flops / n_chips,
+            "params": counts}
+
+
+def analytic_bytes(cfg, shape_info: dict, n_chips: int, model_shards: int,
+                   local_steps: int = 0, param_bytes: int = 4) -> float:
+    """Dominant HBM traffic per chip: weight traffic (+cache for decode)."""
+    counts = model_param_counts(cfg)
+    N = counts["total"]
+    kind = shape_info["kind"]
+    S, B = shape_info["seq"], shape_info["global_batch"]
+    w_per_chip = N * param_bytes / model_shards
+    if kind == "train":
+        # fwd read + bwd read + grad write + update r/w, per local step,
+        # x3 resident copies touched at aggregation
+        return (4 * w_per_chip * max(local_steps, 1) + 3 * w_per_chip)
+    if kind == "prefill":
+        act = B * S * cfg.d_model * 2 * max(cfg.n_layers, 1) * 4 / n_chips
+        return w_per_chip + act
+    # decode
+    kv_layers = sum(1 for k in cfg.layer_kinds() if k in ("attn", "local_attn"))
+    span = min(cfg.window, S) if cfg.window else S
+    if cfg.arch_type == "hybrid":
+        span = min(2048, S)
+    kv_elt = 1 if cfg.kv_cache_dtype == "int8" else 2
+    cache = B * span * cfg.n_kv_heads * ((cfg.head_dim or 0) * kv_elt
+                                         + (2 if kv_elt == 1 else 0)) \
+        * 2 * kv_layers
+    if cfg.arch_type == "ssm":
+        cache = B * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4 \
+            * cfg.n_layers * 2
+    return w_per_chip * 2 / param_bytes + cache / n_chips  # bf16 weights read
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops: float
+    raw_cost_flops: float
+    raw_cost_bytes: float
+    collective_bytes: float
+    dominant: str
+    useful_ratio: float
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},{self.compute_s:.3e},"
+                f"{self.memory_s:.3e},{self.collective_s:.3e},{self.dominant},"
+                f"{self.model_flops:.3e},{self.useful_ratio:.3f}")
+
+
+def build_report(arch: str, shape_name: str, mesh_name: str, cfg, shape_info,
+                 n_chips: int, model_shards: int, cost: dict, coll: dict,
+                 local_steps: int = 0, param_bytes: int = 4) -> RooflineReport:
+    fl = analytic_flops(cfg, shape_info, n_chips, local_steps)
+    by = analytic_bytes(cfg, shape_info, n_chips, model_shards, local_steps,
+                        param_bytes)
+    # compute term: prefer the trip-adjusted per-device dot FLOPs parsed from
+    # the compiled HLO (counts remat recompute!); analytic as floor/fallback.
+    hlo_flops_chip = float(coll.get("dot_flops", 0.0) or 0.0)
+    compute_s = max(hlo_flops_chip, fl["per_chip"]) / PEAK_FLOPS
+    memory_s = by / HBM_BW
+    coll_s = coll["total_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    raw_flops = float(cost.get("flops", 0.0) or 0.0)
+    useful = fl["model_flops"] / max(hlo_flops_chip * n_chips, 1.0)
+    return RooflineReport(
+        arch=arch, shape=shape_name, mesh=mesh_name, n_chips=n_chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        model_flops=fl["model_flops"], raw_cost_flops=raw_flops,
+        raw_cost_bytes=float(cost.get("bytes accessed", 0.0) or 0.0),
+        collective_bytes=coll["total_bytes"], dominant=dominant,
+        useful_ratio=min(useful, 1e6),
+    )

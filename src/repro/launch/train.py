@@ -1,0 +1,112 @@
+"""End-to-end FAVAS trainer CLI.
+
+Runs on whatever devices exist: a 1-device CPU box (reduced configs, smoke/
+example use) or the production mesh (full configs). One train step = one
+FAVAS server round over the resident clients (see core/favas.py).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
+      --steps 50 --n-clients 4 --s 2 --seq 128 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpointing import save_checkpoint, latest_checkpoint, load_checkpoint
+from repro.configs import get_config, get_reduced_config
+from repro.core import (FavasConfig, favas_init, favas_round, favas_variance,
+                        client_lambdas)
+from repro.data import make_lm_corpus
+from repro.data.pipeline import lm_round_batch
+from repro.models.model import init_params, loss_fn
+from repro.utils.metrics import MetricsLogger
+
+
+def build_cli():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced same-family config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--n-clients", type=int, default=4)
+    ap.add_argument("--s", type=int, default=2)
+    ap.add_argument("--K", type=int, default=4)
+    ap.add_argument("--eta", type=float, default=0.05)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4, help="per-client per-step")
+    ap.add_argument("--reweight", default="stochastic",
+                    choices=["stochastic", "deterministic"])
+    ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics", default=None, help="JSONL metrics path")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def run(args):
+    cfg = get_reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    fcfg = FavasConfig(n_clients=args.n_clients, s_selected=args.s,
+                       local_steps=args.K, eta=args.eta,
+                       reweight=args.reweight, quant_bits=args.quant_bits,
+                       seed=args.seed)
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(key, cfg)
+    state = favas_init(params, fcfg, key)
+    lambdas = jnp.asarray(client_lambdas(fcfg))
+    det_alpha = None
+    if args.reweight == "deterministic":
+        from repro.core import deterministic_alphas
+        det_alpha = jnp.asarray(deterministic_alphas(fcfg))
+
+    if args.ckpt_dir:
+        ck = latest_checkpoint(args.ckpt_dir)
+        if ck:
+            print(f"restoring {ck}")
+            state = load_checkpoint(ck, state)
+
+    def lfn(p, b):
+        return loss_fn(p, cfg, b)
+
+    step_fn = jax.jit(functools.partial(
+        favas_round, cfg=fcfg, loss_fn=lfn, lambdas=lambdas,
+        det_alpha=det_alpha))
+
+    tokens, domains = make_lm_corpus(cfg.vocab_size_raw, 400_000,
+                                     n_domains=max(args.n_clients, 2),
+                                     seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    logger = MetricsLogger(args.metrics)
+    losses = []
+    t0 = time.time()
+    for t in range(args.steps):
+        batch_np = lm_round_batch(tokens, domains, fcfg.n_clients, fcfg.R,
+                                  args.batch, args.seq, rng)
+        state, metrics = step_fn(state, {"tokens": jnp.asarray(batch_np)})
+        losses.append(float(metrics["loss"]))
+        logger.log(t + 1, loss=metrics["loss"], mean_steps=metrics["mean_steps"])
+        if (t + 1) % args.log_every == 0:
+            var = float(favas_variance(state))
+            logger.log(t + 1, client_variance=var)
+            print(f"round {t+1:5d} | loss {np.mean(losses[-args.log_every:]):.4f}"
+                  f" | client-var {var:.3e} | {(t+1)/(time.time()-t0):.2f} it/s")
+        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, t + 1, state)
+    print(f"done: first-10 loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 {np.mean(losses[-10:]):.4f}")
+    return state, losses
+
+
+def main():
+    args = build_cli().parse_args()
+    run(args)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Attention substrate: GQA with RoPE / M-RoPE / qk-norm, blockwise
+(flash-style, linear-memory) prefill attention, sliding windows, and decode
+with a KV cache.
+
+TPU adaptation notes (see DESIGN.md §6):
+* prefill uses an online-softmax scan over KV blocks, never materializing
+  the (S, S) score matrix — required for the 32k prefill shape;
+* decode supports a sequence-sharded cache; the einsum contraction over the
+  sharded S dim lowers to partial reductions + small all-reduces under pjit
+  (flash-decode across chips); a shard_map variant is the perf-pass upgrade.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dense_apply, rmsnorm_init, rmsnorm_apply
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float):
+    return theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv      # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # (B,S,1,hd/2)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, theta: float, sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE. positions3: (3, B, S) — (t, h, w) position ids.
+
+    Frequency dims are partitioned into 3 sections; each section rotates with
+    its own position stream. ``sections`` are half-dim counts (sum = hd/2).
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    inv = rope_freqs(hd, theta)                                   # (hd/2,)
+    # (3, B, S, hd/2)
+    ang_all = positions3[..., None].astype(jnp.float32) * inv
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=hd // 2)              # (hd/2,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 0, -1), sec_id[None, None, :, None], axis=-1
+    )[..., 0]                                                     # (B, S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (online-softmax) attention — linear memory in S
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                        block_kv: int = 512, q_offset: int = 0):
+    """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd). Returns (B, Sq, Hq, hd).
+
+    Scans KV blocks with running (max, sum) statistics — flash-attention
+    dataflow expressed in jnp so XLA fuses it; peak memory is
+    O(Sq * block_kv) instead of O(Sq * Skv).
+    ``window > 0`` = sliding-window (local) attention.
+    ``q_offset`` = absolute position of q[0] (for cross-chunk causal masks).
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    nb = -(-Skv // block_kv)
+    pad = nb * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nb, block_kv, Hkv, hd)
+    vb = v.reshape(B, nb, block_kv, Hkv, hd)
+
+    qg = q.reshape(B, Sq, Hkv, G, hd).astype(jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, blk):
+        m_prev, l_prev, o_prev = carry
+        kblk, vblk, start = blk                      # (B, bkv, Hkv, hd), scalar
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kblk.astype(jnp.float32))
+        kv_pos = start + jnp.arange(block_kv)
+        mask = kv_pos[None, :] <= Skv - 1            # valid (un-padded)
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32))
+        o_new = o_prev * corr[..., None] + pv
+        return (m_new, l_new, o_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    o0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    starts = jnp.arange(nb) * block_kv
+    kb_t = jnp.moveaxis(kb, 1, 0)                    # (nb, B, bkv, Hkv, hd)
+    vb_t = jnp.moveaxis(vb, 1, 0)
+    (m, l, o), _ = jax.lax.scan(body, (m0, l0, o0), (kb_t, vb_t, starts))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    out = jnp.moveaxis(o, 3, 1).reshape(B, Sq, Hq, hd)   # (B,Sq,Hkv,G,hd)->merge
+    return out.astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cur_len):
+    """One-token decode. q: (B, 1, Hq, hd); caches: (B, S, Hkv, hd).
+
+    Positions >= cur_len are masked. With the cache S dim sharded over the
+    "model" mesh axis, the two contractions below lower to per-shard partials
+    plus an all-reduce of (B, H, hd)-sized tensors: distributed flash-decode.
+    """
+    B, S, Hkv, hd = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Hkv, G, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S) < cur_len                      # (S,) — scalar cur_len
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgs,bshd->bhgd", p / jnp.maximum(l, 1e-30),
+                   v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, Hq, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Full GQA attention layer
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, dtype=jnp.float32):
+    """cfg needs: d_model, n_heads, n_kv_heads, head_dim, qk_norm, attn_bias."""
+    ks = jax.random.split(key, 4)
+    hd = cfg.head_dim
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * hd, dtype=dtype, bias=cfg.attn_bias),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * hd, dtype=dtype, bias=cfg.attn_bias),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * hd, dtype=dtype, bias=cfg.attn_bias),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, cfg.d_model, dtype=dtype, bias=cfg.attn_bias),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x, positions, *, compute_dtype=jnp.bfloat16):
+    B, S, _ = x.shape
+    hd = cfg.head_dim
+    q = dense_apply(p["wq"], x, compute_dtype=compute_dtype).reshape(B, S, cfg.n_heads, hd)
+    k = dense_apply(p["wk"], x, compute_dtype=compute_dtype).reshape(B, S, cfg.n_kv_heads, hd)
+    v = dense_apply(p["wv"], x, compute_dtype=compute_dtype).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    if positions is not None:
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(p, cfg, x, positions, *, window: int = 0, causal: bool = True,
+               kv: Optional[tuple] = None, compute_dtype=jnp.bfloat16,
+               block_kv: int = 512):
+    """Prefill/training attention. ``kv`` overrides k/v source (cross-attn)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x, positions, compute_dtype=compute_dtype)
+    if kv is not None:
+        k, v = kv
+        causal = False
+    out = blockwise_attention(q, k, v, causal=causal, window=window, block_kv=block_kv)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return dense_apply(p["wo"], out, compute_dtype=compute_dtype)
+
+
+def quantize_kv(x):
+    """Per-(token, head) symmetric int8 quantization. x: (B, 1, H, hd).
+    Returns (int8 values, bf16 scales (B, 1, H))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def dequantize_kv(q, scale):
+    """q: (B, S, H, hd) int8; scale: (B, S, H). -> f32."""
+    return q.astype(jnp.float32) * scale.astype(jnp.float32)[..., None]
+
+
+def attn_decode(p, cfg, x, pos, cache, *, window: int = 0,
+                compute_dtype=jnp.bfloat16):
+    """One-token decode step.
+
+    x: (B, 1, d); pos: scalar int (current absolute position);
+    cache: {"k","v"} (B, S_cache, Hkv, hd) [+ "k_scale","v_scale" (B, S, Hkv)
+    when cfg.kv_cache_dtype == "int8" — §Perf decode iteration: halves the
+    dominant HBM term]. Returns (out, new_cache).
+    For sliding-window layers the cache ring-buffers over ``S_cache ==
+    min(window, S)`` slots.
+    """
+    B = x.shape[0]
+    cache_k, cache_v = cache["k"], cache["v"]
+    S_cache = cache_k.shape[1]
+    if getattr(cfg, "arch_type", "dense") == "audio":
+        positions = None                      # learned absolute positions, no RoPE
+    elif cfg.mrope:
+        positions = jnp.broadcast_to(pos, (3, B, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, compute_dtype=compute_dtype)
+    slot = (pos % S_cache) if window > 0 else pos        # window is static
+    int8 = cfg.kv_cache_dtype == "int8"
+    new_cache = dict(cache)
+    if int8:
+        kq, ks = quantize_kv(k_new)
+        vq, vs = quantize_kv(v_new)
+        new_cache["k"] = jax.lax.dynamic_update_slice(cache_k, kq, (0, slot, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(cache_v, vq, (0, slot, 0, 0))
+        new_cache["k_scale"] = jax.lax.dynamic_update_slice(
+            cache["k_scale"], ks, (0, slot, 0))
+        new_cache["v_scale"] = jax.lax.dynamic_update_slice(
+            cache["v_scale"], vs, (0, slot, 0))
+        k_full = dequantize_kv(new_cache["k"], new_cache["k_scale"])
+        v_full = dequantize_kv(new_cache["v"], new_cache["v_scale"])
+    else:
+        new_cache["k"] = jax.lax.dynamic_update_slice(
+            cache_k, k_new.astype(cache_k.dtype), (0, slot, 0, 0))
+        new_cache["v"] = jax.lax.dynamic_update_slice(
+            cache_v, v_new.astype(cache_v.dtype), (0, slot, 0, 0))
+        k_full, v_full = new_cache["k"], new_cache["v"]
+    cur = jnp.minimum(pos + 1, S_cache)
+    out = decode_attention(q, k_full, v_full, cur)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    return dense_apply(p["wo"], out, compute_dtype=compute_dtype), new_cache

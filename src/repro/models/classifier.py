@@ -1,0 +1,46 @@
+"""Small classifier models matching the paper's experimental section:
+a shallow MLP (MNIST, Sec. 5 ``shallow neural network``) and a small
+conv-net proxy (CIFAR-10 / TinyImageNet ResNets are scaled down for the
+offline CPU benchmark — relative method ordering is what we validate).
+
+These are the models the FAVAS *reproduction* benchmarks train; the ten
+assigned production architectures live in ``repro.models.model``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlp_init(key, d_in: int, d_hidden: int, n_classes: int, depth: int = 2):
+    ks = jax.random.split(key, depth + 1)
+    dims = [d_in] + [d_hidden] * depth + [n_classes]
+    return {
+        f"l{i}": {
+            "w": jax.random.normal(ks[i], (dims[i], dims[i + 1])) / jnp.sqrt(dims[i]),
+            "b": jnp.zeros((dims[i + 1],)),
+        }
+        for i in range(depth + 1)
+    }
+
+
+def mlp_apply(params, x):
+    n = len(params)
+    for i in range(n):
+        p = params[f"l{i}"]
+        x = x @ p["w"] + p["b"]
+        if i < n - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def classifier_loss(params, apply_fn, x, y, n_classes: int):
+    logits = apply_fn(params, x)
+    logp = jax.nn.log_softmax(logits)
+    onehot = jax.nn.one_hot(y, n_classes)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def accuracy(params, apply_fn, x, y):
+    logits = apply_fn(params, x)
+    return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))

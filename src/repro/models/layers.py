@@ -1,0 +1,113 @@
+"""Common neural-net layers, pure JAX (no flax): init fns return param dicts,
+apply fns are pure functions of (params, inputs).
+
+Compute dtype policy: parameters are kept in ``param_dtype`` (f32 for
+training, bf16 for serving); matmuls run in ``compute_dtype`` (bf16 on TPU)
+with f32 accumulation via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, *, dtype=jnp.float32, bias: bool = False,
+               scale: Optional[float] = None):
+    scale = (1.0 / math.sqrt(d_in)) if scale is None else scale
+    p = {"w": _normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x, *, compute_dtype=jnp.bfloat16):
+    # Perf note (§Perf iter 1): matmul output dtype == compute dtype, so the
+    # tensor-parallel partial-sum all-reduce moves bf16, not f32 (2x wire
+    # bytes). The MXU still accumulates f32 internally on TPU.
+    w = p["w"].astype(compute_dtype)
+    y = jnp.einsum("...d,df->...f", x.astype(compute_dtype), w,
+                   preferred_element_type=compute_dtype)
+    if "b" in p:
+        y = (y.astype(jnp.float32) + p["b"].astype(jnp.float32)
+             ).astype(compute_dtype)
+    return y
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": _normal(key, (vocab, dim), 0.02, dtype)}
+
+
+def embedding_apply(p, tokens, *, compute_dtype=jnp.bfloat16):
+    return jnp.take(p["table"], tokens, axis=0).astype(compute_dtype)
+
+
+def unembed_apply(p, x, *, compute_dtype=jnp.bfloat16):
+    """Tied or untied LM head: x @ table^T."""
+    w = p["table"].astype(compute_dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(compute_dtype), w,
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Feed-forward blocks
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d, d_ff, dtype=dtype),
+        "up": dense_init(k2, d, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def swiglu_apply(p, x, *, compute_dtype=jnp.bfloat16):
+    g = dense_apply(p["gate"], x, compute_dtype=compute_dtype)
+    u = dense_apply(p["up"], x, compute_dtype=compute_dtype)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(compute_dtype) * u
+    return dense_apply(p["down"], h, compute_dtype=compute_dtype)
+
+
+def gelu_mlp_init(key, d: int, d_ff: int, dtype=jnp.float32, bias: bool = True):
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": dense_init(k1, d, d_ff, dtype=dtype, bias=bias),
+        "down": dense_init(k2, d_ff, d, dtype=dtype, bias=bias),
+    }
+
+
+def gelu_mlp_apply(p, x, *, compute_dtype=jnp.bfloat16):
+    h = dense_apply(p["up"], x, compute_dtype=compute_dtype)
+    h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(compute_dtype)
+    return dense_apply(p["down"], h, compute_dtype=compute_dtype)

@@ -1,0 +1,524 @@
+"""Unified model substrate: one ModelConfig + init/forward/loss/decode for all
+six assigned architecture families (dense / moe / ssm / hybrid / vlm / audio).
+
+Framework conventions:
+* params are nested dicts; uniform-depth stacks use a leading layer axis and
+  `lax.scan` over layers (small HLO — essential for 40 dry-run compiles);
+  hybrids (periodic patterns) and enc-dec unroll.
+* `forward(params, cfg, batch)` -> logits for train/prefill;
+  `decode_step(params, cfg, cache, token, pos)` -> (logits, cache) for serve.
+* [audio]/[vlm] frontends are stubs per the task carve-out: the batch carries
+  precomputed frame/patch embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models import rglru as R
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    arch_type: str = "dense"           # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 64
+    d_ff: int = 512
+    vocab_size_raw: int = 1024         # paper/model-card vocab
+    # attention
+    rope_theta: float = 1e6
+    qk_norm: bool = False
+    mrope: bool = False
+    mrope_sections: Tuple[int, ...] = (16, 24, 24)
+    attn_bias: bool = False
+    window: int = 0                    # >0: sliding-window on ALL attn layers
+    # mlp / norm
+    mlp_type: str = "swiglu"           # swiglu|gelu
+    norm_type: str = "rms"             # rms|ln
+    norm_eps: float = 1e-6
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    # hybrid (griffin)
+    rnn_width: int = 0
+    conv_width: int = 4
+    block_pattern: Tuple[str, ...] = ()   # e.g. ("rglru","rglru","local_attn")
+    # enc-dec (whisper)
+    enc_layers: int = 0
+    enc_seq: int = 1500
+    dec_pos_len: int = 32768          # learned decoder positions table
+    # policy
+    tie_embeddings: bool = True
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: bool = True
+    # "full": save only layer boundaries; "dots": additionally save matmul
+    # outputs with no batch dims (§Perf iter 6 — trades HBM for recompute).
+    remat_policy: str = "full"
+    scan_layers: bool = True
+    vocab_pad_to: int = 256
+    # §Perf iter 2: shard the residual stream's sequence dim over this mesh
+    # axis between blocks (Megatron-SP analog): activations/remat residuals
+    # shrink by the axis size and boundary all-reduces lower to RS+AG.
+    # "" = baseline (unsharded). Enable only when seq % axis_size == 0.
+    act_seq_axis: str = ""
+    # §Perf iter 5 (measured, see EXPERIMENTS.md): sequence-sharding the
+    # residual stream trades boundary all-reduces for per-layer weight + K/V
+    # gathers. That LOSES when K/V are full-width (MHA: codeqwen, whisper),
+    # when the token mixer is a cross-chunk scan (mamba2 SSD), or when
+    # expert weights dominate the gather (phi3.5-moe 42B). Those configs set
+    # this False and the "opt" variant leaves them at baseline sharding.
+    seq_shard_friendly: bool = True
+    # §Perf iter (decode): "int8" stores the KV cache quantized with a
+    # per-(token, head) scale — halves decode's dominant HBM term.
+    kv_cache_dtype: str = "bfloat16"
+
+    # ------------------------------------------------------------------
+    @property
+    def vocab_size(self) -> int:
+        return _round_up(self.vocab_size_raw, self.vocab_pad_to)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def layer_kinds(self) -> Tuple[str, ...]:
+        """Per-layer temporal-mixing kind for the decoder stack."""
+        if self.arch_type == "ssm":
+            return ("ssm",) * self.n_layers
+        if self.arch_type == "hybrid":
+            pat = self.block_pattern or ("rglru", "rglru", "local_attn")
+            return tuple(pat[i % len(pat)] for i in range(self.n_layers))
+        if self.arch_type == "moe":
+            return ("attn",) * self.n_layers
+        return ("attn",) * self.n_layers   # dense / vlm / audio decoder
+
+    def uniform_stack(self) -> bool:
+        """True when all decoder layers are identical -> scan over layers."""
+        return (self.scan_layers and self.arch_type in
+                ("dense", "moe", "ssm", "vlm"))
+
+
+def make_reduced(cfg: ModelConfig, *, n_layers=2, d_model=256, n_heads=4,
+                 n_kv_heads=None, d_ff=512, vocab=512, n_experts=4) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests (task spec: <=2 layers,
+    d_model<=512, <=4 experts)."""
+    kv = n_kv_heads or max(1, min(cfg.n_kv_heads, n_heads))
+    if cfg.n_kv_heads == cfg.n_heads:
+        kv = n_heads
+    updates = dict(
+        n_layers=n_layers, d_model=d_model, n_heads=n_heads, n_kv_heads=kv,
+        head_dim=d_model // n_heads, d_ff=d_ff, vocab_size_raw=vocab,
+        vocab_pad_to=64,
+    )
+    if cfg.arch_type == "moe":
+        updates.update(n_experts=min(n_experts, 4), top_k=min(cfg.top_k, 2))
+    if cfg.arch_type == "ssm":
+        updates.update(ssm_head_dim=32, ssm_state=16)
+    if cfg.arch_type == "hybrid":
+        updates.update(rnn_width=d_model, window=64,
+                       block_pattern=("rglru", "local_attn"))
+    if cfg.arch_type == "audio":
+        updates.update(enc_layers=2, enc_seq=16, dec_pos_len=4096)
+    if cfg.mrope:
+        updates.update(mrope_sections=(8, 12, 12))  # head_dim 64 -> half 32
+    return dataclasses.replace(cfg, **updates)
+
+
+# ======================================================================
+# Init
+# ======================================================================
+
+def _mlp_init(key, cfg, dtype):
+    if cfg.arch_type == "moe":
+        return M.moe_init(key, cfg, dtype)
+    if cfg.mlp_type == "gelu":
+        return L.gelu_mlp_init(key, cfg.d_model, cfg.d_ff, dtype, bias=cfg.attn_bias)
+    return L.swiglu_init(key, cfg.d_model, cfg.d_ff, dtype)
+
+
+def _norm_init(cfg, dtype):
+    if cfg.norm_type == "ln":
+        return L.layernorm_init(cfg.d_model, dtype)
+    return L.rmsnorm_init(cfg.d_model, dtype)
+
+
+def _norm_apply(cfg, p, x):
+    if cfg.norm_type == "ln":
+        return L.layernorm_apply(p, x, eps=cfg.norm_eps)
+    return L.rmsnorm_apply(p, x, eps=cfg.norm_eps)
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, dtype):
+    ks = jax.random.split(key, 4)
+    p = {"norm1": _norm_init(cfg, dtype)}
+    if kind == "attn" or kind == "local_attn":
+        p["attn"] = A.attn_init(ks[0], cfg, dtype)
+    elif kind == "ssm":
+        p["ssm"] = S.ssm_init(ks[0], cfg, dtype)
+    elif kind == "rglru":
+        p["rnn"] = R.rglru_init(ks[0], cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind != "ssm":                      # mamba2 blocks have no separate FFN
+        p["norm2"] = _norm_init(cfg, dtype)
+        p["mlp"] = _mlp_init(ks[1], cfg, dtype)
+    if cfg.arch_type == "audio":           # decoder cross-attention
+        p["norm_x"] = _norm_init(cfg, dtype)
+        p["xattn"] = A.attn_init(ks[2], cfg, dtype)
+    return p
+
+
+def _enc_layer_init(key, cfg, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "norm1": _norm_init(cfg, dtype),
+        "attn": A.attn_init(ks[0], cfg, dtype),
+        "norm2": _norm_init(cfg, dtype),
+        "mlp": L.gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype, bias=True),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = cfg.pdtype
+    k_emb, k_layers, k_head, k_enc, k_pos = jax.random.split(key, 5)
+    params = {"embed": L.embedding_init(k_emb, cfg.vocab_size, cfg.d_model, dtype)}
+    kinds = cfg.layer_kinds()
+
+    if cfg.uniform_stack():
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = jax.vmap(
+            lambda k: _layer_init(k, cfg, kinds[0], dtype))(keys)
+    else:
+        keys = jax.random.split(k_layers, cfg.n_layers)
+        params["layers"] = [
+            _layer_init(keys[i], cfg, kinds[i], dtype) for i in range(cfg.n_layers)]
+
+    params["final_norm"] = _norm_init(cfg, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, cfg.d_model, cfg.vocab_size, dtype=dtype)
+
+    if cfg.arch_type == "audio":
+        ekeys = jax.random.split(k_enc, cfg.enc_layers)
+        params["encoder"] = {
+            "pos": L._normal(k_pos, (cfg.enc_seq, cfg.d_model), 0.02, dtype),
+            "layers": [_enc_layer_init(ekeys[i], cfg, dtype)
+                       for i in range(cfg.enc_layers)],
+            "final_norm": _norm_init(cfg, dtype),
+        }
+        params["dec_pos"] = L._normal(jax.random.fold_in(k_pos, 1),
+                                      (cfg.dec_pos_len, cfg.d_model), 0.02, dtype)
+    return params
+
+
+# ======================================================================
+# Forward (train / prefill)
+# ======================================================================
+
+def _constrain_acts(cfg: ModelConfig, x):
+    """Optionally pin the residual stream's seq dim to cfg.act_seq_axis."""
+    if not cfg.act_seq_axis or x.ndim < 3 or x.shape[-2] <= 1:
+        return x
+    from jax.sharding import PartitionSpec as P
+    U = P.UNCONSTRAINED
+    spec = P(*([U] * (x.ndim - 2)), cfg.act_seq_axis, U)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _layer_apply(p, cfg: ModelConfig, kind: str, x, positions, enc_out=None):
+    """One decoder block. Returns (x, aux_loss)."""
+    cd = cfg.cdtype
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm_apply(cfg, p["norm1"], x)
+    if kind == "attn":
+        h = A.attn_apply(p["attn"], cfg, h, positions, window=cfg.window,
+                         compute_dtype=cd)
+    elif kind == "local_attn":
+        h = A.attn_apply(p["attn"], cfg, h, positions, window=cfg.window or 2048,
+                         compute_dtype=cd)
+    elif kind == "ssm":
+        h = S.ssm_apply(p["ssm"], cfg, h, compute_dtype=cd)
+    elif kind == "rglru":
+        h = R.rglru_apply(p["rnn"], cfg, h, compute_dtype=cd)
+    x = x + h
+    if "xattn" in p:                       # whisper decoder cross-attn
+        h = _norm_apply(cfg, p["norm_x"], x)
+        h = A.attn_apply(p["xattn"], cfg, h, None, kv=enc_out, compute_dtype=cd)
+        x = x + h
+    if "mlp" in p:
+        h = _norm_apply(cfg, p["norm2"], x)
+        if cfg.arch_type == "moe":
+            h, aux = M.moe_apply(p["mlp"], cfg, h,
+                                 capacity_factor=cfg.capacity_factor,
+                                 compute_dtype=cd)
+        elif cfg.mlp_type == "gelu":
+            h = L.gelu_mlp_apply(p["mlp"], h, compute_dtype=cd)
+        else:
+            h = L.swiglu_apply(p["mlp"], h, compute_dtype=cd)
+        x = x + h
+    return x, aux
+
+
+def _encode(params, cfg, enc_frames):
+    """Whisper encoder over stubbed conv-frontend frames (B, T_enc, d)."""
+    enc = params["encoder"]
+    x = enc_frames.astype(cfg.cdtype) + enc["pos"][None, :enc_frames.shape[1]].astype(cfg.cdtype)
+    for lp in enc["layers"]:
+        h = _norm_apply(cfg, lp["norm1"], x)
+        h = A.attn_apply(lp["attn"], cfg, h, None, causal=False, compute_dtype=cfg.cdtype)
+        x = x + h
+        h = _norm_apply(cfg, lp["norm2"], x)
+        x = x + L.gelu_mlp_apply(lp["mlp"], h, compute_dtype=cfg.cdtype)
+    return _norm_apply(cfg, enc["final_norm"], x)
+
+
+def _embed_inputs(params, cfg, batch):
+    tokens = batch["tokens"]
+    x = L.embedding_apply(params["embed"], tokens, compute_dtype=cfg.cdtype)
+    if cfg.arch_type == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(cfg.cdtype)      # (B, N_img, d)
+        x = jax.lax.dynamic_update_slice(x, pe, (0, 0, 0))  # image tokens first
+    if cfg.arch_type == "audio":
+        Ssz = tokens.shape[1]
+        x = x + params["dec_pos"][None, :Ssz].astype(cfg.cdtype)
+    return x
+
+
+def _positions_for(cfg, batch):
+    tokens = batch["tokens"]
+    B, Ssz = tokens.shape
+    if cfg.arch_type == "audio":
+        return None                                       # learned abs pos
+    if cfg.mrope:
+        if "mrope_positions" in batch:
+            return batch["mrope_positions"]
+        pos = jnp.broadcast_to(jnp.arange(Ssz, dtype=jnp.int32), (B, Ssz))
+        return jnp.broadcast_to(pos[None], (3, B, Ssz))
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(Ssz, dtype=jnp.int32), (B, Ssz))
+
+
+def forward(params, cfg: ModelConfig, batch):
+    """batch: dict with "tokens" (B, S) plus modality extras. -> (logits, aux)."""
+    x = _embed_inputs(params, cfg, batch)
+    positions = _positions_for(cfg, batch)
+    enc_out = None
+    if cfg.arch_type == "audio":
+        eo = _encode(params, cfg, batch["enc_frames"])
+        B, Te, _ = eo.shape
+        hd = cfg.head_dim
+        enc_out = eo  # projected per-layer below
+
+    kinds = cfg.layer_kinds()
+    aux_total = jnp.zeros((), jnp.float32)
+
+    x = _constrain_acts(cfg, x)
+    remat_kwargs = {}
+    if cfg.remat and cfg.remat_policy == "dots":
+        remat_kwargs["policy"] = jax.checkpoint_policies.checkpoint_dots
+    if cfg.uniform_stack():
+        def body(carry, lp):
+            x, aux = carry
+            fn = lambda q, xx: _layer_apply(q, cfg, kinds[0], xx, positions)
+            if cfg.remat:
+                fn = jax.checkpoint(fn, **remat_kwargs)
+            x, a = fn(lp, x)
+            x = _constrain_acts(cfg, x)
+            return (x, aux + a), None
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), params["layers"])
+    else:
+        for i, lp in enumerate(params["layers"]):
+            fn = lambda q, xx, eo=enc_out, kind=kinds[i]: _layer_apply(
+                q, cfg, kind, xx, positions,
+                enc_out=None if eo is None else _cross_kv(q, cfg, eo))
+            if cfg.remat:
+                fn = jax.checkpoint(fn, **remat_kwargs)
+            x, a = fn(lp, x)
+            x = _constrain_acts(cfg, x)
+            aux_total = aux_total + a
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x, compute_dtype=cfg.cdtype)
+    else:
+        logits = L.dense_apply(params["lm_head"], x, compute_dtype=cfg.cdtype)
+        logits = logits.astype(jnp.float32)
+    return logits.astype(jnp.float32), aux_total
+
+
+def _cross_kv(layer_p, cfg, enc_out):
+    """Project encoder states to this decoder layer's cross K/V."""
+    cd = cfg.cdtype
+    B, Te, _ = enc_out.shape
+    hd = cfg.head_dim
+    k = L.dense_apply(layer_p["xattn"]["wk"], enc_out, compute_dtype=cd)
+    v = L.dense_apply(layer_p["xattn"]["wv"], enc_out, compute_dtype=cd)
+    return (k.reshape(B, Te, cfg.n_kv_heads, hd), v.reshape(B, Te, cfg.n_kv_heads, hd))
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """Next-token cross-entropy + MoE aux. Labels = tokens shifted left."""
+    logits, aux = forward(params, cfg, batch)
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.pad(batch["tokens"][:, 1:], ((0, 0), (0, 1)))
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = jnp.ones_like(ll) if "loss_mask" not in batch else batch["loss_mask"]
+    loss = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss + cfg.aux_loss_coef * aux
+
+
+# ======================================================================
+# Decode (serve)
+# ======================================================================
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    """Per-layer decode caches, stacked along layer axis when scanning."""
+    kinds = cfg.layer_kinds()
+
+    def one(kind):
+        if kind == "ssm":
+            return S.ssm_init_cache(cfg, batch, dtype)
+        if kind == "rglru":
+            return R.rglru_init_cache(cfg, batch, dtype)
+        win = cfg.window or (2048 if kind == "local_attn" else 0)
+        Ssz = min(max_seq, win) if (win and kind == "local_attn") else max_seq
+        if cfg.window and kind == "attn":
+            Ssz = min(max_seq, cfg.window)
+        if cfg.kv_cache_dtype == "int8":
+            return {
+                "k": jnp.zeros((batch, Ssz, cfg.n_kv_heads, cfg.head_dim),
+                               jnp.int8),
+                "v": jnp.zeros((batch, Ssz, cfg.n_kv_heads, cfg.head_dim),
+                               jnp.int8),
+                "k_scale": jnp.zeros((batch, Ssz, cfg.n_kv_heads), jnp.bfloat16),
+                "v_scale": jnp.zeros((batch, Ssz, cfg.n_kv_heads), jnp.bfloat16),
+            }
+        return {"k": jnp.zeros((batch, Ssz, cfg.n_kv_heads, cfg.head_dim), dtype),
+                "v": jnp.zeros((batch, Ssz, cfg.n_kv_heads, cfg.head_dim), dtype)}
+
+    if cfg.uniform_stack():
+        c = one(kinds[0])
+        cache = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers,) + x.shape), c)
+    else:
+        cache = [one(k) for k in kinds]
+    out = {"layers": cache}
+    if cfg.arch_type == "audio":
+        out["cross_kv"] = None   # filled by prefill_audio
+    return out
+
+
+def _layer_decode(p, cfg, kind, x, pos, cache, cross_kv=None):
+    cd = cfg.cdtype
+    h = _norm_apply(cfg, p["norm1"], x)
+    if kind in ("attn", "local_attn"):
+        win = cfg.window or (2048 if kind == "local_attn" else 0)
+        h, cache = A.attn_decode(p["attn"], cfg, h, pos, cache,
+                                 window=win, compute_dtype=cd)
+    elif kind == "ssm":
+        h, cache = S.ssm_decode(p["ssm"], cfg, h, cache, compute_dtype=cd)
+    elif kind == "rglru":
+        h, cache = R.rglru_decode(p["rnn"], cfg, h, cache, compute_dtype=cd)
+    x = x + h
+    if "xattn" in p and cross_kv is not None:
+        h = _norm_apply(cfg, p["norm_x"], x)
+        B = x.shape[0]
+        hd = cfg.head_dim
+        q = L.dense_apply(p["xattn"]["wq"], h, compute_dtype=cd)
+        q = q.reshape(B, 1, cfg.n_heads, hd)
+        o = A.decode_attention(q, cross_kv[0], cross_kv[1],
+                               cross_kv[0].shape[1])
+        o = o.reshape(B, 1, cfg.n_heads * hd)
+        x = x + L.dense_apply(p["xattn"]["wo"], o, compute_dtype=cd)
+    if "mlp" in p:
+        h = _norm_apply(cfg, p["norm2"], x)
+        if cfg.arch_type == "moe":
+            h, _ = M.moe_apply(p["mlp"], cfg, h,
+                               capacity_factor=cfg.capacity_factor, compute_dtype=cd)
+        elif cfg.mlp_type == "gelu":
+            h = L.gelu_mlp_apply(p["mlp"], h, compute_dtype=cd)
+        else:
+            h = L.swiglu_apply(p["mlp"], h, compute_dtype=cd)
+        x = x + h
+    return x, cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, token, pos):
+    """One serve step: token (B, 1) int32, pos scalar int32.
+    Returns (logits (B, 1, V), new_cache)."""
+    x = L.embedding_apply(params["embed"], token, compute_dtype=cfg.cdtype)
+    if cfg.arch_type == "audio":
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["dec_pos"], pos % params["dec_pos"].shape[0], 1)[None].astype(cfg.cdtype)
+    kinds = cfg.layer_kinds()
+
+    if cfg.uniform_stack():
+        def body(x, inp):
+            lp, lc = inp
+            x, lc = _layer_decode(lp, cfg, kinds[0], x, pos, lc)
+            return x, lc
+        x, new_lc = jax.lax.scan(body, x, (params["layers"], cache["layers"]))
+        new_cache = {"layers": new_lc}
+    else:
+        new_list = []
+        xkv = cache.get("cross_kv")
+        for i, lp in enumerate(params["layers"]):
+            ck = xkv[i] if xkv is not None else None
+            x, lc = _layer_decode(lp, cfg, kinds[i], x, pos, cache["layers"][i],
+                                  cross_kv=ck)
+            new_list.append(lc)
+        new_cache = dict(cache)
+        new_cache["layers"] = new_list
+
+    x = _norm_apply(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = L.unembed_apply(params["embed"], x, compute_dtype=cfg.cdtype)
+    else:
+        logits = L.dense_apply(params["lm_head"], x, compute_dtype=cfg.cdtype)
+    return logits.astype(jnp.float32), new_cache
+
+
+def prefill_audio(params, cfg: ModelConfig, cache, enc_frames):
+    """Run the (stub-fed) encoder once and precompute per-layer cross K/V."""
+    eo = _encode(params, cfg, enc_frames)
+    cache = dict(cache)
+    cache["cross_kv"] = [_cross_kv(lp, cfg, eo) for lp in params["layers"]]
+    return cache

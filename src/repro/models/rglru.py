@@ -1,0 +1,91 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t, i_t input-dependent gates.
+
+Prefill uses `lax.associative_scan` over the sequence (log-depth on TPU);
+decode is the single recurrence step. Channels shard over "model".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dense_apply, _normal
+
+_C = 8.0  # Griffin's fixed temperature
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 5)
+    d, w = cfg.d_model, cfg.rnn_width
+    return {
+        "in_x": dense_init(ks[0], d, w, dtype=dtype),
+        "in_gate": dense_init(ks[1], d, w, dtype=dtype),
+        "conv_w": _normal(ks[2], (cfg.conv_width, w), 0.1, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_r": dense_init(ks[3], w, w, dtype=dtype),
+        "gate_i": dense_init(ks[4], w, w, dtype=dtype),
+        # Lambda init so a^(1/c) in (0.9, 0.999)
+        "lam": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, w)) )).astype(dtype),
+        "out": dense_init(jax.random.fold_in(key, 7), w, d, dtype=dtype),
+    }
+
+
+def _gates(p, xw):
+    r = jax.nn.sigmoid(dense_apply(p["gate_r"], xw).astype(jnp.float32))
+    i = jax.nn.sigmoid(dense_apply(p["gate_i"], xw).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = i * xw.astype(jnp.float32)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, mult * gated
+
+
+def _causal_conv(x, w, b):
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def rglru_apply(p, cfg, x, *, compute_dtype=jnp.bfloat16):
+    """Full recurrent block, prefill/train. x: (B, S, d)."""
+    gate_branch = jax.nn.gelu(
+        dense_apply(p["in_gate"], x, compute_dtype=compute_dtype).astype(jnp.float32))
+    xw = dense_apply(p["in_x"], x, compute_dtype=compute_dtype)
+    xw = _causal_conv(xw.astype(jnp.float32), p["conv_w"].astype(jnp.float32),
+                      p["conv_b"].astype(jnp.float32)).astype(compute_dtype)
+    a, u = _gates(p, xw)                                        # (B,S,w) f32
+
+    def combine(c1, c2):
+        a1, u1 = c1
+        a2, u2 = c2
+        return a1 * a2, u1 * a2 + u2
+    aS, hS = jax.lax.associative_scan(combine, (a, u), axis=1)
+    y = hS * gate_branch
+    return dense_apply(p["out"], y.astype(compute_dtype), compute_dtype=compute_dtype)
+
+
+def rglru_init_cache(cfg, batch, dtype=jnp.float32):
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), dtype),
+    }
+
+
+def rglru_decode(p, cfg, x, cache, *, compute_dtype=jnp.bfloat16):
+    """Single decode step. x: (B, 1, d)."""
+    gate_branch = jax.nn.gelu(
+        dense_apply(p["in_gate"], x, compute_dtype=compute_dtype).astype(jnp.float32))
+    xw = dense_apply(p["in_x"], x, compute_dtype=compute_dtype)[:, 0]   # (B,w)
+    hist = jnp.concatenate([cache["conv"], xw[:, None].astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(jnp.float32)
+    xw = (jnp.sum(hist.astype(jnp.float32) * w[None], axis=1)
+          + p["conv_b"].astype(jnp.float32)).astype(compute_dtype)
+    a, u = _gates(p, xw)                                        # (B,w)
+    h = cache["h"].astype(jnp.float32) * a + u
+    y = h[:, None] * gate_branch
+    y = dense_apply(p["out"], y.astype(compute_dtype), compute_dtype=compute_dtype)
+    return y, {"h": h.astype(cache["h"].dtype), "conv": hist[:, 1:]}

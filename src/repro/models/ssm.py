@@ -1,0 +1,195 @@
+"""Mamba-2 SSD (state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD scan: within-chunk computation is a (masked) matmul against the
+decay matrix L = exp(segsum(A)); cross-chunk state is carried by a
+`lax.scan`, giving O(S * chunk) compute on the MXU instead of a length-S
+sequential recurrence. Decode is the O(1) state-space step.
+
+Sharding (DESIGN.md §6): projections are kept as *separate* branches
+(z, x, B, C, dt) instead of one packed in_proj so each can carry its own
+PartitionSpec — z/x/dt and the conv over x shard their inner channels over
+"model"; the small B/C (n_groups=1, state=128) stay replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, dense_apply, rmsnorm_init, rmsnorm_apply, _normal
+
+
+def ssm_init(key, cfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    d_in = cfg.ssm_d_inner
+    H = cfg.ssm_heads
+    N = cfg.ssm_state
+    G = cfg.ssm_groups
+    return {
+        "in_z": dense_init(ks[0], d, d_in, dtype=dtype),
+        "in_x": dense_init(ks[1], d, d_in, dtype=dtype),
+        "in_B": dense_init(ks[2], d, G * N, dtype=dtype),
+        "in_C": dense_init(ks[3], d, G * N, dtype=dtype),
+        "in_dt": dense_init(ks[4], d, H, dtype=dtype),
+        "conv_x": {"w": _normal(ks[5], (cfg.ssm_conv, d_in), 0.1, dtype),
+                   "b": jnp.zeros((d_in,), dtype)},
+        "conv_B": {"w": _normal(ks[6], (cfg.ssm_conv, G * N), 0.1, dtype),
+                   "b": jnp.zeros((G * N,), dtype)},
+        "conv_C": {"w": _normal(ks[7], (cfg.ssm_conv, G * N), 0.1, dtype),
+                   "b": jnp.zeros((G * N,), dtype)},
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(dtype),
+        "D": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "norm": rmsnorm_init(d_in, dtype),
+        "out_proj": dense_init(jax.random.fold_in(key, 99), d_in, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d. x: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _segsum(a):
+    """a: (..., L) -> (..., L, L) lower-triangular segment sums."""
+    L = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), 0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_scan(x, dt, A, Bc, Cc, *, chunk: int = 128):
+    """Chunked SSD. x: (B,S,H,P); dt: (B,S,H); A: (H,) (negative);
+    Bc, Cc: (B,S,G,N) with G groups broadcast over heads.
+    Returns y: (B,S,H,P) and final state (B,H,P,N)."""
+    Bsz, S, H, P = x.shape
+    G, N = Bc.shape[2], Bc.shape[3]
+    rep = H // G
+    nb = S // chunk
+    assert nb * chunk == S, (S, chunk)
+
+    dA = dt * A[None, None, :]                                  # (B,S,H)
+
+    def ch(t):
+        return t.reshape((Bsz, nb, chunk) + t.shape[2:])
+    xc, dtc, dAc = ch(x), ch(dt), ch(dA)
+    Bcc = jnp.repeat(ch(Bc), rep, axis=3)                        # (B,nb,L,H,N)
+    Ccc = jnp.repeat(ch(Cc), rep, axis=3)
+
+    dAc_h = jnp.moveaxis(dAc, -1, 2)                             # (B,nb,H,L)
+    A_cum = jnp.cumsum(dAc_h, axis=-1)
+    Lmat = jnp.exp(_segsum(dAc_h))                               # (B,nb,H,L,L)
+
+    xdt = xc * dtc[..., None]                                    # (B,nb,L,H,P)
+    scores = jnp.einsum("bnlhs,bnmhs->bnhlm", Ccc, Bcc)
+    y_diag = jnp.einsum("bnhlm,bnhlm,bnmhp->bnlhp", scores, Lmat, xdt)
+
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)              # (B,nb,H,L)
+    states = jnp.einsum("bnlhs,bnhl,bnlhp->bnhps", Bcc, decay_states, xdt)
+
+    chunk_decay = jnp.exp(A_cum[..., -1])                        # (B,nb,H)
+
+    def body(h_prev, inp):
+        st, dec = inp                                           # (B,H,P,N),(B,H)
+        h_new = h_prev * dec[..., None, None] + st
+        return h_new, h_prev
+    h0 = jnp.zeros((Bsz, H, P, N), x.dtype)
+    hT, h_prevs = jax.lax.scan(
+        body, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                        # (B,nb,H,P,N)
+
+    state_decay_in = jnp.exp(A_cum)                              # (B,nb,H,L)
+    y_off = jnp.einsum("bnlhs,bnhps,bnhl->bnlhp", Ccc, h_prevs, state_decay_in)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y, hT
+
+
+def _branches(p, cfg, x, compute_dtype):
+    """Shared projection + conv for prefill path."""
+    z = dense_apply(p["in_z"], x, compute_dtype=compute_dtype)
+    xin = dense_apply(p["in_x"], x, compute_dtype=compute_dtype)
+    Bc = dense_apply(p["in_B"], x, compute_dtype=compute_dtype)
+    Cc = dense_apply(p["in_C"], x, compute_dtype=compute_dtype)
+    dt = dense_apply(p["in_dt"], x, compute_dtype=compute_dtype)
+    f32 = jnp.float32
+    xin = jax.nn.silu(_causal_conv(xin.astype(f32), p["conv_x"]["w"].astype(f32),
+                                   p["conv_x"]["b"].astype(f32)))
+    Bc = jax.nn.silu(_causal_conv(Bc.astype(f32), p["conv_B"]["w"].astype(f32),
+                                  p["conv_B"]["b"].astype(f32)))
+    Cc = jax.nn.silu(_causal_conv(Cc.astype(f32), p["conv_C"]["w"].astype(f32),
+                                  p["conv_C"]["b"].astype(f32)))
+    dt = jax.nn.softplus(dt.astype(f32) + p["dt_bias"].astype(f32))
+    return z, xin, Bc, Cc, dt
+
+
+def ssm_apply(p, cfg, x, *, compute_dtype=jnp.bfloat16, chunk: int = 128):
+    """Full Mamba-2 block (train/prefill). x: (B, S, d)."""
+    Bsz, S, d = x.shape
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z, xin, Bc, Cc, dt = _branches(p, cfg, x, compute_dtype)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(Bsz, S, H, P)
+    Bg = Bc.reshape(Bsz, S, G, N)
+    Cg = Cc.reshape(Bsz, S, G, N)
+    y, _ = ssd_scan(xh, dt, A, Bg, Cg, chunk=min(chunk, S))
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.ssm_d_inner).astype(compute_dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype)
+    y = rmsnorm_apply(p["norm"], y)
+    return dense_apply(p["out_proj"], y, compute_dtype=compute_dtype)
+
+
+def ssm_init_cache(cfg, batch, dtype=jnp.float32):
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    return {
+        "state": jnp.zeros((batch, H, P, N), dtype),
+        "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.ssm_d_inner), dtype),
+        "conv_B": jnp.zeros((batch, cfg.ssm_conv - 1, G * N), dtype),
+        "conv_C": jnp.zeros((batch, cfg.ssm_conv - 1, G * N), dtype),
+    }
+
+
+def _conv_step(hist, new, w, b):
+    """hist: (B, K-1, C); new: (B, C). Returns (out (B,C), new hist)."""
+    cat = jnp.concatenate([hist, new[:, None].astype(hist.dtype)], axis=1)
+    out = jnp.sum(cat.astype(jnp.float32) * w[None].astype(jnp.float32), axis=1) \
+        + b.astype(jnp.float32)
+    return out, cat[:, 1:]
+
+
+def ssm_decode(p, cfg, x, cache, *, compute_dtype=jnp.bfloat16):
+    """O(1) decode step. x: (B, 1, d). Returns (y, new_cache)."""
+    Bsz = x.shape[0]
+    H, P, N, G = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state, cfg.ssm_groups
+    z = dense_apply(p["in_z"], x, compute_dtype=compute_dtype)
+    xin = dense_apply(p["in_x"], x, compute_dtype=compute_dtype)[:, 0]
+    Bc = dense_apply(p["in_B"], x, compute_dtype=compute_dtype)[:, 0]
+    Cc = dense_apply(p["in_C"], x, compute_dtype=compute_dtype)[:, 0]
+    dt = dense_apply(p["in_dt"], x, compute_dtype=compute_dtype)[:, 0]
+
+    xo, hx = _conv_step(cache["conv_x"], xin, p["conv_x"]["w"], p["conv_x"]["b"])
+    Bo, hB = _conv_step(cache["conv_B"], Bc, p["conv_B"]["w"], p["conv_B"]["b"])
+    Co, hC = _conv_step(cache["conv_C"], Cc, p["conv_C"]["w"], p["conv_C"]["b"])
+    xo, Bo, Co = jax.nn.silu(xo), jax.nn.silu(Bo), jax.nn.silu(Co)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None])                                   # (B,H)
+    xh = xo.reshape(Bsz, H, P)
+    Bg = jnp.repeat(Bo.reshape(Bsz, G, N), H // G, axis=1)
+    Cg = jnp.repeat(Co.reshape(Bsz, G, N), H // G, axis=1)
+    dBx = jnp.einsum("bh,bhn,bhp->bhpn", dt, Bg, xh)
+    state = cache["state"].astype(jnp.float32) * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bhn->bhp", state, Cg) + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, cfg.ssm_d_inner).astype(compute_dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(compute_dtype)
+    y = rmsnorm_apply(p["norm"], y)
+    y = dense_apply(p["out_proj"], y, compute_dtype=compute_dtype)
+    new_cache = {"state": state.astype(cache["state"].dtype),
+                 "conv_x": hx, "conv_B": hB, "conv_C": hC}
+    return y, new_cache

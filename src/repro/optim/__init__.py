@@ -1,0 +1,1 @@
+from repro.optim.optimizers import sgd, momentum, adamw, cosine_schedule, Optimizer

@@ -1,0 +1,79 @@
+"""Minimal optimizer substrate (no optax offline): (init, update) pairs over
+pytrees. FAVAS local steps use plain SGD per the paper; AdamW/momentum are
+provided for the general trainer and beyond-paper server-side optimization
+(FedOpt-style), with per-client stacked states supported by construction
+(every op is leafwise, so a leading client axis broadcasts through).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_map
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], tuple]  # (g, state, params, step)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        new = tree_map(lambda p, g: p - lr * g.astype(p.dtype), params, grads)
+        return new, state
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        return tree_map(jnp.zeros_like, params)
+
+    def update(grads, state, params, step):
+        new_m = tree_map(lambda m, g: beta * m + g.astype(m.dtype), state, grads)
+        new_p = tree_map(lambda p, m: p - lr * m, params, new_m)
+        return new_p, new_m
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    """lr may be a float or a schedule fn(step) -> float."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = tree_map(jnp.zeros_like, params)
+        return {"m": z, "v": z}
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        m = tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(m_.dtype),
+                     state["m"], grads)
+        v = tree_map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(v_.dtype)),
+                     state["v"], grads)
+        lr_t = lr_fn(step)
+        c1 = 1.0 - b1 ** stepf
+        c2 = 1.0 - b2 ** stepf
+
+        def upd(p, m_, v_):
+            mh = m_ / c1
+            vh = v_ / c2
+            return (p - lr_t * (mh / (jnp.sqrt(vh) + eps) + weight_decay * p)
+                    ).astype(p.dtype)
+        return tree_map(upd, params, m, v), {"m": m, "v": v}
+    return Optimizer(init, update)
+
+
+def cosine_schedule(peak: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = peak * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak + (1 - floor) * peak * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return fn

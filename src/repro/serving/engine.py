@@ -1,0 +1,54 @@
+"""Slot-wise decode engine: adapts the model's ``decode_step`` (single
+shared position) to the continuous batcher's per-slot positions by vmapping
+the per-sample decode over the slot axis. The batched KV cache lives here
+as engine state; shapes stay static across steps.
+
+Axis bookkeeping: with scanned layers the cache leaves are (L, B, S, ...)
+— the slot axis is 1; list-structured caches put it at 0. We build a
+matching in/out-axes pytree once and vmap over it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import ModelConfig, init_cache, decode_step
+
+
+def _batch_axes_tree(cache, cfg: ModelConfig):
+    stacked = cfg.uniform_stack()
+
+    def one(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        return 1 if (stacked and "layers" in names) else 0
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 max_seq: int, cache_dtype=jnp.bfloat16):
+        self.params = params
+        self.cfg = cfg
+        self.B = batch_slots
+        self.cache = init_cache(cfg, batch_slots, max_seq, dtype=cache_dtype)
+        axes = _batch_axes_tree(self.cache, cfg)
+
+        def one(cache_row, token_row, pos):
+            c = jax.tree_util.tree_map(
+                lambda x, a: jnp.expand_dims(x, a), cache_row, axes)
+            logits, c = decode_step(params, cfg, c, token_row[None], pos)
+            c = jax.tree_util.tree_map(lambda x, a: jnp.squeeze(x, a), c, axes)
+            return logits[0], c
+
+        @jax.jit
+        def stepped(cache, tokens, pos):
+            logits, cache = jax.vmap(
+                one, in_axes=(axes, 0, 0), out_axes=(0, axes))(
+                cache, tokens, pos)
+            return logits, cache
+        self._step = stepped
+
+    def step_fn(self, tokens, pos):
+        """tokens (B,1) int32, pos (B,) int32 -> logits (B,1,V)."""
+        logits, self.cache = self._step(self.cache, tokens, pos)
+        return logits

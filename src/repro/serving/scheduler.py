@@ -1,0 +1,138 @@
+"""Continuous batching for the decode server (vLLM-style slot scheduler,
+TPU-shaped: fixed batch slots, static shapes, no paging — the KV cache is
+the dense (B, S, H, hd) block the dry-run lowers; slot reuse replaces
+paged attention, which has no TPU-native analogue at these shapes).
+
+The scheduler owns:
+  * a FIFO admission queue of Requests;
+  * B fixed decode slots, each a row of the batched KV cache;
+  * per-slot position counters and EOS/length termination.
+
+Every engine step decodes ONE token for all live slots (the decode_32k
+shape); prompt tokens are fed through the same step path (prefill-by-decode
+keeps shapes static; a fused prefill for long prompts is the prefill_32k
+path). Newly freed slots are refilled from the queue between steps — the
+"continuous" part.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pos: int = 0                 # next absolute position to write
+    prompt_left: int = 0
+
+    @property
+    def live(self) -> bool:
+        return self.req is not None
+
+
+class ContinuousBatcher:
+    """Drives ``decode_step`` over B slots with continuous admission.
+
+    decode_fn(token (B,1) int32, pos (B,) int32) -> logits (B, 1, V) and
+    must internally update the per-slot caches at each slot's own position
+    (the engine passes per-slot positions; see serve loop below).
+    """
+
+    def __init__(self, batch_slots: int, step_fn: Callable, *,
+                 vocab_raw: int, pad_id: int = 0, seed: int = 0):
+        self.B = batch_slots
+        self.step_fn = step_fn
+        self.vocab_raw = vocab_raw
+        self.pad_id = pad_id
+        self.queue: List[Request] = []
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.finished: Dict[int, Request] = {}
+        self.key = jax.random.PRNGKey(seed)
+        self.steps = 0
+
+    # ----------------------------------------------------------------- API
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(s.live for s in self.slots)
+
+    def run(self, max_steps: int = 10_000, temperature: float = 0.0):
+        while self.has_work() and self.steps < max_steps:
+            self.step(temperature)
+        return self.finished
+
+    # ---------------------------------------------------------------- core
+    def _admit(self):
+        for s in self.slots:
+            if not s.live and self.queue:
+                req = self.queue.pop(0)
+                s.req = req
+                s.pos = 0
+                s.prompt_left = len(req.prompt)
+
+    def _next_inputs(self):
+        toks = np.full((self.B, 1), self.pad_id, np.int32)
+        pos = np.zeros((self.B,), np.int32)
+        for i, s in enumerate(self.slots):
+            if not s.live:
+                continue
+            r = s.req
+            if s.prompt_left > 0:
+                toks[i, 0] = r.prompt[len(r.prompt) - s.prompt_left]
+            else:
+                toks[i, 0] = r.output[-1] if r.output else r.prompt[-1]
+            pos[i] = s.pos
+        return jnp.asarray(toks), jnp.asarray(pos)
+
+    def step(self, temperature: float = 0.0):
+        self._admit()
+        if not any(s.live for s in self.slots):
+            return
+        toks, pos = self._next_inputs()
+        logits = self.step_fn(toks, pos)                 # (B, 1, V)
+        self.steps += 1
+        logits = logits[:, -1, :self.vocab_raw]
+        if temperature > 0:
+            self.key, sub = jax.random.split(self.key)
+            nxt = np.asarray(jax.random.categorical(
+                sub, logits / temperature))
+        else:
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i, s in enumerate(self.slots):
+            if not s.live:
+                continue
+            r = s.req
+            s.pos += 1
+            if s.prompt_left > 0:
+                s.prompt_left -= 1
+                if s.prompt_left > 0:
+                    continue                             # still prefilling
+            token = int(nxt[i])
+            r.output.append(token)
+            stop = (len(r.output) >= r.max_new_tokens
+                    or (r.eos_id is not None and token == r.eos_id))
+            if stop:
+                r.done = True
+                self.finished[r.uid] = r
+                self.slots[i] = _Slot()                  # free the slot
+
+    # ------------------------------------------------------------- stats
+    def utilization(self) -> float:
+        return sum(s.live for s in self.slots) / self.B

@@ -1,0 +1,1 @@
+from repro.sharding.rules import param_specs, favas_state_specs, check_divisible

@@ -1,0 +1,12 @@
+from repro.utils.tree import (
+    tree_map,
+    tree_zeros_like,
+    tree_add,
+    tree_scale,
+    tree_where,
+    tree_param_count,
+    tree_flatten_concat,
+    tree_global_norm,
+    tree_stack,
+    tree_index,
+)

@@ -1,0 +1,39 @@
+"""Tiny metrics substrate: JSONL writer + rolling aggregator for the
+trainer/server CLIs (no tensorboard offline)."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from collections import deque
+from typing import Dict, Optional
+
+
+class MetricsLogger:
+    def __init__(self, path: Optional[str] = None, window: int = 20):
+        self.path = path
+        self._fh = None
+        if path:
+            os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+            self._fh = open(path, "a", buffering=1)
+        self.window: Dict[str, deque] = {}
+        self._wsize = window
+        self.t0 = time.time()
+
+    def log(self, step: int, **scalars):
+        rec = {"step": step, "wall_s": round(time.time() - self.t0, 3)}
+        for k, v in scalars.items():
+            v = float(v)
+            rec[k] = v
+            self.window.setdefault(k, deque(maxlen=self._wsize)).append(v)
+        if self._fh:
+            self._fh.write(json.dumps(rec) + "\n")
+        return rec
+
+    def mean(self, key: str) -> float:
+        w = self.window.get(key)
+        return sum(w) / len(w) if w else float("nan")
+
+    def close(self):
+        if self._fh:
+            self._fh.close()

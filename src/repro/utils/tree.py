@@ -1,0 +1,79 @@
+"""Pytree utilities shared across the framework.
+
+Every FAVAS state object is a pytree of jnp arrays; these helpers implement
+the vector-space operations the protocol needs (client messages, server
+averaging, potential diagnostics) without flattening to a single buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+tree_map = jax.tree_util.tree_map
+
+
+def tree_zeros_like(t):
+    return tree_map(jnp.zeros_like, t)
+
+
+def tree_add(a, b):
+    return tree_map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(t, c):
+    return tree_map(lambda x: x * c, t)
+
+
+def tree_axpy(a, x, y):
+    """a * x + y, leafwise."""
+    return tree_map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_where(pred, a, b):
+    """Leafwise select; ``pred`` may be a scalar bool or per-leaf-broadcastable."""
+    return tree_map(lambda ai, bi: jnp.where(pred, ai, bi), a, b)
+
+
+def tree_param_count(t) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(t))
+
+
+def tree_flatten_concat(t) -> jnp.ndarray:
+    """Flatten a pytree into one 1-D vector (diagnostics only)."""
+    leaves = jax.tree_util.tree_leaves(t)
+    return jnp.concatenate([jnp.ravel(x).astype(jnp.float32) for x in leaves])
+
+
+def tree_global_norm(t) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(t)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def tree_sq_dist(a, b) -> jnp.ndarray:
+    """|| a - b ||^2 summed over every leaf (used for the paper's potential Phi)."""
+    d = tree_map(
+        lambda x, y: jnp.sum(jnp.square(x.astype(jnp.float32) - y.astype(jnp.float32))),
+        a,
+        b,
+    )
+    return sum(jax.tree_util.tree_leaves(d))
+
+
+def tree_stack(trees):
+    """Stack a list of identical pytrees along a new leading axis."""
+    return tree_map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_index(t, i):
+    """Select index ``i`` along the leading axis of every leaf."""
+    return tree_map(lambda x: x[i], t)
+
+
+def tree_cast(t, dtype):
+    return tree_map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, t
+    )

@@ -1,0 +1,5 @@
+# NOTE: no XLA_FLAGS here on purpose — tests must see the real (1-device)
+# CPU topology. Only launch/dryrun.py (and subprocesses) force 512 devices.
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on the system's invariants:
+* LUQ quantization is unbiased and grid-valued (paper Remark 1/5);
+* the FAVAS reweighting is unbiased (Lemma 10, both alpha variants);
+* client sampling: S_t is uniform s-of-n without replacement;
+* speed moments: pmf normalization and bounds for E ∧ K.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import luq_quantize
+from repro.core.sampler import (sample_increments, sample_selection,
+                                moments_at_poll, make_lambdas)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 10_000))
+def test_luq_unbiased(bits, seed):
+    """E[Q(x)] = x: average many independent quantizations."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (256,))
+    reps = 400
+    keys = jax.random.split(jax.random.fold_in(key, 1), reps)
+    qs = jax.vmap(lambda k: luq_quantize(x, bits, k))(keys)
+    mean = np.asarray(jnp.mean(qs, axis=0))
+    scale = float(jnp.max(jnp.abs(x)))
+    # MC error ~ scale/sqrt(reps); allow 5 sigma
+    np.testing.assert_allclose(mean, np.asarray(x), atol=5 * scale / np.sqrt(reps))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 10_000))
+def test_luq_error_bound(bits, seed):
+    """||Q(x) - x||_inf <= scale (Remark 5's r_d exists)."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (128,)) * 10.0
+    q = luq_quantize(x, bits, jax.random.fold_in(key, 1))
+    scale = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(q - x))) <= scale + 1e-5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 6), st.integers(0, 10_000))
+def test_selection_mask_is_uniform_s_of_n(s, seed):
+    n = 8
+    s = min(s, n)
+    key = jax.random.PRNGKey(seed)
+    m = sample_selection(key, n, s)
+    assert float(m.sum()) == s
+    assert set(np.unique(np.asarray(m))) <= {0.0, 1.0}
+    # uniformity: over many draws each client selected ~ s/n
+    keys = jax.random.split(key, 2000)
+    ms = jax.vmap(lambda k: sample_selection(k, n, s))(keys)
+    freq = np.asarray(ms.mean(0))
+    np.testing.assert_allclose(freq, s / n, atol=0.06)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.05, 0.9), st.integers(0, 10_000))
+def test_increments_shifted_geometric(lam, seed):
+    lambdas = jnp.full((4096,), lam, jnp.float32)
+    d = sample_increments(jax.random.PRNGKey(seed), lambdas)
+    d = np.asarray(d)
+    assert d.min() >= 1
+    np.testing.assert_allclose(d.mean(), 1.0 / lam, rtol=0.15)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.floats(0.05, 0.95), st.integers(2, 30), st.floats(0.05, 0.8))
+def test_poll_moments_sane(lam, K, poll_p):
+    p_pos, e1, e2, einv = moments_at_poll(lam, K, poll_p)
+    assert 0.999 <= p_pos <= 1.0001          # shifted geometric: E >= 1 a.s.
+    assert 1.0 - 1e-6 <= e1 <= K + 1e-6
+    assert e1 ** 2 <= e2 + 1e-6 <= K * e1 + 1e-6
+    assert 1.0 / K - 1e-9 <= einv <= 1.0 + 1e-6
+
+
+def test_reweighting_unbiased_monte_carlo():
+    """Lemma 10: with Y_q iid mean mu and S = E ∧ K independent,
+    E[(1/alpha) sum_{q<=S} Y_q] = mu for both alpha variants."""
+    rng = np.random.default_rng(0)
+    K, lam, mu = 8, 0.35, 1.7
+    reps = 200_000
+    # per-poll steps: shifted geometric capped at K (single round poll)
+    E = np.minimum(rng.geometric(lam, reps), K)
+    Y = rng.normal(mu, 1.0, (reps, K))
+    csum = np.cumsum(Y, axis=1)
+    sums = csum[np.arange(reps), E - 1]
+    # stochastic alpha = P(E>0) * E∧K = E (P=1 here)
+    m1 = np.mean(sums / E)
+    # deterministic alpha = E[E∧K]
+    alpha_det = np.mean(E)
+    m2 = np.mean(sums) / alpha_det
+    se = 3.0 / np.sqrt(reps) * 4
+    assert abs(m1 - mu) < se * K
+    assert abs(m2 - mu) < se * K
+
+
+def test_make_lambdas_fractions():
+    lam = make_lambdas(30, slow_fraction=1 / 3, lam_fast=1 / 16, lam_slow=0.5)
+    assert lam.shape == (30,)
+    assert (lam == 0.5).sum() == 10
+    assert (lam == 1 / 16).sum() == 20

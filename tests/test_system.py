@@ -1,0 +1,115 @@
+"""End-to-end behaviour tests for the FAVAS system."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced_config
+from repro.core import (FavasConfig, favas_init, favas_round, favas_variance,
+                        favas_mu, client_lambdas, deterministic_alphas)
+from repro.models.model import init_params, loss_fn
+from repro.utils.tree import tree_map, tree_sq_dist
+
+
+def _setup(arch="qwen3-4b", n=4, s=2, K=4, eta=0.05, seed=0, **fkw):
+    cfg = get_reduced_config(arch)
+    fcfg = FavasConfig(n_clients=n, s_selected=s, local_steps=K, eta=eta,
+                       seed=seed, **fkw)
+    key = jax.random.PRNGKey(seed)
+    params = init_params(key, cfg)
+    state = favas_init(params, fcfg, key)
+    lambdas = jnp.asarray(client_lambdas(fcfg))
+
+    def lfn(p, b):
+        return loss_fn(p, cfg, b)
+    step = jax.jit(functools.partial(favas_round, cfg=fcfg, loss_fn=lfn,
+                                     lambdas=lambdas))
+    return cfg, fcfg, state, step
+
+
+def _batch(cfg, fcfg, rng, B=2, S=32):
+    toks = rng.integers(0, cfg.vocab_size_raw,
+                        (fcfg.n_clients, fcfg.R, B, S)).astype(np.int32)
+    return {"tokens": jnp.asarray(toks)}
+
+
+def test_favas_training_reduces_loss():
+    cfg, fcfg, state, step = _setup()
+    rng = np.random.default_rng(0)
+    losses = []
+    for _ in range(12):
+        state, m = step(state, _batch(cfg, fcfg, rng))
+        losses.append(float(m["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-4:]) < np.mean(losses[:4]) - 0.3
+
+
+def test_favas_round_counters_and_selection():
+    cfg, fcfg, state, step = _setup(n=6, s=3)
+    rng = np.random.default_rng(1)
+    for _ in range(5):
+        state, m = step(state, _batch(cfg, fcfg, rng))
+        assert float(m["selected"]) == 3
+        q = np.asarray(state.counters)
+        assert q.min() >= 0 and q.max() <= fcfg.local_steps
+
+
+def test_selected_clients_reset_to_server():
+    """After a round, every client is either at the new server model (just
+    selected, counter 0) or has nonzero counter."""
+    cfg, fcfg, state, step = _setup(n=4, s=2)
+    rng = np.random.default_rng(2)
+    state, _ = step(state, _batch(cfg, fcfg, rng))
+    q = np.asarray(state.counters)
+    for i in range(fcfg.n_clients):
+        ci = tree_map(lambda x: x[i], state.clients)
+        d = float(tree_sq_dist(ci, state.server))
+        if q[i] == 0:
+            assert d < 1e-6, f"selected client {i} not reset (d={d})"
+        else:
+            assert d > 0.0
+
+
+def test_variance_and_mu_finite():
+    cfg, fcfg, state, step = _setup()
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        state, _ = step(state, _batch(cfg, fcfg, rng))
+    assert np.isfinite(float(favas_variance(state)))
+    mu = favas_mu(state)
+    assert all(np.isfinite(np.asarray(x)).all()
+               for x in jax.tree_util.tree_leaves(mu))
+
+
+def test_deterministic_reweight_round():
+    cfg, fcfg, state, _ = _setup(reweight="deterministic")
+    det = jnp.asarray(deterministic_alphas(fcfg))
+    lambdas = jnp.asarray(client_lambdas(fcfg))
+
+    def lfn(p, b):
+        return loss_fn(p, cfg, b)
+    step = jax.jit(functools.partial(favas_round, cfg=fcfg, loss_fn=lfn,
+                                     lambdas=lambdas, det_alpha=det))
+    rng = np.random.default_rng(4)
+    state, m = step(state, _batch(cfg, fcfg, rng))
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_quantized_round_runs():
+    cfg, fcfg, state, step = _setup(quant_bits=4)
+    rng = np.random.default_rng(5)
+    state, m = step(state, _batch(cfg, fcfg, rng))
+    assert np.isfinite(float(m["loss"]))
+    assert np.isfinite(float(favas_variance(state)))
+
+
+def test_rounds_are_reproducible():
+    cfg, fcfg, s1, step = _setup(seed=7)
+    _, _, s2, _ = _setup(seed=7)
+    rng1, rng2 = np.random.default_rng(9), np.random.default_rng(9)
+    s1, m1 = step(s1, _batch(cfg, fcfg, rng1))
+    s2, m2 = step(s2, _batch(cfg, fcfg, rng2))
+    assert float(m1["loss"]) == float(m2["loss"])
+    assert float(tree_sq_dist(s1.server, s2.server)) == 0.0
