@@ -1,15 +1,38 @@
-"""Kernel microbenchmarks: fused Pallas path (interpret on CPU — structural
-check; MXU timings are a TPU artifact) vs the jnp oracle, plus the jitted
-oracle timing that the CPU CI actually optimizes.
+"""Kernel microbenchmarks for the FAVAS round hot path.
+
+Measures the REAL round aggregation path the engine runs
+(``favas_fused_ref`` — aggregation + selected-client reset in one
+expression, what ``core/round_engine.py`` executes on CPU and what the
+Pallas kernel streams on TPU) against the seed's unfused multi-pass
+arithmetic (eq. 3 msgs, line-10 sum, two reset sweeps as separate
+full-buffer passes). Also validates the multi-output Pallas kernel in
+interpret mode at a small shape (structural check; interpret-mode *timing*
+is meaningless — TPU is the target).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import timed, save_artifact
 from repro.kernels import ref
-from repro.kernels.ops import favas_aggregate_flat, luq_quantize
+from repro.kernels.favas_agg import favas_fused_pallas
+from repro.kernels.ops import luq_quantize
+
+
+def _round_unfused(server, clients, inits, alpha, mask, s):
+    """The seed's per-pass round arithmetic on flat buffers: each line is a
+    separate full-buffer sweep in the unfused HLO."""
+    a = alpha[:, None]
+    m = mask[:, None]
+    prog = clients - inits                                   # pass 1
+    msgs = inits + prog / a                                  # pass 2
+    total = jnp.sum(m * msgs, axis=0)                        # pass 3 (reduce)
+    server_new = (server + total) / (s + 1.0)
+    clients_new = m * server_new[None] + (1.0 - m) * clients  # pass 4
+    inits_new = m * server_new[None] + (1.0 - m) * inits      # pass 5
+    return server_new, clients_new, inits_new
 
 
 def run(quick=True):
@@ -21,23 +44,53 @@ def run(quick=True):
     inits = jax.random.normal(ks[2], (n, D))
     alpha = jax.random.uniform(ks[3], (n,), minval=1.0, maxval=8.0)
     mask = (jax.random.uniform(ks[4], (n,)) > 0.5).astype(jnp.float32)
+    s = 4.0
 
-    agg_ref = jax.jit(lambda *a: ref.favas_agg_ref(*a, 4.0))
-    t_ref = timed(agg_ref, server, clients, inits, alpha, mask, reps=10)
+    # full round: aggregation + reset — fused (engine path) vs seed multi-pass
+    fused = jax.jit(lambda *a: ref.favas_fused_ref(*a, s))
+    unfused = jax.jit(lambda *a: _round_unfused(*a, s))
+    t_fused = timed(fused, server, clients, inits, alpha, mask, reps=10)
+    t_unfused = timed(unfused, server, clients, inits, alpha, mask, reps=10)
+
+    # aggregation only (the seed's single-output kernel scope)
+    agg_ref = jax.jit(lambda *a: ref.favas_agg_ref(*a, s))
+    t_agg = timed(agg_ref, server, clients, inits, alpha, mask, reps=10)
 
     x = jax.random.normal(key, (D,))
     luq_ref_fn = jax.jit(lambda x, k: luq_quantize(x, 4, k, use_kernel=False))
     t_luq = timed(luq_ref_fn, x, key, reps=10)
 
+    # structural validation of the multi-output Pallas kernel (interpret)
+    nv, Dv = 4, 5000
+    kv = jax.random.split(jax.random.PRNGKey(1), 5)
+    sv = jax.random.normal(kv[0], (Dv,))
+    cv = jax.random.normal(kv[1], (nv, Dv))
+    iv = jax.random.normal(kv[2], (nv, Dv))
+    av = jax.random.uniform(kv[3], (nv,), minval=1.0, maxval=8.0)
+    mv = (jax.random.uniform(kv[4], (nv,)) > 0.5).astype(jnp.float32)
+    got = favas_fused_pallas(sv, cv, iv, av, mv, 2.0, interpret=True)
+    want = ref.favas_fused_ref(sv, cv, iv, av, mv, 2.0)
+    kernel_ok = all(
+        np.allclose(np.asarray(g), np.asarray(w), rtol=1e-6, atol=1e-6)
+        for g, w in zip(got, want))
+
+    bytes_round = (4 * n + 2) * D * 4        # r/w server + clients + inits
     bytes_agg = (2 * n + 2) * D * 4
     rows = {
-        "favas_agg_jnp_us": t_ref,
-        "favas_agg_gbps": bytes_agg / (t_ref * 1e-6) / 1e9,
+        "favas_round_fused_jnp_us": t_fused,
+        "favas_round_fused_gbps": bytes_round / (t_fused * 1e-6) / 1e9,
+        "favas_round_unfused_jnp_us": t_unfused,
+        "favas_round_unfused_gbps": bytes_round / (t_unfused * 1e-6) / 1e9,
+        "favas_agg_jnp_us": t_agg,
+        "favas_agg_gbps": bytes_agg / (t_agg * 1e-6) / 1e9,
         "luq_jnp_us": t_luq,
         "elements": D,
         "clients": n,
-        "note": "Pallas kernels validated vs these refs in tests/test_kernels.py;"
-                " interpret-mode timing is not meaningful, TPU is the target.",
+        "fused_kernel_interpret_matches_ref": bool(kernel_ok),
+        "note": "fused = the engine's real round path (agg + reset, one pass);"
+                " unfused = the seed's multi-pass arithmetic. Pallas kernels"
+                " validated vs these refs in tests/; interpret-mode timing is"
+                " not meaningful, TPU is the target.",
     }
     save_artifact("kernel_bench", rows)
     return rows

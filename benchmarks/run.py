@@ -59,7 +59,8 @@ def _derive(name: str, out) -> str:
             best = min(t, key=t.get)
             return f"best_bound={best}"
         if name == "kernel_bench":
-            return f"agg_jnp={out['favas_agg_jnp_us']:.0f}us"
+            return (f"round_fused={out['favas_round_fused_jnp_us']:.0f}us"
+                    f";unfused={out['favas_round_unfused_jnp_us']:.0f}us")
         if name == "ablation_reweight":
             return ";".join(
                 f"{k}={v['final_mean']:.3f}/rec{v['slow_class_recall']:.3f}"

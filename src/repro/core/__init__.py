@@ -4,10 +4,19 @@ from repro.core.favas import (
     FavasState,
     favas_init,
     favas_round,
+    favas_round_reference,
     favas_variance,
     favas_mu,
     client_lambdas,
     deterministic_alphas,
+)
+from repro.core.round_engine import (
+    EngineState,
+    FlatSpec,
+    RoundEngine,
+    engine_init,
+    engine_round,
+    make_flat_spec,
 )
 from repro.core.quant import luq_quantize, quantize_tree
 from repro.core.fl_sim import SimConfig, run_simulation

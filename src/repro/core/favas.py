@@ -6,7 +6,7 @@ State layout (all pytrees of jnp arrays):
   clients   : stacked client models w^i, leading axis n     (client+model sharded)
   inits     : stacked w_init^i (last server model received)
   counters  : q^i in {0..K} — local steps since last reset
-  opt_state : stacked per-client local-optimizer state (reset on selection)
+  stale     : rounds since the client was last selected (observability)
 
 One round (server timestep t -> t+1):
   1. draw per-round step increments d^i ~ shifted-Geom(lambda^i)  [App. C.2]
@@ -19,23 +19,26 @@ One round (server timestep t -> t+1):
   4. w_{t+1} = (w_t + sum_{i in S_t} w_unbiased^i) / (s+1)     [line 10]
   5. selected clients reset: w^i = w_init^i = w_{t+1}, q^i = 0
 
-The aggregation in step 4 is a masked weighted reduction over the client
-mesh axis — on hardware an all-reduce over ("pod","data"); `kernels/ops.py`
-provides the fused Pallas path for the per-leaf arithmetic.
+Steps 3–5 run as ONE fused pass over flat parameter buffers through
+``core.round_engine`` (Pallas kernel on TPU, jnp oracle on CPU); this module
+keeps the pytree API by flattening/unflattening at the call boundary. The
+seed's per-leaf ``tree_map`` implementation survives only as
+``favas_round_reference`` — the numerical oracle the engine is regression-
+tested against (tests/test_round_engine.py).
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sampler, reweight
+from repro.core import sampler, reweight, round_engine
 from repro.core.quant import quantize_tree
-from repro.utils.tree import tree_map, tree_sq_dist
+from repro.core.round_engine import EngineState, _local_training
+from repro.utils.tree import tree_map
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,12 +79,13 @@ class FavasState:
     clients: Any
     inits: Any
     counters: jnp.ndarray          # (n,) int32
+    stale: jnp.ndarray             # (n,) int32 — rounds since last selection
     key: jnp.ndarray
     t: jnp.ndarray                 # scalar int32
 
     def tree_flatten(self):
         return ((self.server, self.clients, self.inits, self.counters,
-                 self.key, self.t), None)
+                 self.stale, self.key, self.t), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -91,55 +95,62 @@ class FavasState:
 def favas_init(params, cfg: FavasConfig, key) -> FavasState:
     """All clients start from the server model (Algorithm 1 line 16)."""
     n = cfg.n_clients
-    stacked = tree_map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), params)
+    def stack(x):
+        return jnp.broadcast_to(x[None], (n,) + x.shape)
+    # clients and inits are DISTINCT buffers so a donating jit (e.g.
+    # launch/steps.py build_train_step) never sees the same buffer twice
     return FavasState(
         server=params,
-        clients=stacked,
-        inits=stacked,
+        clients=tree_map(stack, params),
+        inits=tree_map(lambda x: stack(x).copy(), params),
         counters=jnp.zeros((n,), jnp.int32),
+        stale=jnp.zeros((n,), jnp.int32),
         key=key,
         t=jnp.zeros((), jnp.int32),
     )
 
 
-def _local_training(loss_fn: Callable, cfg: FavasConfig, clients, counters,
-                    new_counters, batch):
-    """Masked K-step local SGD, vmapped over the client axis.
-
-    batch: pytree with leading dims (n, R, ...) — one microbatch per client
-    per potential local step."""
-
-    def one_client(params, data, q0, q1):
-        def step(p, inp):
-            k, batch_k = inp
-            loss, g = jax.value_and_grad(loss_fn)(p, batch_k)
-            live = ((q0 + k) < q1).astype(jnp.float32)
-            p = tree_map(lambda pp, gg: pp - cfg.eta * live * gg.astype(pp.dtype),
-                         p, g)
-            return p, loss * live
-        ks = jnp.arange(cfg.R)
-        params, losses = jax.lax.scan(step, params, (ks, data))
-        denom = jnp.maximum((q1 - q0).astype(jnp.float32), 1.0)
-        return params, jnp.sum(losses) / denom
-
-    return jax.vmap(one_client)(clients, batch, counters, new_counters)
-
-
 def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable,
-                lambdas, det_alpha: Optional[jnp.ndarray] = None):
-    """One server round. Returns (new_state, metrics). Jit/pjit this."""
+                lambdas, det_alpha: Optional[jnp.ndarray] = None,
+                use_kernel: Optional[bool] = None):
+    """One server round on the flat-buffer engine, pytree API preserved.
+    Returns (new_state, metrics). Jit/pjit this.
+
+    ``use_kernel``: None -> Pallas kernel on TPU, jnp oracle elsewhere;
+    True/False force the choice (True runs interpret mode off-TPU)."""
+    spec = round_engine.make_flat_spec(state.server)
+    est = EngineState(
+        server=round_engine.flatten_tree(spec, state.server),
+        clients=round_engine.flatten_stacked(spec, state.clients),
+        inits=round_engine.flatten_stacked(spec, state.inits),
+        counters=state.counters, stale=state.stale,
+        key=state.key, t=state.t)
+    est, metrics = round_engine.engine_round(
+        spec, est, batch, cfg=cfg, loss_fn=loss_fn, lambdas=lambdas,
+        det_alpha=det_alpha, use_kernel=use_kernel)
+    new_state = FavasState(
+        server=round_engine.unflatten_tree(spec, est.server),
+        clients=round_engine.unflatten_stacked(spec, est.clients),
+        inits=round_engine.unflatten_stacked(spec, est.inits),
+        counters=est.counters, stale=est.stale, key=est.key, t=est.t)
+    return new_state, metrics
+
+
+def favas_round_reference(state: FavasState, batch, *, cfg: FavasConfig,
+                          loss_fn: Callable, lambdas,
+                          det_alpha: Optional[jnp.ndarray] = None):
+    """The seed's per-leaf tree_map round — NOT on the hot path. Kept as the
+    numerical oracle for the engine's regression tests: same PRNG splits,
+    same arithmetic, leaf-by-leaf."""
     n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
     key, k_inc, k_sel, k_q = jax.random.split(state.key, 4)
 
-    # 1. heterogeneous progress this round
     d = sampler.sample_increments(k_inc, lambdas)              # (n,)
     new_counters = jnp.minimum(state.counters + d, K)
 
-    # 2. masked local SGD
-    trained, mean_loss = _local_training(loss_fn, cfg, state.clients,
-                                         state.counters, new_counters, batch)
+    trained, loss_sum, live = _local_training(
+        loss_fn, cfg, state.clients, state.counters, new_counters, batch)
 
-    # 3. unbiased client messages (eq. 3)
     if cfg.reweight == "deterministic":
         alpha = det_alpha
     else:
@@ -151,7 +162,6 @@ def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable
         lambda init, prog: init + prog / alpha.reshape((n,) + (1,) * (prog.ndim - 1)),
         state.inits, progress)
 
-    # 4. server aggregation (line 10): masked sum over the client axis
     m = sampler.sample_selection(k_sel, n, s)                  # (n,) float
     def agg(server_leaf, msg_leaf):
         mm = m.reshape((n,) + (1,) * (msg_leaf.ndim - 1))
@@ -160,7 +170,6 @@ def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable
                 ).astype(server_leaf.dtype)
     server_new = tree_map(agg, state.server, msgs)
 
-    # 5. reset selected clients to the fresh server model
     def reset(new_global, cur):
         mm = m.reshape((n,) + (1,) * (cur.ndim - 1))
         return (mm * new_global[None].astype(jnp.float32)
@@ -168,14 +177,16 @@ def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable
     clients_new = tree_map(reset, server_new, trained)
     inits_new = tree_map(reset, server_new, state.inits)
     counters_new = jnp.where(m > 0, 0, new_counters).astype(jnp.int32)
+    stale_new = jnp.where(m > 0, 0, state.stale + 1).astype(jnp.int32)
 
     new_state = FavasState(server=server_new, clients=clients_new,
                            inits=inits_new, counters=counters_new,
-                           key=key, t=state.t + 1)
+                           stale=stale_new, key=key, t=state.t + 1)
     metrics = {
-        "loss": jnp.mean(mean_loss),
+        "loss": jnp.sum(loss_sum) / jnp.maximum(jnp.sum(live), 1.0),
         "mean_steps": jnp.mean(new_counters.astype(jnp.float32)),
         "selected": jnp.sum(m),
+        "stale_rounds": jnp.max(stale_new).astype(jnp.float32),
     }
     return new_state, metrics
 

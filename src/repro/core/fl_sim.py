@@ -20,7 +20,6 @@ distributed production trainer for the assigned architectures lives in
 from __future__ import annotations
 
 import dataclasses
-import functools
 import heapq
 from typing import Callable, Dict, List
 
@@ -30,6 +29,8 @@ import numpy as np
 
 from repro.models.classifier import mlp_init, mlp_apply, classifier_loss, accuracy
 from repro.core.quant import quantize_tree
+from repro.core import round_engine
+from repro.kernels.ops import favas_fused_flat
 from repro.utils.tree import tree_map
 
 SERVER_WAIT = 4.0
@@ -97,8 +98,6 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
     rng = np.random.default_rng(cfg.seed)
     key = jax.random.PRNGKey(cfg.seed)
 
-    loss_fn = functools.partial(classifier_loss, apply_fn=mlp_apply,
-                                n_classes=n_classes)
     loss_fn = lambda p, x, y: classifier_loss(p, mlp_apply, x, y, n_classes)
     server = mlp_init(key, d_in, d_hidden, n_classes)
     n = cfg.n_clients
@@ -130,8 +129,22 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
         q = np.zeros(n)                   # steps since reset (cap K)
         credit = np.zeros(n)              # fractional time credit
         qkey = key
+        flat = cfg.method == "favas"
+        if flat:
+            # Flat-buffer engine state, held across rounds: the FAVAS poll
+            # (eq. 3 + line 10 + reset) runs as ONE fused pass per dtype
+            # bucket instead of ~6 tree_map sweeps; trees are materialized
+            # only at the sgd and eval boundaries (core/round_engine.py).
+            spec = round_engine.make_flat_spec(server)
+            srv_f = round_engine.flatten_tree(spec, server)
+            cli_f = tuple(jnp.broadcast_to(b[None], (n,) + b.shape).copy()
+                          for b in srv_f)
+            ini_f = cli_f
         while t_now < cfg.total_time:
             if t_now >= next_eval:
+                if flat:
+                    server = round_engine.unflatten_tree(spec, srv_f)
+                    clients = round_engine.unflatten_stacked(spec, cli_f)
                 record(); next_eval += cfg.eval_every
             # concurrent local compute during this round
             credit += round_dur
@@ -139,13 +152,15 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
             credit -= avail * step_time
             do = np.minimum(avail, cfg.K - q)
             xs, ys = batcher.round_batch(R)
+            if flat:
+                clients = round_engine.unflatten_stacked(spec, cli_f)
             clients = sgd(clients, jnp.asarray(xs), jnp.asarray(ys),
                           jnp.asarray(do, jnp.int32))
             q = q + do
             # server poll
             sel = rng.choice(n, cfg.s_selected, replace=False)
             mask = np.zeros(n); mask[sel] = 1.0
-            mj = jnp.asarray(mask)
+            mj = jnp.asarray(mask, jnp.float32)
             if cfg.method == "favas":
                 if cfg.reweight == "deterministic":
                     alpha_np = np.maximum(_det_alpha(cfg, step_time, round_dur), 1e-6)
@@ -154,26 +169,23 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
                 else:
                     alpha_np = np.maximum(q, 1.0)
                 alpha = jnp.asarray(alpha_np, jnp.float32)
-                prog = tree_map(jnp.subtract, clients, inits)
+                prog_f = (None,) * spec.n_buckets
                 if cfg.quant_bits > 0:
+                    # FAVAS[QNN]: quantize the TRANSMITTED progress only
+                    # (per-leaf LUQ scale, as in the seed) — unselected
+                    # clients keep their full-precision local state
                     qkey, sub = jax.random.split(qkey)
-                    prog = quantize_tree(prog, cfg.quant_bits, sub)
-                msgs = tree_map(
-                    lambda i_, p_: i_ + p_ / alpha.reshape((n,) + (1,) * (p_.ndim - 1)),
-                    inits, prog)
-                server = tree_map(
-                    lambda w, M: (w + jnp.sum(
-                        mj.reshape((n,) + (1,) * (M.ndim - 1)) * M, 0))
-                    / (cfg.s_selected + 1.0), server, msgs)
-                # reset selected
-                clients = tree_map(
-                    lambda W, w: jnp.where(
-                        mj.reshape((n,) + (1,) * (W.ndim - 1)) > 0, w[None], W),
-                    clients, server)
-                inits = tree_map(
-                    lambda I, w: jnp.where(
-                        mj.reshape((n,) + (1,) * (I.ndim - 1)) > 0, w[None], I),
-                    inits, server)
+                    inits = round_engine.unflatten_stacked(spec, ini_f)
+                    prog = quantize_tree(tree_map(jnp.subtract, clients, inits),
+                                         cfg.quant_bits, sub)
+                    prog_f = round_engine.flatten_stacked(spec, prog)
+                cli_f = round_engine.flatten_stacked(spec, clients)
+                out = [favas_fused_flat(w, c, i, alpha, mj,
+                                        float(cfg.s_selected), progress=p)
+                       for w, c, i, p in zip(srv_f, cli_f, ini_f, prog_f)]
+                srv_f = tuple(o[0] for o in out)
+                cli_f = tuple(o[1] for o in out)
+                ini_f = tuple(o[2] for o in out)
                 q[sel] = 0.0
             else:  # QuAFL (Zakerinia et al. 2022): convex combos, no reweight
                 server_new = tree_map(
@@ -189,6 +201,9 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
                 q[sel] = 0.0
             t_now += round_dur
             srv_step += 1
+        if flat:
+            server = round_engine.unflatten_tree(spec, srv_f)
+            clients = round_engine.unflatten_stacked(spec, cli_f)
 
     elif cfg.method == "fedavg":
         sgd = _local_sgd_single(loss_fn, cfg.eta)

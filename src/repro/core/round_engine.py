@@ -1,0 +1,355 @@
+"""Flat-buffer FAVAS round engine.
+
+The FAVAS server round is memory-bound: every byte of every resident
+client's parameters crosses HBM each round (eq. 3 reweight, line-10
+aggregation, line-11/12 selected-client reset). The seed implementation did
+that as ~6 separate full-parameter ``tree_map`` passes per round. This
+engine instead:
+
+* flattens the parameter pytree ONCE into contiguous flat buffers — a
+  ``(Dp,)`` server vector and ``(n, Dp)`` clients / inits matrices per
+  dtype bucket, pre-padded to the kernel lane tile so the Pallas path never
+  re-pads — and holds them across rounds;
+* runs the whole aggregation + reset as ONE streamed pass per tile through
+  the multi-output Pallas kernel ``kernels.favas_agg.favas_fused_pallas``
+  (TPU; interpret for validation) or its jnp oracle
+  ``kernels.ref.favas_fused_ref`` (CPU default — XLA fuses the flat-buffer
+  expression into a single loop, which is already the oracle's point);
+* unflattens only at the boundaries that need model structure: the vmapped
+  local-SGD step (which needs the pytree for the model's loss), evaluation,
+  and checkpoint export.
+
+``core.favas.favas_round`` keeps the seed's pytree API by wrapping
+``engine_round`` with flatten/unflatten at the call boundary;
+``launch.train`` uses ``RoundEngine`` directly so the buffers genuinely
+persist across rounds and the jitted round donates them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampler, reweight
+from repro.core.quant import quantize_tree
+from repro.kernels.favas_agg import TILE
+from repro.kernels.ops import favas_fused_flat
+from repro.utils.tree import tree_map
+
+
+# ---------------------------------------------------------------------------
+# FlatSpec: static description of the pytree <-> flat-buffer mapping
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FlatSpec:
+    """Static (hashable, trace-free) layout of a parameter pytree flattened
+    into one contiguous buffer per distinct leaf dtype ("bucket").
+
+    Leaves keep their original dtype; mixed-precision trees get one buffer
+    per dtype so no storage precision is lost. Buffer length is padded up to
+    a multiple of the kernel lane tile; the padded tail is zero-initialized
+    and provably stays zero under the fused round update (the masked padded
+    "server" tail aggregates only zeros).
+    """
+    treedef: Any
+    shapes: tuple                 # per leaf, original shape
+    dtypes: tuple                 # per leaf, jnp dtype name (str, hashable)
+    bucket_of: tuple              # per leaf, bucket index
+    offsets: tuple                # per leaf, start offset within its bucket
+    bucket_dtypes: tuple          # per bucket, dtype name
+    bucket_sizes: tuple           # per bucket, unpadded element count
+    bucket_padded: tuple          # per bucket, padded element count
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_dtypes)
+
+
+def make_flat_spec(tree, *, tile: int = TILE) -> FlatSpec:
+    """Build the layout from a pytree of arrays / ShapeDtypeStructs."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    shapes, dtypes, bucket_of, offsets = [], [], [], []
+    bucket_dtypes, cursors = [], []
+    for leaf in leaves:
+        dt = jnp.dtype(leaf.dtype).name
+        if dt not in bucket_dtypes:
+            bucket_dtypes.append(dt)
+            cursors.append(0)
+        b = bucket_dtypes.index(dt)
+        size = 1
+        for d in leaf.shape:
+            size *= int(d)
+        shapes.append(tuple(leaf.shape))
+        dtypes.append(dt)
+        bucket_of.append(b)
+        offsets.append(cursors[b])
+        cursors[b] += size
+    padded = tuple(c + ((-c) % tile) for c in cursors)
+    return FlatSpec(treedef=treedef, shapes=tuple(shapes), dtypes=tuple(dtypes),
+                    bucket_of=tuple(bucket_of), offsets=tuple(offsets),
+                    bucket_dtypes=tuple(bucket_dtypes),
+                    bucket_sizes=tuple(cursors), bucket_padded=padded)
+
+
+def flatten_tree(spec: FlatSpec, tree) -> tuple:
+    """Pytree -> tuple of (Dp_b,) flat buffers (one per dtype bucket)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    parts = [[] for _ in range(spec.n_buckets)]
+    for leaf, b in zip(leaves, spec.bucket_of):
+        parts[b].append(jnp.ravel(leaf))
+    out = []
+    for b in range(spec.n_buckets):
+        buf = jnp.concatenate(parts[b]) if len(parts[b]) > 1 else parts[b][0]
+        pad = spec.bucket_padded[b] - spec.bucket_sizes[b]
+        if pad:
+            buf = jnp.pad(buf, (0, pad))
+        out.append(buf)
+    return tuple(out)
+
+
+def flatten_stacked(spec: FlatSpec, tree) -> tuple:
+    """Client-stacked pytree (leading axis n) -> tuple of (n, Dp_b)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    n = leaves[0].shape[0]
+    parts = [[] for _ in range(spec.n_buckets)]
+    for leaf, b in zip(leaves, spec.bucket_of):
+        parts[b].append(leaf.reshape(n, -1))
+    out = []
+    for b in range(spec.n_buckets):
+        buf = (jnp.concatenate(parts[b], axis=1) if len(parts[b]) > 1
+               else parts[b][0])
+        pad = spec.bucket_padded[b] - spec.bucket_sizes[b]
+        if pad:
+            buf = jnp.pad(buf, ((0, 0), (0, pad)))
+        out.append(buf)
+    return tuple(out)
+
+
+def unflatten_tree(spec: FlatSpec, bufs: Sequence):
+    """Tuple of (Dp_b,) buffers -> pytree with the original leaf layout."""
+    leaves = []
+    for shape, dt, b, off in zip(spec.shapes, spec.dtypes, spec.bucket_of,
+                                 spec.offsets):
+        size = 1
+        for d in shape:
+            size *= d
+        leaves.append(jax.lax.dynamic_slice_in_dim(bufs[b], off, size)
+                      .reshape(shape))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def unflatten_stacked(spec: FlatSpec, bufs: Sequence):
+    """Tuple of (n, Dp_b) buffers -> client-stacked pytree."""
+    leaves = []
+    for shape, dt, b, off in zip(spec.shapes, spec.dtypes, spec.bucket_of,
+                                 spec.offsets):
+        n = bufs[b].shape[0]
+        size = 1
+        for d in shape:
+            size *= d
+        leaves.append(
+            jax.lax.dynamic_slice_in_dim(bufs[b], off, size, axis=1)
+            .reshape((n,) + shape))
+    return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Engine state (flat buffers held across rounds)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EngineState:
+    server: tuple                  # per bucket (Dp_b,)
+    clients: tuple                 # per bucket (n, Dp_b)
+    inits: tuple                   # per bucket (n, Dp_b)
+    counters: jnp.ndarray          # (n,) int32 — q^i, local steps since reset
+    stale: jnp.ndarray             # (n,) int32 — rounds since last selection
+    key: jnp.ndarray
+    t: jnp.ndarray                 # scalar int32
+
+    def tree_flatten(self):
+        return ((self.server, self.clients, self.inits, self.counters,
+                 self.stale, self.key, self.t), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
+    """All clients start from the server model (Algorithm 1 line 16)."""
+    n = cfg.n_clients
+    server = flatten_tree(spec, params)
+    # materialize clients and inits as DISTINCT buffers: the jitted round
+    # donates the whole state, and aliased inputs cannot both be donated
+    clients = tuple(jnp.broadcast_to(b[None], (n,) + b.shape).copy()
+                    for b in server)
+    inits = tuple(jnp.broadcast_to(b[None], (n,) + b.shape).copy()
+                  for b in server)
+    return EngineState(
+        server=server, clients=clients, inits=inits,
+        counters=jnp.zeros((n,), jnp.int32),
+        stale=jnp.zeros((n,), jnp.int32),
+        key=key, t=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# The round
+# ---------------------------------------------------------------------------
+
+def _local_training(loss_fn: Callable, cfg, clients_tree, counters,
+                    new_counters, batch):
+    """Masked R-step local SGD, vmapped over the client axis.
+
+    Returns (trained_tree, loss_sum (n,), live_steps (n,)) — the raw masked
+    loss sum and live-step count per client, so the caller can form a
+    live-step-weighted aggregate instead of averaging in idle clients.
+
+    batch: pytree with leading dims (n, R, ...) — one microbatch per client
+    per potential local step."""
+
+    def one_client(params, data, q0, q1):
+        def step(p, inp):
+            k, batch_k = inp
+            loss, g = jax.value_and_grad(loss_fn)(p, batch_k)
+            live = ((q0 + k) < q1).astype(jnp.float32)
+            p = tree_map(lambda pp, gg: pp - cfg.eta * live * gg.astype(pp.dtype),
+                         p, g)
+            return p, loss * live
+        ks = jnp.arange(cfg.R)
+        params, losses = jax.lax.scan(step, params, (ks, data))
+        return params, jnp.sum(losses), (q1 - q0).astype(jnp.float32)
+
+    return jax.vmap(one_client)(clients_tree, batch, counters, new_counters)
+
+
+def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
+                 loss_fn: Callable, lambdas,
+                 det_alpha: Optional[jnp.ndarray] = None,
+                 use_kernel: Optional[bool] = None):
+    """One FAVAS server round on flat buffers. Pure; jit/pjit this.
+
+    The hot path is: unflatten clients -> vmapped local SGD -> flatten ->
+    ONE fused aggregation+reset pass per dtype bucket. No per-leaf tree_map
+    touches the aggregation."""
+    n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
+    key, k_inc, k_sel, k_q = jax.random.split(state.key, 4)
+
+    # 1. heterogeneous progress this round
+    d = sampler.sample_increments(k_inc, lambdas)              # (n,)
+    new_counters = jnp.minimum(state.counters + d, K)
+
+    # 2. masked local SGD (needs model structure -> tree space)
+    clients_tree = unflatten_stacked(spec, state.clients)
+    trained_tree, loss_sum, live = _local_training(
+        loss_fn, cfg, clients_tree, state.counters, new_counters, batch)
+
+    # 3. eq. (3) reweight coefficients
+    if cfg.reweight == "deterministic":
+        alpha = det_alpha
+    else:
+        alpha = reweight.alpha_stochastic(new_counters, p_pos=1.0)
+
+    progress = (None,) * spec.n_buckets
+    if cfg.quant_bits > 0:
+        # FAVAS[QNN]: quantize the TRANSMITTED progress in tree space
+        # (per-leaf LUQ scale, same per-leaf keys as the seed
+        # implementation). Quantization is communication-only (Remark 1):
+        # the fused pass aggregates Q(progress) but resets unselected
+        # clients to their full-precision trained state.
+        inits_tree = unflatten_stacked(spec, state.inits)
+        prog = quantize_tree(tree_map(jnp.subtract, trained_tree, inits_tree),
+                             cfg.quant_bits, k_q)
+        progress = flatten_stacked(spec, prog)
+
+    trained = flatten_stacked(spec, trained_tree)
+
+    # 4+5. fused aggregation + selected-client reset: one pass per bucket
+    m = sampler.sample_selection(k_sel, n, s)                  # (n,) float
+    server_new, clients_new, inits_new = [], [], []
+    for b in range(spec.n_buckets):
+        srv, cli, ini = favas_fused_flat(
+            state.server[b], trained[b], state.inits[b], alpha, m, float(s),
+            progress=progress[b], use_kernel=use_kernel)
+        server_new.append(srv)
+        clients_new.append(cli)
+        inits_new.append(ini)
+
+    counters_new = jnp.where(m > 0, 0, new_counters).astype(jnp.int32)
+    stale_new = jnp.where(m > 0, 0, state.stale + 1).astype(jnp.int32)
+
+    new_state = EngineState(server=tuple(server_new),
+                            clients=tuple(clients_new),
+                            inits=tuple(inits_new),
+                            counters=counters_new, stale=stale_new,
+                            key=key, t=state.t + 1)
+    total_live = jnp.sum(live)
+    metrics = {
+        # live-step-weighted: clients that ran zero live steps this round
+        # contribute nothing instead of dragging the mean toward 0, and a
+        # stale straggler's high loss is weighted by its actual step count.
+        "loss": jnp.sum(loss_sum) / jnp.maximum(total_live, 1.0),
+        "mean_steps": jnp.mean(new_counters.astype(jnp.float32)),
+        "selected": jnp.sum(m),
+        "stale_rounds": jnp.max(stale_new).astype(jnp.float32),
+    }
+    return new_state, metrics
+
+
+def engine_server_params(spec: FlatSpec, state: EngineState):
+    """Current server model as the original parameter pytree."""
+    return unflatten_tree(spec, state.server)
+
+
+def engine_variance(state: EngineState) -> jnp.ndarray:
+    """sum_i ||w^i - w_t||^2 straight off the flat buffers (padded tails are
+    identical between clients and server, so they contribute zero)."""
+    tot = jnp.zeros((), jnp.float32)
+    for srv, cli in zip(state.server, state.clients):
+        diff = cli.astype(jnp.float32) - srv[None].astype(jnp.float32)
+        tot = tot + jnp.sum(jnp.square(diff))
+    return tot
+
+
+# ---------------------------------------------------------------------------
+# RoundEngine: holds the static spec + a donated jitted round
+# ---------------------------------------------------------------------------
+
+class RoundEngine:
+    """Convenience wrapper owning the FlatSpec and the jitted, buffer-donating
+    round. The state never leaves flat form between rounds."""
+
+    def __init__(self, params_template, cfg, loss_fn: Callable, *,
+                 lambdas=None, det_alpha=None, use_kernel: Optional[bool] = None):
+        from repro.core.favas import client_lambdas  # cycle-free at call time
+        self.cfg = cfg
+        self.spec = make_flat_spec(params_template)
+        self.loss_fn = loss_fn
+        self.lambdas = (jnp.asarray(lambdas) if lambdas is not None
+                        else jnp.asarray(client_lambdas(cfg)))
+        self.det_alpha = None if det_alpha is None else jnp.asarray(det_alpha)
+        self.use_kernel = use_kernel
+        self._round = jax.jit(
+            functools.partial(engine_round, self.spec, cfg=self.cfg,
+                              loss_fn=self.loss_fn, lambdas=self.lambdas,
+                              det_alpha=self.det_alpha,
+                              use_kernel=self.use_kernel),
+            donate_argnums=(0,))
+
+    def init_state(self, params, key) -> EngineState:
+        return engine_init(self.spec, params, self.cfg, key)
+
+    def step(self, state: EngineState, batch):
+        """Jitted round; donates the previous state's buffers."""
+        return self._round(state, batch)
+
+    def server_params(self, state: EngineState):
+        return engine_server_params(self.spec, state)
+
+    def variance(self, state: EngineState) -> jnp.ndarray:
+        return engine_variance(state)

@@ -1,6 +1,9 @@
 # Pallas TPU kernels for the paper's memory-bound hot spots:
 #   favas_agg — fused masked reweighted client aggregation (Alg. 1 line 10 + eq. 3)
+#               and the multi-output full-round variant (agg + client/init reset)
+#               driving core/round_engine.py
 #   luq       — LUQ logarithmic unbiased quantization (FAVAS[QNN], Remark 1)
 # ops.py = jit wrappers (kernel on TPU, interpret=True on CPU);
 # ref.py = pure-jnp oracles; tests sweep shapes/dtypes with assert_allclose.
-from repro.kernels.ops import favas_aggregate_flat, favas_aggregate_tree, luq_quantize
+from repro.kernels.ops import (favas_aggregate_flat, favas_aggregate_tree,
+                               favas_fused_flat, luq_quantize)

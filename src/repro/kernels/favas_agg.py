@@ -11,7 +11,25 @@ out 8 KiB — comfortably inside ~16 MiB VMEM. The lane dim (TILE) is a
 multiple of 128 for clean (8,128) vreg tiling; the client dim rides the
 sublane axis.
 
-Validated with interpret=True on CPU against ``ref.favas_agg_ref``.
+Two entry points:
+
+* ``favas_agg_pallas`` — the original single-output aggregation (line 10 only);
+  kept for the leafwise ``ops.favas_aggregate_tree`` path and its tests.
+* ``favas_fused_pallas`` — the full-round multi-output kernel used by the
+  flat-buffer round engine (``core/round_engine.py``): one streamed pass per
+  (n, TILE) block produces the new server tile AND the reset clients/inits
+  tiles (Algorithm 1 lines 10–12), so the round does exactly one HBM read and
+  one HBM write per resident byte instead of re-reading everything for the
+  two reset passes.
+
+VMEM budget for the fused kernel @ TILE=2048, n<=64, fp32: in blocks
+(2n+1)*TILE*4B ≈ 1.06 MiB + out blocks ≈ 1.06 MiB — well inside ~16 MiB.
+
+Validated with interpret=True on CPU against ``ref.favas_agg_ref`` /
+``ref.favas_fused_ref``: the kernel body uses the same jnp expressions
+(including true division) as the oracle, so fp32 parity holds to 1 ULP —
+the only daylight is XLA compiling the two separately (FMA contraction,
+blocked reductions).
 """
 from __future__ import annotations
 
@@ -66,3 +84,99 @@ def favas_agg_pallas(server, clients, inits, alpha, mask, s: float,
         interpret=interpret,
     )(server.reshape(1, Dp), clients, inits, coef, maskc)
     return out.reshape(Dp)[:D]
+
+
+def _fused_kernel(server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
+                  srv_out_ref, cli_out_ref, ini_out_ref, *, s1: float):
+    """One (n, TILE) block of the full round update:
+      msg_i   = init_i + (client_i - init_i) / alpha_i          (eq. 3)
+      server' = (server + sum_i mask_i * msg_i) / (s+1)         (line 10)
+      client' = mask_i ? server' : client_i                     (line 11)
+      init'   = mask_i ? server' : init_i                       (line 12)
+    alpha/mask (n, 1); server (1, TILE); clients/inits (n, TILE).
+    All arithmetic in fp32; expressions mirror ref.favas_fused_ref exactly
+    (true division, same reduction axis) so fp32 parity holds to 1 ULP."""
+    c = clients_ref[...].astype(jnp.float32)          # (n, T)
+    i = inits_ref[...].astype(jnp.float32)            # (n, T)
+    a = alpha_ref[...].astype(jnp.float32)            # (n, 1)
+    m = mask_ref[...].astype(jnp.float32)             # (n, 1)
+    msg = i + (c - i) / a
+    total = jnp.sum(m * msg, axis=0, keepdims=True)   # (1, T)
+    s_new = (server_ref[...].astype(jnp.float32) + total) / s1
+    srv_out_ref[...] = s_new.astype(srv_out_ref.dtype)
+    cli_out_ref[...] = (m * s_new + (1.0 - m) * c).astype(cli_out_ref.dtype)
+    ini_out_ref[...] = (m * s_new + (1.0 - m) * i).astype(ini_out_ref.dtype)
+
+
+def _fused_kernel_prog(server_ref, clients_ref, inits_ref, prog_ref, alpha_ref,
+                       mask_ref, srv_out_ref, cli_out_ref, ini_out_ref,
+                       *, s1: float):
+    """FAVAS[QNN] variant: the transmitted progress is supplied explicitly
+    (already quantized), msg_i = init_i + prog_i / alpha_i, while the client
+    reset keeps the client's own full-precision state — quantization is
+    communication-only (paper Remark 1)."""
+    c = clients_ref[...].astype(jnp.float32)          # (n, T)
+    i = inits_ref[...].astype(jnp.float32)            # (n, T)
+    p = prog_ref[...].astype(jnp.float32)             # (n, T)
+    a = alpha_ref[...].astype(jnp.float32)            # (n, 1)
+    m = mask_ref[...].astype(jnp.float32)             # (n, 1)
+    msg = i + p / a
+    total = jnp.sum(m * msg, axis=0, keepdims=True)   # (1, T)
+    s_new = (server_ref[...].astype(jnp.float32) + total) / s1
+    srv_out_ref[...] = s_new.astype(srv_out_ref.dtype)
+    cli_out_ref[...] = (m * s_new + (1.0 - m) * c).astype(cli_out_ref.dtype)
+    ini_out_ref[...] = (m * s_new + (1.0 - m) * i).astype(ini_out_ref.dtype)
+
+
+def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
+                       *, progress=None, interpret: bool = True):
+    """Fused aggregation + selected-client reset over flat buffers.
+
+    server: (D,) f32/bf16; clients/inits: (n, D); alpha/mask: (n,).
+    ``progress``: optional (n, D) explicit transmitted progress (e.g. LUQ-
+    quantized client deltas); None means progress = clients - inits,
+    computed in-kernel. Client resets always use ``clients`` (full
+    precision) — ``progress`` affects only the transmitted message.
+    Returns (server_new (D,), clients_new (n, D), inits_new (n, D))."""
+    n, D = clients.shape
+    pad = (-D) % TILE
+    if pad:
+        server = jnp.pad(server, (0, pad))
+        clients = jnp.pad(clients, ((0, 0), (0, pad)))
+        inits = jnp.pad(inits, ((0, 0), (0, pad)))
+        if progress is not None:
+            progress = jnp.pad(progress, ((0, 0), (0, pad)))
+    Dp = D + pad
+    alphac = jnp.maximum(alpha.astype(jnp.float32), 1e-9).reshape(n, 1)
+    maskc = mask.astype(jnp.float32).reshape(n, 1)
+    grid = (Dp // TILE,)
+    row_spec = pl.BlockSpec((n, TILE), lambda i: (0, i))
+    scalar_spec = pl.BlockSpec((n, 1), lambda i: (0, 0))
+    srv_spec = pl.BlockSpec((1, TILE), lambda i: (0, i))
+    if progress is None:
+        kernel = functools.partial(_fused_kernel, s1=float(s) + 1.0)
+        in_specs = [srv_spec, row_spec, row_spec, scalar_spec, scalar_spec]
+        operands = (server.reshape(1, Dp), clients, inits, alphac, maskc)
+    else:
+        kernel = functools.partial(_fused_kernel_prog, s1=float(s) + 1.0)
+        in_specs = [srv_spec, row_spec, row_spec, row_spec, scalar_spec,
+                    scalar_spec]
+        operands = (server.reshape(1, Dp), clients, inits, progress, alphac,
+                    maskc)
+    srv, cli, ini = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=(
+            srv_spec,
+            row_spec,
+            row_spec,
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((1, Dp), server.dtype),
+            jax.ShapeDtypeStruct((n, Dp), clients.dtype),
+            jax.ShapeDtypeStruct((n, Dp), inits.dtype),
+        ),
+        interpret=interpret,
+    )(*operands)
+    return srv.reshape(Dp)[:D], cli[:, :D], ini[:, :D]

@@ -12,12 +12,30 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.favas_agg import favas_agg_pallas
+from repro.kernels.favas_agg import favas_agg_pallas, favas_fused_pallas
 from repro.kernels.luq import luq_pallas
 
 
 def _is_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def favas_fused_flat(server, clients, inits, alpha, mask, s: float,
+                     *, progress=None, use_kernel=None):
+    """Fused full-round aggregation + reset over flat buffers; see
+    kernels/favas_agg.py. Returns (server_new, clients_new, inits_new).
+    ``progress``: optional explicit (quantized) transmitted progress.
+
+    ``use_kernel=None`` (auto) picks the Pallas kernel on TPU and the jnp
+    oracle on CPU (interpret mode is a validation tool, not a fast path);
+    True forces the kernel (interpret off-TPU), False forces the oracle."""
+    if use_kernel is None:
+        use_kernel = _is_tpu()
+    if use_kernel:
+        return favas_fused_pallas(server, clients, inits, alpha, mask, s,
+                                  progress=progress, interpret=not _is_tpu())
+    return ref.favas_fused_ref(server, clients, inits, alpha, mask, s,
+                               progress=progress)
 
 
 def favas_aggregate_flat(server, clients, inits, alpha, mask, s: float,

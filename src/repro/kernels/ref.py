@@ -21,6 +21,30 @@ def favas_agg_ref(server, clients, inits, alpha, mask, s: float):
     return ((server.astype(jnp.float32) + total) / (s + 1.0)).astype(server.dtype)
 
 
+def favas_fused_ref(server, clients, inits, alpha, mask, s: float,
+                    *, progress=None):
+    """Full-round fused oracle: aggregation (line 10) + selected-client reset
+    (lines 11–12) over flat buffers. Mirrors ``favas_agg._fused_kernel``
+    expression-for-expression, so kernel parity holds to 1 fp32 ULP.
+
+    server: (D,), clients/inits: (n, D), alpha/mask: (n,). ``progress``:
+    optional explicit (quantized) transmitted progress; None means
+    clients - inits. Resets always use full-precision ``clients``.
+    Returns (server_new, clients_new, inits_new)."""
+    c = clients.astype(jnp.float32)
+    i = inits.astype(jnp.float32)
+    a = jnp.maximum(alpha.astype(jnp.float32), 1e-9)[:, None]
+    m = mask.astype(jnp.float32)[:, None]
+    p = (c - i) if progress is None else progress.astype(jnp.float32)
+    msg = i + p / a
+    total = jnp.sum(m * msg, axis=0, keepdims=True)
+    s_new = (server.astype(jnp.float32)[None] + total) / (float(s) + 1.0)
+    server_new = s_new[0].astype(server.dtype)
+    clients_new = (m * s_new + (1.0 - m) * c).astype(clients.dtype)
+    inits_new = (m * s_new + (1.0 - m) * i).astype(inits.dtype)
+    return server_new, clients_new, inits_new
+
+
 def luq_ref(x, u_prune, u_round, scale, bits: int):
     """LUQ log-domain unbiased quantization (see core/quant.py), with the
     randomness and the global scale passed in (kernel parity)."""

@@ -28,6 +28,25 @@ from repro.launch.roofline import parse_hlo_collectives, build_report
 SHAPES = list(STEPS.INPUT_SHAPES)
 
 
+def normalize_cost_analysis(cost) -> dict:
+    """``compiled.cost_analysis()`` returns a dict on older JAX, a LIST of
+    per-computation dicts on newer JAX (one per executable computation), or
+    None. Normalize to one flat dict, summing numeric keys across
+    computations, so ``cost.get("flops")`` works everywhere."""
+    if cost is None:
+        return {}
+    if isinstance(cost, dict):
+        return dict(cost)
+    merged = {}
+    for entry in cost:
+        for k, v in (entry or {}).items():
+            if isinstance(v, (int, float)):
+                merged[k] = merged.get(k, 0) + v
+            else:
+                merged.setdefault(k, v)
+    return merged
+
+
 def run_one(arch: str, shape_name: str, mesh_name: str, *, out_dir=None,
             verbose=True, hlo_dir=None, variant="base"):
     cfg = get_config(arch)
@@ -59,7 +78,7 @@ def run_one(arch: str, shape_name: str, mesh_name: str, *, out_dir=None,
             compiled = lowered.compile()
             t_comp = time.time()
         ma = compiled.memory_analysis()
-        cost = compiled.cost_analysis() or {}
+        cost = normalize_cost_analysis(compiled.cost_analysis())
         hlo = compiled.as_text()
         coll = parse_hlo_collectives(
             hlo, bf16_dot_comms=(cfg.compute_dtype == "bfloat16"))

@@ -200,7 +200,10 @@ def build_train_step(arch: str, mesh, fcfg: Optional[FavasConfig] = None,
         return loss_fn(p, cfg, b)
 
     def step(state, batch):
-        return favas_round(state, batch, cfg=fcfg, loss_fn=lfn, lambdas=lambdas)
+        # use_agg_kernel=False keeps the jnp oracle under pjit (XLA fuses the
+        # flat-buffer expression); True forces the Pallas fused kernel.
+        return favas_round(state, batch, cfg=fcfg, loss_fn=lfn,
+                           lambdas=lambdas, use_kernel=use_agg_kernel)
 
     key_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
     params_sds = jax.eval_shape(functools.partial(init_params, cfg=cfg), key_sds)
@@ -215,7 +218,7 @@ def build_train_step(arch: str, mesh, fcfg: Optional[FavasConfig] = None,
     batch_sds = train_batch_specs(cfg, fcfg, info["seq"], info["global_batch"])
     batch_sh = batch_shardings(batch_sds, mesh, leading_client_axis=True)
     metrics_sh = {k: NamedSharding(mesh, P()) for k in
-                  ("loss", "mean_steps", "selected")}
+                  ("loss", "mean_steps", "selected", "stale_rounds")}
     jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
                      out_shardings=(state_sh, metrics_sh), donate_argnums=(0,))
     return jitted, (state_sds, batch_sds), cfg

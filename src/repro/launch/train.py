@@ -2,7 +2,11 @@
 
 Runs on whatever devices exist: a 1-device CPU box (reduced configs, smoke/
 example use) or the production mesh (full configs). One train step = one
-FAVAS server round over the resident clients (see core/favas.py).
+FAVAS server round over the resident clients, driven by the flat-buffer
+``core.round_engine.RoundEngine``: parameters live in contiguous flat
+buffers across rounds, the jitted round donates them, and the fused
+aggregation+reset runs as one pass (Pallas kernel on TPU, jnp oracle on
+CPU; override with --use-kernel).
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
       --steps 50 --n-clients 4 --s 2 --seq 128 --batch 4
@@ -10,7 +14,6 @@ FAVAS server round over the resident clients (see core/favas.py).
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax
@@ -19,8 +22,7 @@ import numpy as np
 
 from repro.checkpointing import save_checkpoint, latest_checkpoint, load_checkpoint
 from repro.configs import get_config, get_reduced_config
-from repro.core import (FavasConfig, favas_init, favas_round, favas_variance,
-                        client_lambdas)
+from repro.core import FavasConfig, RoundEngine, client_lambdas
 from repro.data import make_lm_corpus
 from repro.data.pipeline import lm_round_batch
 from repro.models.model import init_params, loss_fn
@@ -42,6 +44,11 @@ def build_cli():
     ap.add_argument("--reweight", default="stochastic",
                     choices=["stochastic", "deterministic"])
     ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--use-kernel", default="auto",
+                    choices=["auto", "on", "off"],
+                    help="fused Pallas aggregation kernel: auto = TPU only "
+                         "(CPU gets the jnp oracle), on = force (interpret "
+                         "mode off-TPU), off = always the oracle")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -58,25 +65,36 @@ def run(args):
                        seed=args.seed)
     key = jax.random.PRNGKey(args.seed)
     params = init_params(key, cfg)
-    state = favas_init(params, fcfg, key)
     lambdas = jnp.asarray(client_lambdas(fcfg))
     det_alpha = None
     if args.reweight == "deterministic":
         from repro.core import deterministic_alphas
         det_alpha = jnp.asarray(deterministic_alphas(fcfg))
 
+    def lfn(p, b):
+        return loss_fn(p, cfg, b)
+
+    use_kernel = {"auto": None, "on": True, "off": False}[args.use_kernel]
+    engine = RoundEngine(params, fcfg, lfn, lambdas=lambdas,
+                         det_alpha=det_alpha, use_kernel=use_kernel)
+    state = engine.init_state(params, key)
+    del params  # the flat buffers are now the authoritative copy
+
     if args.ckpt_dir:
         ck = latest_checkpoint(args.ckpt_dir)
         if ck:
             print(f"restoring {ck}")
-            state = load_checkpoint(ck, state)
+            try:
+                state = load_checkpoint(ck, state)
+            except (KeyError, ValueError) as e:
+                raise SystemExit(
+                    f"checkpoint {ck} does not match the flat-buffer "
+                    f"EngineState layout ({e}). Checkpoints written before "
+                    f"the round-engine change (pytree FavasState) or with a "
+                    f"different parameter layout cannot be restored — start "
+                    f"from a fresh --ckpt-dir.") from e
 
-    def lfn(p, b):
-        return loss_fn(p, cfg, b)
-
-    step_fn = jax.jit(functools.partial(
-        favas_round, cfg=fcfg, loss_fn=lfn, lambdas=lambdas,
-        det_alpha=det_alpha))
+    step_fn = engine.step
 
     tokens, domains = make_lm_corpus(cfg.vocab_size_raw, 400_000,
                                      n_domains=max(args.n_clients, 2),
@@ -90,9 +108,10 @@ def run(args):
                                   args.batch, args.seq, rng)
         state, metrics = step_fn(state, {"tokens": jnp.asarray(batch_np)})
         losses.append(float(metrics["loss"]))
-        logger.log(t + 1, loss=metrics["loss"], mean_steps=metrics["mean_steps"])
+        logger.log(t + 1, loss=metrics["loss"], mean_steps=metrics["mean_steps"],
+                   stale_rounds=metrics["stale_rounds"])
         if (t + 1) % args.log_every == 0:
-            var = float(favas_variance(state))
+            var = float(engine.variance(state))
             logger.log(t + 1, client_variance=var)
             print(f"round {t+1:5d} | loss {np.mean(losses[-args.log_every:]):.4f}"
                   f" | client-var {var:.3e} | {(t+1)/(time.time()-t0):.2f} it/s")

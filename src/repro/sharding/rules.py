@@ -148,6 +148,7 @@ def favas_state_specs(state, mesh, cfg, *, client_axis=("pod", "data")):
         clients=param_specs(state.clients, mesh, cfg, client_axis=ca),
         inits=param_specs(state.inits, mesh, cfg, client_axis=ca),
         counters=P(ca),
+        stale=P(ca),
         key=P(),
         t=P(),
     )

@@ -7,6 +7,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+# hypothesis is an optional test dependency; without the guard the whole
+# tier-1 suite dies at collection (pytest stops on a collection error)
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quant import luq_quantize
