@@ -5,9 +5,13 @@ Measures the REAL round aggregation path the engine runs
 expression, what ``core/round_engine.py`` executes on CPU and what the
 Pallas kernel streams on TPU) against the seed's unfused multi-pass
 arithmetic (eq. 3 msgs, line-10 sum, two reset sweeps as separate
-full-buffer passes). Also validates the multi-output Pallas kernel in
-interpret mode at a small shape (structural check; interpret-mode *timing*
-is meaningless — TPU is the target).
+full-buffer passes). A client-count sweep (n in {64, 256, 1024, 4096},
+constant n*D resident client elements) records fused-vs-seed bytes moved and
+throughput at production federation sizes — the regime the tiled
+client-axis kernel exists for. Also validates the multi-output Pallas
+kernel in interpret mode at a small resident shape AND a tiled
+(n > CLIENT_TILE) shape (structural check; interpret-mode *timing* is
+meaningless — TPU is the target).
 """
 from __future__ import annotations
 
@@ -17,7 +21,7 @@ import numpy as np
 
 from benchmarks.common import timed, save_artifact
 from repro.kernels import ref
-from repro.kernels.favas_agg import favas_fused_pallas
+from repro.kernels.favas_agg import CLIENT_TILE, TILE, favas_fused_pallas
 from repro.kernels.ops import luq_quantize
 
 
@@ -60,19 +64,50 @@ def run(quick=True):
     luq_ref_fn = jax.jit(lambda x, k: luq_quantize(x, 4, k, use_kernel=False))
     t_luq = timed(luq_ref_fn, x, key, reps=10)
 
-    # structural validation of the multi-output Pallas kernel (interpret)
-    nv, Dv = 4, 5000
-    kv = jax.random.split(jax.random.PRNGKey(1), 5)
-    sv = jax.random.normal(kv[0], (Dv,))
-    cv = jax.random.normal(kv[1], (nv, Dv))
-    iv = jax.random.normal(kv[2], (nv, Dv))
-    av = jax.random.uniform(kv[3], (nv,), minval=1.0, maxval=8.0)
-    mv = (jax.random.uniform(kv[4], (nv,)) > 0.5).astype(jnp.float32)
-    got = favas_fused_pallas(sv, cv, iv, av, mv, 2.0, interpret=True)
-    want = ref.favas_fused_ref(sv, cv, iv, av, mv, 2.0)
-    kernel_ok = all(
-        np.allclose(np.asarray(g), np.asarray(w), rtol=1e-6, atol=1e-6)
-        for g, w in zip(got, want))
+    # structural validation of the multi-output Pallas kernel (interpret):
+    # one resident shape, one tiled shape (client blocks + row padding)
+    kernel_ok = True
+    for nv, Dv in ((4, 5000), (CLIENT_TILE * 2 + 7, 3000)):
+        kv = jax.random.split(jax.random.PRNGKey(1), 5)
+        sv = jax.random.normal(kv[0], (Dv,))
+        cv = jax.random.normal(kv[1], (nv, Dv))
+        iv = jax.random.normal(kv[2], (nv, Dv))
+        av = jax.random.uniform(kv[3], (nv,), minval=1.0, maxval=8.0)
+        mv = (jax.random.uniform(kv[4], (nv,)) > 0.5).astype(jnp.float32)
+        got = favas_fused_pallas(sv, cv, iv, av, mv, 2.0, interpret=True)
+        want = ref.favas_fused_ref(sv, cv, iv, av, mv, 2.0)
+        kernel_ok = kernel_ok and all(
+            np.allclose(np.asarray(g), np.asarray(w), rtol=1e-6, atol=1e-6)
+            for g, w in zip(got, want))
+
+    # client-count sweep at constant total resident bytes: the engine's
+    # fused round (what the tiled kernel streams on TPU) vs the seed's
+    # multi-pass arithmetic, n from demo scale to production federations
+    # 2^23 quick / 2^24 full keeps D >= TILE at n=4096, so every sweep point
+    # really does hold the same element count (constant working set)
+    sweep_elems = 1 << (23 if quick else 24)   # elements per (n, D) operand
+    n_sweep = []
+    for ns in (64, 256, 1024, 4096):
+        Ds = max(sweep_elems // ns, TILE)
+        kw = jax.random.split(jax.random.PRNGKey(ns), 5)
+        sw = jax.random.normal(kw[0], (Ds,))
+        cw = jax.random.normal(kw[1], (ns, Ds))
+        iw = jax.random.normal(kw[2], (ns, Ds))
+        aw = jax.random.uniform(kw[3], (ns,), minval=1.0, maxval=8.0)
+        mw = (jax.random.uniform(kw[4], (ns,)) > 0.5).astype(jnp.float32)
+        ssel = float(mw.sum())
+        t_f = timed(jax.jit(lambda *a: ref.favas_fused_ref(*a, ssel)),
+                    sw, cw, iw, aw, mw, reps=5)
+        t_u = timed(jax.jit(lambda *a: _round_unfused(*a, ssel)),
+                    sw, cw, iw, aw, mw, reps=5)
+        bytes_n = (4 * ns + 2) * Ds * 4
+        n_sweep.append({
+            "n": ns, "D": Ds, "bytes": bytes_n,
+            "fused_us": t_f, "unfused_us": t_u,
+            "fused_gbps": bytes_n / (t_f * 1e-6) / 1e9,
+            "unfused_gbps": bytes_n / (t_u * 1e-6) / 1e9,
+            "speedup": t_u / t_f,
+        })
 
     bytes_round = (4 * n + 2) * D * 4        # r/w server + clients + inits
     bytes_agg = (2 * n + 2) * D * 4
@@ -86,11 +121,16 @@ def run(quick=True):
         "luq_jnp_us": t_luq,
         "elements": D,
         "clients": n,
+        "client_tile": CLIENT_TILE,
+        "n_sweep": n_sweep,
         "fused_kernel_interpret_matches_ref": bool(kernel_ok),
         "note": "fused = the engine's real round path (agg + reset, one pass);"
-                " unfused = the seed's multi-pass arithmetic. Pallas kernels"
-                " validated vs these refs in tests/; interpret-mode timing is"
-                " not meaningful, TPU is the target.",
+                " unfused = the seed's multi-pass arithmetic. n_sweep holds"
+                " n*D (the resident client working set) constant while n"
+                " scales to production federation sizes (the tiled"
+                " client-axis regime). Pallas"
+                " kernels validated vs these refs in tests/; interpret-mode"
+                " timing is not meaningful, TPU is the target.",
     }
     save_artifact("kernel_bench", rows)
     return rows

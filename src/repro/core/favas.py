@@ -118,7 +118,7 @@ def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable
 
     ``use_kernel``: None -> Pallas kernel on TPU, jnp oracle elsewhere;
     True/False force the choice (True runs interpret mode off-TPU)."""
-    spec = round_engine.make_flat_spec(state.server)
+    spec = round_engine.make_flat_spec(state.server, n_clients=cfg.n_clients)
     est = EngineState(
         server=round_engine.flatten_tree(spec, state.server),
         clients=round_engine.flatten_stacked(spec, state.clients),

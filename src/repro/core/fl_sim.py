@@ -135,10 +135,11 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
             # (eq. 3 + line 10 + reset) runs as ONE fused pass per dtype
             # bucket instead of ~6 tree_map sweeps; trees are materialized
             # only at the sgd and eval boundaries (core/round_engine.py).
-            spec = round_engine.make_flat_spec(server)
+            # The spec is client-aware: beyond one client tile the row axis
+            # is zero-padded so the tiled kernel never re-pads.
+            spec = round_engine.make_flat_spec(server, n_clients=n)
             srv_f = round_engine.flatten_tree(spec, server)
-            cli_f = tuple(jnp.broadcast_to(b[None], (n,) + b.shape).copy()
-                          for b in srv_f)
+            cli_f = round_engine.stack_server_rows(spec, srv_f, n)
             ini_f = cli_f
         while t_now < cfg.total_time:
             if t_now >= next_eval:
@@ -180,8 +181,12 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
                                          cfg.quant_bits, sub)
                     prog_f = round_engine.flatten_stacked(spec, prog)
                 cli_f = round_engine.flatten_stacked(spec, clients)
-                out = [favas_fused_flat(w, c, i, alpha, mj,
-                                        float(cfg.s_selected), progress=p)
+                alpha_p = round_engine.pad_client_vec(spec, alpha, 1.0)
+                mj_p = round_engine.pad_client_vec(spec, mj, 0.0)
+                out = [favas_fused_flat(w, c, i, alpha_p, mj_p,
+                                        float(cfg.s_selected), progress=p,
+                                        client_tile=spec.client_tile,
+                                        n_logical=n)
                        for w, c, i, p in zip(srv_f, cli_f, ini_f, prog_f)]
                 srv_f = tuple(o[0] for o in out)
                 cli_f = tuple(o[1] for o in out)

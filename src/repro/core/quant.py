@@ -17,6 +17,18 @@ import jax
 import jax.numpy as jnp
 
 
+def luq_scale(x):
+    """Guarded LUQ global scale: max |x| in f32, with all-zero inputs mapped
+    to scale 1.0 so the magnitude normalization never divides by zero. The
+    one host-side scale computation shared by every LUQ entry point (this
+    module's simulation path, ``kernels.ops.luq_quantize``'s oracle path,
+    and ``kernels.luq.luq_pallas``'s scale reduction). ``ref.luq_ref`` and
+    the kernel body take scale as an explicit operand and keep their own
+    idempotent zero-guard, since callers there may pass a raw max."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    return jnp.where(scale > 0, scale, 1.0)
+
+
 def luq_quantize(x, bits: int, key):
     """Unbiased log quantization of ``x``. Returns dequantized values
     (same shape/dtype) — simulation of low-precision comms/training."""
@@ -26,8 +38,7 @@ def luq_quantize(x, bits: int, key):
     xf = x.astype(jnp.float32)
     sign = jnp.sign(xf)
     mag = jnp.abs(xf)
-    scale = jnp.max(mag)
-    scale = jnp.where(scale > 0, scale, 1.0)
+    scale = luq_scale(x)
     m = mag / scale                                  # in [0, 1]
     min_level = 2.0 ** (-(levels - 1))
 

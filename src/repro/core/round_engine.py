@@ -35,7 +35,7 @@ import jax.numpy as jnp
 
 from repro.core import sampler, reweight
 from repro.core.quant import quantize_tree
-from repro.kernels.favas_agg import TILE
+from repro.kernels.favas_agg import CLIENT_TILE, TILE
 from repro.kernels.ops import favas_fused_flat
 from repro.utils.tree import tree_map
 
@@ -54,6 +54,13 @@ class FlatSpec:
     a multiple of the kernel lane tile; the padded tail is zero-initialized
     and provably stays zero under the fused round update (the masked padded
     "server" tail aggregates only zeros).
+
+    When built with ``n_clients``, the spec is client-aware: stacked buffers
+    additionally pad the client (row) axis up to a multiple of the kernel's
+    ``client_tile`` once n exceeds one client block, so the tiled kernel
+    never re-pads either axis. Padded rows are all-zero with zero selection
+    mask and unit alpha — they contribute exactly nothing to the masked
+    aggregation and provably stay zero across rounds.
     """
     treedef: Any
     shapes: tuple                 # per leaf, original shape
@@ -63,14 +70,22 @@ class FlatSpec:
     bucket_dtypes: tuple          # per bucket, dtype name
     bucket_sizes: tuple           # per bucket, unpadded element count
     bucket_padded: tuple          # per bucket, padded element count
+    n_clients: Optional[int] = None   # logical client rows (None: not stacked)
+    n_padded: Optional[int] = None    # stored client rows incl. padding
+    client_tile: Optional[int] = None  # kernel client-axis tile
 
     @property
     def n_buckets(self) -> int:
         return len(self.bucket_dtypes)
 
 
-def make_flat_spec(tree, *, tile: int = TILE) -> FlatSpec:
-    """Build the layout from a pytree of arrays / ShapeDtypeStructs."""
+def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
+                   client_tile: int = CLIENT_TILE) -> FlatSpec:
+    """Build the layout from a pytree of arrays / ShapeDtypeStructs.
+
+    ``n_clients``: make the spec client-aware (see class docstring). Row
+    padding only kicks in beyond one client block (n > client_tile), so
+    small federations carry no extra rows."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     shapes, dtypes, bucket_of, offsets = [], [], [], []
     bucket_dtypes, cursors = [], []
@@ -89,10 +104,16 @@ def make_flat_spec(tree, *, tile: int = TILE) -> FlatSpec:
         offsets.append(cursors[b])
         cursors[b] += size
     padded = tuple(c + ((-c) % tile) for c in cursors)
+    n_padded = None
+    if n_clients is not None:
+        n_padded = (n_clients if n_clients <= client_tile
+                    else n_clients + ((-n_clients) % client_tile))
     return FlatSpec(treedef=treedef, shapes=tuple(shapes), dtypes=tuple(dtypes),
                     bucket_of=tuple(bucket_of), offsets=tuple(offsets),
                     bucket_dtypes=tuple(bucket_dtypes),
-                    bucket_sizes=tuple(cursors), bucket_padded=padded)
+                    bucket_sizes=tuple(cursors), bucket_padded=padded,
+                    n_clients=n_clients, n_padded=n_padded,
+                    client_tile=client_tile if n_clients is not None else None)
 
 
 def flatten_tree(spec: FlatSpec, tree) -> tuple:
@@ -112,9 +133,21 @@ def flatten_tree(spec: FlatSpec, tree) -> tuple:
 
 
 def flatten_stacked(spec: FlatSpec, tree) -> tuple:
-    """Client-stacked pytree (leading axis n) -> tuple of (n, Dp_b)."""
+    """Client-stacked pytree (leading axis n) -> tuple of (Np_b, Dp_b).
+
+    With a client-aware spec the row axis is zero-padded up to
+    ``spec.n_padded`` so the tiled kernel path never re-pads."""
     leaves = jax.tree_util.tree_leaves(tree)
     n = leaves[0].shape[0]
+    rpad = 0
+    if spec.n_padded is not None:
+        # loud failure instead of silently mis-padding: a client-aware spec
+        # only describes trees with exactly n_clients rows
+        if n != spec.n_clients:
+            raise ValueError(
+                f"stacked tree has {n} client rows but the spec was built "
+                f"for n_clients={spec.n_clients}")
+        rpad = spec.n_padded - n
     parts = [[] for _ in range(spec.n_buckets)]
     for leaf, b in zip(leaves, spec.bucket_of):
         parts[b].append(leaf.reshape(n, -1))
@@ -123,8 +156,8 @@ def flatten_stacked(spec: FlatSpec, tree) -> tuple:
         buf = (jnp.concatenate(parts[b], axis=1) if len(parts[b]) > 1
                else parts[b][0])
         pad = spec.bucket_padded[b] - spec.bucket_sizes[b]
-        if pad:
-            buf = jnp.pad(buf, ((0, 0), (0, pad)))
+        if pad or rpad:
+            buf = jnp.pad(buf, ((0, rpad), (0, pad)))
         out.append(buf)
     return tuple(out)
 
@@ -143,18 +176,63 @@ def unflatten_tree(spec: FlatSpec, bufs: Sequence):
 
 
 def unflatten_stacked(spec: FlatSpec, bufs: Sequence):
-    """Tuple of (n, Dp_b) buffers -> client-stacked pytree."""
+    """Tuple of (Np_b, Dp_b) buffers -> client-stacked pytree (padded client
+    rows, if any, are dropped)."""
     leaves = []
     for shape, dt, b, off in zip(spec.shapes, spec.dtypes, spec.bucket_of,
                                  spec.offsets):
-        n = bufs[b].shape[0]
+        buf = bufs[b]
+        n = buf.shape[0]
+        if spec.n_padded is not None:
+            if n != spec.n_padded:
+                raise ValueError(
+                    f"stacked buffer has {n} rows but the spec stores "
+                    f"n_padded={spec.n_padded}")
+            if spec.n_clients < n:
+                n = spec.n_clients
+                buf = buf[:n]
         size = 1
         for d in shape:
             size *= d
         leaves.append(
-            jax.lax.dynamic_slice_in_dim(bufs[b], off, size, axis=1)
+            jax.lax.dynamic_slice_in_dim(buf, off, size, axis=1)
             .reshape((n,) + shape))
     return jax.tree_util.tree_unflatten(spec.treedef, leaves)
+
+
+def pad_client_vec(spec: FlatSpec, v, fill: float = 0.0):
+    """(n,) per-client vector -> (Np,) padded to the spec's stored rows.
+    ``fill``: value for padded rows (0 for masks — padded rows are never
+    selected; 1 for alphas — keeps the guarded division trivially exact)."""
+    if spec.n_padded is None:
+        return v
+    if v.shape[0] != spec.n_clients:
+        raise ValueError(
+            f"per-client vector has {v.shape[0]} rows but the spec was "
+            f"built for n_clients={spec.n_clients}")
+    rpad = spec.n_padded - spec.n_clients
+    if not rpad:
+        return v
+    return jnp.concatenate([v, jnp.full((rpad,), fill, v.dtype)])
+
+
+def stack_server_rows(spec: FlatSpec, server_bufs: Sequence, n: int) -> tuple:
+    """Server flat buffers -> client/init row stacks: the server row
+    broadcast to n clients plus all-zero padded rows up to the spec's stored
+    row count. Each result is a DISTINCT buffer (broadcasts are materialized)
+    so a donating jit never sees the same buffer twice."""
+    if spec.n_clients is not None and n != spec.n_clients:
+        raise ValueError(
+            f"stacking {n} client rows but the spec was built for "
+            f"n_clients={spec.n_clients}")
+    rows = spec.n_padded or n
+    out = []
+    for b in server_bufs:
+        buf = jnp.broadcast_to(b[None], (n,) + b.shape)
+        buf = (jnp.pad(buf, ((0, rows - n), (0, 0))) if rows > n
+               else buf.copy())
+        out.append(buf)
+    return tuple(out)
 
 
 # ---------------------------------------------------------------------------
@@ -182,15 +260,13 @@ class EngineState:
 
 
 def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
-    """All clients start from the server model (Algorithm 1 line 16)."""
+    """All clients start from the server model (Algorithm 1 line 16).
+    Client rows beyond ``n`` (the client-tile padding of a client-aware
+    spec) are zero and stay zero across rounds."""
     n = cfg.n_clients
     server = flatten_tree(spec, params)
-    # materialize clients and inits as DISTINCT buffers: the jitted round
-    # donates the whole state, and aliased inputs cannot both be donated
-    clients = tuple(jnp.broadcast_to(b[None], (n,) + b.shape).copy()
-                    for b in server)
-    inits = tuple(jnp.broadcast_to(b[None], (n,) + b.shape).copy()
-                  for b in server)
+    clients = stack_server_rows(spec, server, n)
+    inits = stack_server_rows(spec, server, n)
     return EngineState(
         server=server, clients=clients, inits=inits,
         counters=jnp.zeros((n,), jnp.int32),
@@ -269,13 +345,19 @@ def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
 
     trained = flatten_stacked(spec, trained_tree)
 
-    # 4+5. fused aggregation + selected-client reset: one pass per bucket
+    # 4+5. fused aggregation + selected-client reset: one pass per bucket.
+    # alpha/mask ride to the kernel padded alongside the buffers' client
+    # rows (unit alpha / zero mask => padded rows aggregate exactly nothing
+    # and reset to themselves, i.e. stay zero).
     m = sampler.sample_selection(k_sel, n, s)                  # (n,) float
+    alpha_p = pad_client_vec(spec, alpha, 1.0)
+    m_p = pad_client_vec(spec, m, 0.0)
     server_new, clients_new, inits_new = [], [], []
     for b in range(spec.n_buckets):
         srv, cli, ini = favas_fused_flat(
-            state.server[b], trained[b], state.inits[b], alpha, m, float(s),
-            progress=progress[b], use_kernel=use_kernel)
+            state.server[b], trained[b], state.inits[b], alpha_p, m_p,
+            float(s), progress=progress[b], client_tile=spec.client_tile,
+            n_logical=n, use_kernel=use_kernel)
         server_new.append(srv)
         clients_new.append(cli)
         inits_new.append(ini)
@@ -307,11 +389,14 @@ def engine_server_params(spec: FlatSpec, state: EngineState):
 
 
 def engine_variance(state: EngineState) -> jnp.ndarray:
-    """sum_i ||w^i - w_t||^2 straight off the flat buffers (padded tails are
-    identical between clients and server, so they contribute zero)."""
+    """sum_i ||w^i - w_t||^2 straight off the flat buffers. Padded lane
+    tails are identical between clients and server (zero contribution);
+    padded client ROWS are all-zero, not copies of the server, so they are
+    sliced off (the counters carry the logical n)."""
+    n = state.counters.shape[0]
     tot = jnp.zeros((), jnp.float32)
     for srv, cli in zip(state.server, state.clients):
-        diff = cli.astype(jnp.float32) - srv[None].astype(jnp.float32)
+        diff = cli[:n].astype(jnp.float32) - srv[None].astype(jnp.float32)
         tot = tot + jnp.sum(jnp.square(diff))
     return tot
 
@@ -325,10 +410,12 @@ class RoundEngine:
     round. The state never leaves flat form between rounds."""
 
     def __init__(self, params_template, cfg, loss_fn: Callable, *,
-                 lambdas=None, det_alpha=None, use_kernel: Optional[bool] = None):
+                 lambdas=None, det_alpha=None, use_kernel: Optional[bool] = None,
+                 client_tile: int = CLIENT_TILE):
         from repro.core.favas import client_lambdas  # cycle-free at call time
         self.cfg = cfg
-        self.spec = make_flat_spec(params_template)
+        self.spec = make_flat_spec(params_template, n_clients=cfg.n_clients,
+                                   client_tile=client_tile)
         self.loss_fn = loss_fn
         self.lambdas = (jnp.asarray(lambdas) if lambdas is not None
                         else jnp.asarray(client_lambdas(cfg)))

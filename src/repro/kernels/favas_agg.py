@@ -4,32 +4,62 @@ eq. 3 reweighting) over flattened parameter buffers.
 Why a kernel: the aggregation touches every byte of every resident client's
 parameters each server round and is purely memory-bound. Unfused HLO does
 4+ passes per leaf (sub, div, add, mul-mask, reduce); this kernel streams
-each (n, TILE) block through VMEM once: one HBM read per operand, one write.
+each (CLIENT_TILE, TILE) block through VMEM once per sweep: one HBM read
+per operand per sweep, one write.
 
-VMEM budget @ TILE=2048, n<=64: 3 operand blocks * 64*2048*4B = 1.5 MiB +
-out 8 KiB — comfortably inside ~16 MiB VMEM. The lane dim (TILE) is a
-multiple of 128 for clean (8,128) vreg tiling; the client dim rides the
-sublane axis.
+Tiling. The lane dim is tiled at ``TILE`` (multiple of 128 for clean
+(8, 128) vreg tiling). The client dim rides the sublane axis and is tiled
+at ``CLIENT_TILE`` rows: a second grid dimension streams client-row blocks
+through a VMEM scratch accumulator, so the number of resident clients ``n``
+can scale to thousands while VMEM stays bounded at O(CLIENT_TILE * TILE).
+For ``n <= CLIENT_TILE`` the whole client axis fits one block and the
+single-sweep resident kernels below are used unchanged.
 
-Two entry points:
+VMEM budget for the tiled fused kernel @ TILE=2048, CLIENT_TILE=32, fp32,
+independent of n and D: in blocks (2*CT+1)*TILE*4B + (CT,1) scalars, out
+blocks (2*CT+1)*TILE*4B, two (1, TILE) f32 scratch rows — about 1.03 MiB
+total (1.29 MiB with the explicit-progress operand), comfortably inside
+~16 MiB VMEM even with double buffering. ``fused_block_vmem_bytes`` computes
+this number from the declared block shapes; tests pin it under 2 MiB for
+the production shape (n=1024, D=2^20). The resident small-n kernels keep the
+PR-1 budget: (2n+1)*TILE*4B in + out ≈ 2.1 MiB at n=64.
 
-* ``favas_agg_pallas`` — the original single-output aggregation (line 10 only);
-  kept for the leafwise ``ops.favas_aggregate_tree`` path and its tests.
-* ``favas_fused_pallas`` — the full-round multi-output kernel used by the
-  flat-buffer round engine (``core/round_engine.py``): one streamed pass per
-  (n, TILE) block produces the new server tile AND the reset clients/inits
-  tiles (Algorithm 1 lines 10–12), so the round does exactly one HBM read and
-  one HBM write per resident byte instead of re-reading everything for the
-  two reset passes.
+Grid schedule of the tiled fused kernel, for each lane tile i (outer grid
+dim, "arbitrary" sequential semantics):
 
-VMEM budget for the fused kernel @ TILE=2048, n<=64, fp32: in blocks
-(2n+1)*TILE*4B ≈ 1.06 MiB + out blocks ≈ 1.06 MiB — well inside ~16 MiB.
+* phase 0 (inner grid steps j = 0..nb-1): client block j streams through
+  VMEM; its masked message partial sum accumulates into a (1, TILE) f32
+  scratch row; the clients/inits out tiles pass the inputs through (already
+  final for unselected rows). A ``@pl.when`` epilogue on the last client
+  block folds in the server row and stores the new server tile to a second
+  scratch row and to the server output.
+* phase 1 (j = nb..2*nb-1): client block j-nb streams through again and the
+  per-block client/init reset tiles are emitted from the scratch server row
+  (line 11-12 selects between the new server and the untouched state).
+
+So the round moves 2 HBM reads + 2 writes per resident client byte at any
+n — versus the seed's ~6 passes, and versus 1+1 for the resident small-n
+kernel (which remains the dispatch below CLIENT_TILE).
+
+``favas_agg_pallas`` (the original single-output aggregation, kept for the
+leafwise ``ops.favas_aggregate_tree`` path) needs no reset phase, so its
+tiled variant is a single sweep: accumulate, then one ``@pl.when`` epilogue
+emits the server tile once the last client block has streamed through.
+
+The client axis is padded to a CLIENT_TILE multiple with zero rows, zero
+mask and unit alpha, so padded rows contribute exactly 0.0 to the masked
+sum (adding 0.0 is exact in fp32 — no parity impact). The flat-buffer
+engine (``core/round_engine.py``) pre-pads both axes so the kernel path
+never re-pads.
 
 Validated with interpret=True on CPU against ``ref.favas_agg_ref`` /
 ``ref.favas_fused_ref``: the kernel body uses the same jnp expressions
-(including true division) as the oracle, so fp32 parity holds to 1 ULP —
-the only daylight is XLA compiling the two separately (FMA contraction,
-blocked reductions).
+(including true division) as the oracle. The resident kernels reduce over
+the same (n, TILE) block as the oracle, so fp32 parity holds to 1 ULP; the
+tiled kernels accumulate per-block partial sums sequentially, which
+reorders the client reduction — parity then holds to ~1 ULP *of the
+accumulator magnitude* (tests bound |kernel - oracle| by ULPs of
+|server| + sum_i |mask_i * msg_i| per lane, before the 1/(s+1) division).
 """
 from __future__ import annotations
 
@@ -38,13 +68,51 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-TILE = 2048  # lane-dim tile; multiple of 128
+TILE = 2048        # lane-dim tile; multiple of 128
+CLIENT_TILE = 32   # sublane-dim tile over client rows; multiple of 8
 
+
+def _pad_clients(n: int, client_tile: int, arrays, alpha, mask):
+    """Zero-pad the client axis to a CLIENT_TILE multiple: zero rows, zero
+    mask, unit alpha — exact no-ops under the masked sum."""
+    rpad = (-n) % client_tile
+    if rpad:
+        arrays = [a if a is None else jnp.pad(a, ((0, rpad), (0, 0)))
+                  for a in arrays]
+        alpha = jnp.pad(alpha, (0, rpad), constant_values=1.0)
+        mask = jnp.pad(mask, (0, rpad))
+    return n + rpad, arrays, alpha, mask
+
+
+def fused_block_vmem_bytes(n: int, dtype, *, progress: bool = False,
+                           tile: int = TILE,
+                           client_tile: int = CLIENT_TILE) -> int:
+    """Per-grid-step VMEM footprint of ``favas_fused_pallas`` computed from
+    the declared BlockSpec shapes (inputs + outputs + scratch). For the
+    tiled path (n > client_tile) this is independent of both n and D —
+    the property that lets the engine scale to thousands of clients."""
+    itemsize = jnp.dtype(dtype).itemsize
+    rows = min(n, client_tile)
+    row_block = rows * tile * itemsize          # clients / inits / progress
+    srv_block = tile * itemsize                 # (1, TILE) server row
+    scalar_block = rows * 4                     # (rows, 1) f32 alpha / mask
+    n_row_in = 3 if progress else 2
+    total = (srv_block + n_row_in * row_block + 2 * scalar_block  # inputs
+             + srv_block + 2 * row_block)                         # outputs
+    if n > client_tile:
+        total += 2 * tile * 4                   # f32 acc + new-server scratch
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Single-output aggregation (ops.favas_aggregate_tree path)
+# ---------------------------------------------------------------------------
 
 def _agg_kernel(server_ref, clients_ref, inits_ref, coef_ref, mask_ref, out_ref,
                 *, inv_s1: float):
-    """One (n, TILE) block.
+    """One resident (n, TILE) block.
     coef = mask/alpha (n,1); mask (n,1); server/out (1, TILE)."""
     c = clients_ref[...].astype(jnp.float32)          # (n, T)
     i = inits_ref[...].astype(jnp.float32)            # (n, T)
@@ -56,39 +124,94 @@ def _agg_kernel(server_ref, clients_ref, inits_ref, coef_ref, mask_ref, out_ref,
     out_ref[...] = ((s + total) * inv_s1).astype(out_ref.dtype)
 
 
+def _agg_kernel_tiled(server_ref, clients_ref, inits_ref, coef_ref, mask_ref,
+                      out_ref, acc_ref, *, inv_s1: float, n_blocks: int):
+    """One (CLIENT_TILE, TILE) client block; partial sums accumulate in the
+    f32 scratch row, the epilogue emits the server tile after the last
+    client block has streamed through."""
+    j = pl.program_id(1)
+    c = clients_ref[...].astype(jnp.float32)          # (CT, T)
+    i = inits_ref[...].astype(jnp.float32)            # (CT, T)
+    coef = coef_ref[...].astype(jnp.float32)          # (CT, 1)
+    m = mask_ref[...].astype(jnp.float32)             # (CT, 1)
+    part = jnp.sum(m * i + coef * (c - i), axis=0, keepdims=True)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = part
+
+    @pl.when(j > 0)
+    def _():
+        acc_ref[...] = acc_ref[...] + part
+
+    @pl.when(j == n_blocks - 1)
+    def _():
+        s = server_ref[...].astype(jnp.float32)       # (1, T)
+        out_ref[...] = ((s + acc_ref[...]) * inv_s1).astype(out_ref.dtype)
+
+
 def favas_agg_pallas(server, clients, inits, alpha, mask, s: float,
-                     *, interpret: bool = True):
+                     *, client_tile: int | None = None,
+                     interpret: bool = True):
     """server: (D,) f32/bf16; clients/inits: (n, D); alpha/mask: (n,)."""
     n, D = clients.shape
+    ct = client_tile or CLIENT_TILE
     pad = (-D) % TILE
     if pad:
         server = jnp.pad(server, (0, pad))
         clients = jnp.pad(clients, ((0, 0), (0, pad)))
         inits = jnp.pad(inits, ((0, 0), (0, pad)))
     Dp = D + pad
-    coef = (mask / jnp.maximum(alpha, 1e-9)).astype(jnp.float32).reshape(n, 1)
-    maskc = mask.astype(jnp.float32).reshape(n, 1)
-    grid = (Dp // TILE,)
+    if n <= ct:                                   # whole client axis resident
+        coef = (mask / jnp.maximum(alpha, 1e-9)).astype(jnp.float32).reshape(n, 1)
+        maskc = mask.astype(jnp.float32).reshape(n, 1)
+        out = pl.pallas_call(
+            functools.partial(_agg_kernel, inv_s1=1.0 / (s + 1.0)),
+            grid=(Dp // TILE,),
+            in_specs=[
+                pl.BlockSpec((1, TILE), lambda i: (0, i)),    # server (as (1,D))
+                pl.BlockSpec((n, TILE), lambda i: (0, i)),    # clients
+                pl.BlockSpec((n, TILE), lambda i: (0, i)),    # inits
+                pl.BlockSpec((n, 1), lambda i: (0, 0)),       # coef
+                pl.BlockSpec((n, 1), lambda i: (0, 0)),       # mask
+            ],
+            out_specs=pl.BlockSpec((1, TILE), lambda i: (0, i)),
+            out_shape=jax.ShapeDtypeStruct((1, Dp), server.dtype),
+            interpret=interpret,
+        )(server.reshape(1, Dp), clients, inits, coef, maskc)
+        return out.reshape(Dp)[:D]
+
+    npad, (clients, inits), alpha, mask = _pad_clients(
+        n, ct, (clients, inits), alpha, mask)
+    nb = npad // ct
+    coef = (mask / jnp.maximum(alpha, 1e-9)).astype(jnp.float32).reshape(npad, 1)
+    maskc = mask.astype(jnp.float32).reshape(npad, 1)
     out = pl.pallas_call(
-        functools.partial(_agg_kernel, inv_s1=1.0 / (s + 1.0)),
-        grid=grid,
+        functools.partial(_agg_kernel_tiled, inv_s1=1.0 / (s + 1.0),
+                          n_blocks=nb),
+        grid=(Dp // TILE, nb),
         in_specs=[
-            pl.BlockSpec((1, TILE), lambda i: (0, i)),    # server (as (1,D))
-            pl.BlockSpec((n, TILE), lambda i: (0, i)),    # clients
-            pl.BlockSpec((n, TILE), lambda i: (0, i)),    # inits
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),       # coef
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),       # mask
+            pl.BlockSpec((1, TILE), lambda i, j: (0, i)),     # server
+            pl.BlockSpec((ct, TILE), lambda i, j: (j, i)),    # clients
+            pl.BlockSpec((ct, TILE), lambda i, j: (j, i)),    # inits
+            pl.BlockSpec((ct, 1), lambda i, j: (j, 0)),       # coef
+            pl.BlockSpec((ct, 1), lambda i, j: (j, 0)),       # mask
         ],
-        out_specs=pl.BlockSpec((1, TILE), lambda i: (0, i)),
+        out_specs=pl.BlockSpec((1, TILE), lambda i, j: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, Dp), server.dtype),
+        scratch_shapes=[pltpu.VMEM((1, TILE), jnp.float32)],
         interpret=interpret,
     )(server.reshape(1, Dp), clients, inits, coef, maskc)
     return out.reshape(Dp)[:D]
 
 
+# ---------------------------------------------------------------------------
+# Fused full-round kernels (aggregation + selected-client reset)
+# ---------------------------------------------------------------------------
+
 def _fused_kernel(server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
                   srv_out_ref, cli_out_ref, ini_out_ref, *, s1: float):
-    """One (n, TILE) block of the full round update:
+    """One resident (n, TILE) block of the full round update:
       msg_i   = init_i + (client_i - init_i) / alpha_i          (eq. 3)
       server' = (server + sum_i mask_i * msg_i) / (s+1)         (line 10)
       client' = mask_i ? server' : client_i                     (line 11)
@@ -128,8 +251,54 @@ def _fused_kernel_prog(server_ref, clients_ref, inits_ref, prog_ref, alpha_ref,
     ini_out_ref[...] = (m * s_new + (1.0 - m) * i).astype(ini_out_ref.dtype)
 
 
+def _fused_kernel_tiled(server_ref, clients_ref, inits_ref, alpha_ref,
+                        mask_ref, srv_out_ref, cli_out_ref, ini_out_ref,
+                        acc_ref, snew_ref, *, s1: float, n_blocks: int,
+                        has_progress: bool, prog_ref=None):
+    """Two-phase sweep over (CLIENT_TILE, TILE) client blocks — see the
+    module docstring for the schedule. ``prog_ref`` is bound (via
+    functools.partial from the dispatcher) only for the FAVAS[QNN] variant."""
+    j = pl.program_id(1)
+    c = clients_ref[...].astype(jnp.float32)          # (CT, T)
+    i = inits_ref[...].astype(jnp.float32)            # (CT, T)
+    m = mask_ref[...].astype(jnp.float32)             # (CT, 1)
+
+    @pl.when(j < n_blocks)
+    def _accumulate():
+        a = alpha_ref[...].astype(jnp.float32)        # (CT, 1)
+        p = (prog_ref[...].astype(jnp.float32) if has_progress else c - i)
+        msg = i + p / a
+        part = jnp.sum(m * msg, axis=0, keepdims=True)
+
+        @pl.when(j == 0)
+        def _():
+            acc_ref[...] = part
+
+        @pl.when(j > 0)
+        def _():
+            acc_ref[...] = acc_ref[...] + part
+
+        # pass the state through so every flushed out tile holds valid data
+        # (already final for rows this phase doesn't reset)
+        cli_out_ref[...] = c.astype(cli_out_ref.dtype)
+        ini_out_ref[...] = i.astype(ini_out_ref.dtype)
+
+        @pl.when(j == n_blocks - 1)
+        def _epilogue():
+            s_new = (server_ref[...].astype(jnp.float32) + acc_ref[...]) / s1
+            snew_ref[...] = s_new
+            srv_out_ref[...] = s_new.astype(srv_out_ref.dtype)
+
+    @pl.when(j >= n_blocks)
+    def _reset():
+        s_new = snew_ref[...]                         # (1, T) f32
+        cli_out_ref[...] = (m * s_new + (1.0 - m) * c).astype(cli_out_ref.dtype)
+        ini_out_ref[...] = (m * s_new + (1.0 - m) * i).astype(ini_out_ref.dtype)
+
+
 def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
-                       *, progress=None, interpret: bool = True):
+                       *, progress=None, client_tile: int | None = None,
+                       interpret: bool = True):
     """Fused aggregation + selected-client reset over flat buffers.
 
     server: (D,) f32/bf16; clients/inits: (n, D); alpha/mask: (n,).
@@ -137,8 +306,11 @@ def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
     quantized client deltas); None means progress = clients - inits,
     computed in-kernel. Client resets always use ``clients`` (full
     precision) — ``progress`` affects only the transmitted message.
+    ``client_tile``: sublane rows per client block (default CLIENT_TILE);
+    n <= client_tile keeps the whole client axis resident in one block.
     Returns (server_new (D,), clients_new (n, D), inits_new (n, D))."""
     n, D = clients.shape
+    ct = client_tile or CLIENT_TILE
     pad = (-D) % TILE
     if pad:
         server = jnp.pad(server, (0, pad))
@@ -147,36 +319,88 @@ def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
         if progress is not None:
             progress = jnp.pad(progress, ((0, 0), (0, pad)))
     Dp = D + pad
-    alphac = jnp.maximum(alpha.astype(jnp.float32), 1e-9).reshape(n, 1)
-    maskc = mask.astype(jnp.float32).reshape(n, 1)
-    grid = (Dp // TILE,)
-    row_spec = pl.BlockSpec((n, TILE), lambda i: (0, i))
-    scalar_spec = pl.BlockSpec((n, 1), lambda i: (0, 0))
-    srv_spec = pl.BlockSpec((1, TILE), lambda i: (0, i))
+
+    if n <= ct:                                   # whole client axis resident
+        alphac = jnp.maximum(alpha.astype(jnp.float32), 1e-9).reshape(n, 1)
+        maskc = mask.astype(jnp.float32).reshape(n, 1)
+        row_spec = pl.BlockSpec((n, TILE), lambda i: (0, i))
+        scalar_spec = pl.BlockSpec((n, 1), lambda i: (0, 0))
+        srv_spec = pl.BlockSpec((1, TILE), lambda i: (0, i))
+        if progress is None:
+            kernel = functools.partial(_fused_kernel, s1=float(s) + 1.0)
+            in_specs = [srv_spec, row_spec, row_spec, scalar_spec, scalar_spec]
+            operands = (server.reshape(1, Dp), clients, inits, alphac, maskc)
+        else:
+            kernel = functools.partial(_fused_kernel_prog, s1=float(s) + 1.0)
+            in_specs = [srv_spec, row_spec, row_spec, row_spec, scalar_spec,
+                        scalar_spec]
+            operands = (server.reshape(1, Dp), clients, inits, progress,
+                        alphac, maskc)
+        srv, cli, ini = pl.pallas_call(
+            kernel,
+            grid=(Dp // TILE,),
+            in_specs=in_specs,
+            out_specs=(srv_spec, row_spec, row_spec),
+            out_shape=(
+                jax.ShapeDtypeStruct((1, Dp), server.dtype),
+                jax.ShapeDtypeStruct((n, Dp), clients.dtype),
+                jax.ShapeDtypeStruct((n, Dp), inits.dtype),
+            ),
+            interpret=interpret,
+        )(*operands)
+        return srv.reshape(Dp)[:D], cli[:, :D], ini[:, :D]
+
+    npad, (clients, inits, progress), alpha, mask = _pad_clients(
+        n, ct, (clients, inits, progress), alpha, mask)
+    nb = npad // ct
+    alphac = jnp.maximum(alpha.astype(jnp.float32), 1e-9).reshape(npad, 1)
+    maskc = mask.astype(jnp.float32).reshape(npad, 1)
+    # two-phase inner grid dim: j in [0, nb) accumulates, [nb, 2nb) resets
+    row_spec = pl.BlockSpec((ct, TILE), lambda i, j: (j % nb, i))
+    scalar_spec = pl.BlockSpec((ct, 1), lambda i, j: (j % nb, 0))
+    srv_spec = pl.BlockSpec((1, TILE), lambda i, j: (0, i))
     if progress is None:
-        kernel = functools.partial(_fused_kernel, s1=float(s) + 1.0)
+        kernel = functools.partial(_fused_kernel_tiled, s1=float(s) + 1.0,
+                                   n_blocks=nb, has_progress=False)
         in_specs = [srv_spec, row_spec, row_spec, scalar_spec, scalar_spec]
         operands = (server.reshape(1, Dp), clients, inits, alphac, maskc)
     else:
-        kernel = functools.partial(_fused_kernel_prog, s1=float(s) + 1.0)
-        in_specs = [srv_spec, row_spec, row_spec, row_spec, scalar_spec,
+        # bind prog_ref as the trailing positional ref via a wrapper so the
+        # no-progress variant keeps a progress-free operand list
+        def kernel(server_ref, clients_ref, inits_ref, prog_ref, alpha_ref,
+                   mask_ref, srv_out_ref, cli_out_ref, ini_out_ref,
+                   acc_ref, snew_ref):
+            return _fused_kernel_tiled(
+                server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
+                srv_out_ref, cli_out_ref, ini_out_ref, acc_ref, snew_ref,
+                s1=float(s) + 1.0, n_blocks=nb, has_progress=True,
+                prog_ref=prog_ref)
+        # progress is only read in phase 0: clamp its block index at the
+        # last phase-0 block so the window never changes during phase 1 and
+        # the pipeline skips the (otherwise redundant) re-fetch of every
+        # progress block
+        prog_spec = pl.BlockSpec((ct, TILE),
+                                 lambda i, j: (jnp.minimum(j, nb - 1), i))
+        in_specs = [srv_spec, row_spec, row_spec, prog_spec, scalar_spec,
                     scalar_spec]
         operands = (server.reshape(1, Dp), clients, inits, progress, alphac,
                     maskc)
     srv, cli, ini = pl.pallas_call(
         kernel,
-        grid=grid,
+        grid=(Dp // TILE, 2 * nb),
         in_specs=in_specs,
         out_specs=(
             srv_spec,
-            row_spec,
-            row_spec,
+            pl.BlockSpec((ct, TILE), lambda i, j: (j % nb, i)),
+            pl.BlockSpec((ct, TILE), lambda i, j: (j % nb, i)),
         ),
         out_shape=(
             jax.ShapeDtypeStruct((1, Dp), server.dtype),
-            jax.ShapeDtypeStruct((n, Dp), clients.dtype),
-            jax.ShapeDtypeStruct((n, Dp), inits.dtype),
+            jax.ShapeDtypeStruct((npad, Dp), clients.dtype),
+            jax.ShapeDtypeStruct((npad, Dp), inits.dtype),
         ),
+        scratch_shapes=[pltpu.VMEM((1, TILE), jnp.float32),
+                        pltpu.VMEM((1, TILE), jnp.float32)],
         interpret=interpret,
     )(*operands)
-    return srv.reshape(Dp)[:D], cli[:, :D], ini[:, :D]
+    return srv.reshape(Dp)[:D], cli[:n, :D], ini[:n, :D]

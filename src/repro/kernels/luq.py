@@ -41,9 +41,12 @@ def _luq_kernel(x_ref, up_ref, ur_ref, scale_ref, out_ref, *, levels: int):
 
 def luq_pallas(x, u_prune, u_round, bits: int, *, interpret: bool = True):
     """Elementwise over any shape; flattened to (R, COLS) tiles."""
+    # lazy: core.__init__ transitively imports this module, so a top-level
+    # import of core.quant would be circular from some entry points
+    from repro.core.quant import luq_scale
     levels = 2 ** (bits - 1) - 1
     orig_shape, dtype = x.shape, x.dtype
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32))).reshape(1, 1)
+    scale = luq_scale(x).reshape(1, 1)
     flat = x.reshape(-1)
     D = flat.shape[0]
     width = ROWS * COLS

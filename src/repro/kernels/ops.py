@@ -21,10 +21,17 @@ def _is_tpu() -> bool:
 
 
 def favas_fused_flat(server, clients, inits, alpha, mask, s: float,
-                     *, progress=None, use_kernel=None):
+                     *, progress=None, client_tile=None, n_logical=None,
+                     use_kernel=None):
     """Fused full-round aggregation + reset over flat buffers; see
     kernels/favas_agg.py. Returns (server_new, clients_new, inits_new).
     ``progress``: optional explicit (quantized) transmitted progress.
+    ``client_tile``: client-axis tile for the kernel path (the jnp oracle is
+    shape-agnostic and ignores it). ``n_logical``: real client rows when the
+    buffers carry client-tile padding; the oracle path computes on the
+    logical rows and re-attaches the padding as exact zeros, so reducing
+    over a padded row count never reorders the fp32 client sum (keeps the
+    engine bit-identical to ``favas_round_reference`` at any n).
 
     ``use_kernel=None`` (auto) picks the Pallas kernel on TPU and the jnp
     oracle on CPU (interpret mode is a validation tool, not a fast path);
@@ -33,16 +40,27 @@ def favas_fused_flat(server, clients, inits, alpha, mask, s: float,
         use_kernel = _is_tpu()
     if use_kernel:
         return favas_fused_pallas(server, clients, inits, alpha, mask, s,
-                                  progress=progress, interpret=not _is_tpu())
+                                  progress=progress, client_tile=client_tile,
+                                  interpret=not _is_tpu())
+    rows = clients.shape[0]
+    nl = rows if n_logical is None else n_logical
+    if nl < rows:
+        srv, cli, ini = ref.favas_fused_ref(
+            server, clients[:nl], inits[:nl], alpha[:nl], mask[:nl], s,
+            progress=None if progress is None else progress[:nl])
+        # padded rows are zero with zero mask: their reset is exactly zero
+        rpad = ((0, rows - nl), (0, 0))
+        return srv, jnp.pad(cli, rpad), jnp.pad(ini, rpad)
     return ref.favas_fused_ref(server, clients, inits, alpha, mask, s,
                                progress=progress)
 
 
 def favas_aggregate_flat(server, clients, inits, alpha, mask, s: float,
-                         *, use_kernel: bool = True):
+                         *, client_tile=None, use_kernel: bool = True):
     """Flat-buffer FAVAS aggregation; see kernels/favas_agg.py."""
     if use_kernel:
         return favas_agg_pallas(server, clients, inits, alpha, mask, s,
+                                client_tile=client_tile,
                                 interpret=not _is_tpu())
     return ref.favas_agg_ref(server, clients, inits, alpha, mask, s)
 
@@ -62,10 +80,13 @@ def favas_aggregate_tree(server_tree, clients_tree, inits_tree, alpha, mask,
 
 def luq_quantize(x, bits: int, key, *, use_kernel: bool = True):
     """LUQ quantization with explicit PRNG key (kernel or oracle path)."""
+    # lazy: core.__init__ transitively imports this module
+    from repro.core.quant import luq_scale
     k1, k2 = jax.random.split(key)
     up = jax.random.uniform(k1, x.shape)
     ur = jax.random.uniform(k2, x.shape)
     if use_kernel:
         return luq_pallas(x, up, ur, bits, interpret=not _is_tpu())
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)))
-    return ref.luq_ref(x, up, ur, scale, bits)
+    # the guarded scale (all-zero inputs -> 1.0) is shared with
+    # core.quant.luq_quantize and the kernel path — one helper, no drift
+    return ref.luq_ref(x, up, ur, luq_scale(x), bits)

@@ -1,0 +1,29 @@
+"""Hypothesis fuzz of the FlatSpec stacked round-trip: flatten_stacked ->
+unflatten_stacked must be bit-exact for ARBITRARY client counts, client
+tiles, and mixed-dtype leaf layouts (client-axis padding included). The
+deterministic fixed cases live in tests/test_tiled_kernel.py; this module
+explores the space.
+"""
+import pytest
+
+# hypothesis is an optional test dependency; without the guard the whole
+# tier-1 suite dies at collection (pytest stops on a collection error)
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from test_tiled_kernel import _LEAF_DTYPES, check_stacked_roundtrip_bit_exact
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 23),
+    client_tile=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2 ** 16),
+    layout=st.lists(
+        st.tuples(st.lists(st.integers(1, 5), min_size=0, max_size=3),
+                  st.integers(0, len(_LEAF_DTYPES) - 1)),
+        min_size=1, max_size=5),
+)
+def test_flat_spec_stacked_roundtrip_bit_exact(n, client_tile, seed, layout):
+    check_stacked_roundtrip_bit_exact(n, client_tile, seed,
+                                      [(tuple(s), d) for s, d in layout])
