@@ -15,6 +15,11 @@ meaningless — TPU is the target).
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -109,6 +114,10 @@ def run(quick=True):
             "speedup": t_u / t_f,
         })
 
+    # sharded-vs-replicated round: runs in a forced-8-device subprocess
+    # (only launch/dryrun.py and spawned children ever fake the topology)
+    sharded = _run_sharded_subprocess()
+
     bytes_round = (4 * n + 2) * D * 4        # r/w server + clients + inits
     bytes_agg = (2 * n + 2) * D * 4
     rows = {
@@ -123,6 +132,7 @@ def run(quick=True):
         "clients": n,
         "client_tile": CLIENT_TILE,
         "n_sweep": n_sweep,
+        "sharded_round": sharded,
         "fused_kernel_interpret_matches_ref": bool(kernel_ok),
         "note": "fused = the engine's real round path (agg + reset, one pass);"
                 " unfused = the seed's multi-pass arithmetic. n_sweep holds"
@@ -134,3 +144,98 @@ def run(quick=True):
     }
     save_artifact("kernel_bench", rows)
     return rows
+
+
+# ---------------------------------------------------------------------------
+# Sharded-vs-replicated round (docs/architecture.md §6)
+# ---------------------------------------------------------------------------
+
+def _run_sharded_subprocess(timeout: int = 900) -> dict:
+    """Spawn ``python -m benchmarks.kernel_bench --sharded-child`` under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 and parse its JSON.
+    The fake topology must never leak into this process (see
+    tests/conftest.py), hence the subprocess."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    try:
+        out = subprocess.run(
+            [sys.executable, "-m", "benchmarks.kernel_bench",
+             "--sharded-child"],
+            capture_output=True, text=True, env=env, cwd=root,
+            timeout=timeout)
+        if out.returncode != 0:
+            return {"status": "error", "stderr": out.stderr[-2000:]}
+        return json.loads(out.stdout.strip().splitlines()[-1])
+    except Exception as e:  # noqa: BLE001 — benchmarks record, don't die
+        return {"status": "error", "error": f"{type(e).__name__}: {e}"}
+
+
+def _sharded_child():
+    """Child body: time the fused FAVAS round on flat buffers sharded over
+    an 8-way ("model",) mesh (shard_map/pjit dispatch via
+    ``round_engine.fused_bucket_update``) vs the replicated single-device
+    engine at the same shapes, and audit the sharded HLO for all-gathers.
+    CPU "devices" here are host threads, so the us columns measure overhead
+    structure, not TPU speedup — the all_gather_bytes column is the point:
+    the sharded round moves NO full buffer across the mesh."""
+    from jax.sharding import NamedSharding
+    from repro.core import round_engine
+    from repro.launch.mesh import make_model_mesh
+    from repro.launch.roofline import collective_ops
+
+    mesh = make_model_mesh(8)
+    rec = {"status": "ok", "devices": int(jax.device_count()), "sweep": []}
+    for ns, Ds in ((32, 1 << 14), (256, 1 << 14)):
+        tree = {"wq": {"w": jnp.zeros((Ds // 128, 128), jnp.float32)}}
+        spec_s = round_engine.make_flat_spec(tree, n_clients=ns,
+                                             shard_axes=[1], model_shards=8)
+        spec_r = round_engine.make_flat_spec(tree, n_clients=ns)
+        kw = jax.random.split(jax.random.PRNGKey(ns), 5)
+        rows = spec_s.n_padded or ns
+        srv = jax.random.normal(kw[0], (spec_s.bucket_padded[0],))
+        cli = jax.random.normal(kw[1], (rows, spec_s.bucket_padded[0]))
+        ini = jax.random.normal(kw[2], (rows, spec_s.bucket_padded[0]))
+        alpha = jnp.pad(jax.random.uniform(kw[3], (ns,), minval=1.0,
+                                           maxval=8.0), (0, rows - ns),
+                        constant_values=1.0)
+        mask = jnp.pad((jax.random.uniform(kw[4], (ns,)) > 0.5)
+                       .astype(jnp.float32), (0, rows - ns))
+        s = float(mask.sum())
+        sh = round_engine.engine_sharding(spec_s, mesh)
+        srv_s = jax.device_put(srv, sh.server[0])
+        cli_s = jax.device_put(cli, sh.clients[0])
+        ini_s = jax.device_put(ini, sh.inits[0])
+
+        step_sh = jax.jit(lambda w, c, i, a, m: round_engine.fused_bucket_update(
+            spec_s, 0, w, c, i, a, m, s, n_logical=ns, mesh=mesh,
+            use_kernel=False))
+        step_rep = jax.jit(lambda w, c, i, a, m: round_engine.fused_bucket_update(
+            spec_r, 0, w, c, i, a, m, s, n_logical=ns, use_kernel=False))
+        t_sh = timed(step_sh, srv_s, cli_s, ini_s, alpha, mask, reps=5)
+        t_rep = timed(step_rep, srv, cli, ini, alpha, mask, reps=5)
+        hlo = step_sh.lower(srv_s, cli_s, ini_s, alpha, mask).compile().as_text()
+        ag = [b for kind, b in collective_ops(hlo) if kind == "all-gather"]
+        bytes_n = (4 * rows + 2) * spec_s.bucket_padded[0] * 4
+        rec["sweep"].append({
+            "n": ns, "D": spec_s.bucket_padded[0], "bytes": bytes_n,
+            "sharded_us": t_sh, "replicated_us": t_rep,
+            "sharded_gbps": bytes_n / (t_sh * 1e-6) / 1e9,
+            "replicated_gbps": bytes_n / (t_rep * 1e-6) / 1e9,
+            "all_gather_ops": len(ag),
+            "all_gather_bytes_max": max(ag) if ag else 0,
+            "full_buffer_bytes": spec_s.bucket_padded[0] * 4,
+        })
+    rec["note"] = ("8 forced host devices: timing shows structure/overhead "
+                   "only (TPU is the target); all_gather_bytes_max == 0 is "
+                   "the acceptance signal — the sharded round never "
+                   "gathers a full flat buffer.")
+    print(json.dumps(rec))
+
+
+if __name__ == "__main__":
+    if "--sharded-child" in sys.argv:
+        _sharded_child()
+    else:
+        run(quick="--full" not in sys.argv)

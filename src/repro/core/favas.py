@@ -112,13 +112,17 @@ def favas_init(params, cfg: FavasConfig, key) -> FavasState:
 
 def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable,
                 lambdas, det_alpha: Optional[jnp.ndarray] = None,
-                use_kernel: Optional[bool] = None):
+                use_kernel: Optional[bool] = None, mesh=None):
     """One server round on the flat-buffer engine, pytree API preserved.
     Returns (new_state, metrics). Jit/pjit this.
 
     ``use_kernel``: None -> Pallas kernel on TPU, jnp oracle elsewhere;
-    True/False force the choice (True runs interpret mode off-TPU)."""
-    spec = round_engine.make_flat_spec(state.server, n_clients=cfg.n_clients)
+    True/False force the choice (True runs interpret mode off-TPU).
+    ``mesh``: bucket the flat buffers by (dtype, sharding group) and keep
+    model-sharded leaves sharded through the fused round (no full-buffer
+    gather; see core/round_engine.py and docs/architecture.md §6)."""
+    spec = round_engine.make_flat_spec(state.server, n_clients=cfg.n_clients,
+                                       mesh=mesh)
     est = EngineState(
         server=round_engine.flatten_tree(spec, state.server),
         clients=round_engine.flatten_stacked(spec, state.clients),
@@ -127,7 +131,7 @@ def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable
         key=state.key, t=state.t)
     est, metrics = round_engine.engine_round(
         spec, est, batch, cfg=cfg, loss_fn=loss_fn, lambdas=lambdas,
-        det_alpha=det_alpha, use_kernel=use_kernel)
+        det_alpha=det_alpha, use_kernel=use_kernel, mesh=mesh)
     new_state = FavasState(
         server=round_engine.unflatten_tree(spec, est.server),
         clients=round_engine.unflatten_stacked(spec, est.clients),

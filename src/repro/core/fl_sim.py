@@ -30,7 +30,6 @@ import numpy as np
 from repro.models.classifier import mlp_init, mlp_apply, classifier_loss, accuracy
 from repro.core.quant import quantize_tree
 from repro.core import round_engine
-from repro.kernels.ops import favas_fused_flat
 from repro.utils.tree import tree_map
 
 SERVER_WAIT = 4.0
@@ -90,8 +89,15 @@ def _local_sgd_single(loss_fn, eta):
     return jax.jit(run)
 
 
-def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
-    """data = (x_train, y_train, x_test, y_test, parts). Returns curves."""
+def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128,
+                   mesh=None) -> Dict:
+    """data = (x_train, y_train, x_test, y_test, parts). Returns curves.
+
+    ``mesh``: optional device mesh with a "model" axis — the FAVAS branch
+    then builds a sharding-aware FlatSpec (hidden-dim leaves bucketed into
+    model-sharded flat buffers, see sharding/rules.py) and runs the fused
+    poll through ``round_engine.fused_bucket_update`` without gathering the
+    buffers. CPU default (mesh=None) is unchanged."""
     xtr, ytr, xte, yte, parts = data
     n_classes = int(ytr.max()) + 1
     d_in = xtr.shape[1]
@@ -136,8 +142,9 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
             # bucket instead of ~6 tree_map sweeps; trees are materialized
             # only at the sgd and eval boundaries (core/round_engine.py).
             # The spec is client-aware: beyond one client tile the row axis
-            # is zero-padded so the tiled kernel never re-pads.
-            spec = round_engine.make_flat_spec(server, n_clients=n)
+            # is zero-padded so the tiled kernel never re-pads. With a mesh
+            # it is also sharding-aware (model-sharded hidden-dim buckets).
+            spec = round_engine.make_flat_spec(server, n_clients=n, mesh=mesh)
             srv_f = round_engine.flatten_tree(spec, server)
             cli_f = round_engine.stack_server_rows(spec, srv_f, n)
             ini_f = cli_f
@@ -183,11 +190,12 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128) -> Dict:
                 cli_f = round_engine.flatten_stacked(spec, clients)
                 alpha_p = round_engine.pad_client_vec(spec, alpha, 1.0)
                 mj_p = round_engine.pad_client_vec(spec, mj, 0.0)
-                out = [favas_fused_flat(w, c, i, alpha_p, mj_p,
-                                        float(cfg.s_selected), progress=p,
-                                        client_tile=spec.client_tile,
-                                        n_logical=n)
-                       for w, c, i, p in zip(srv_f, cli_f, ini_f, prog_f)]
+                out = [round_engine.fused_bucket_update(
+                           spec, b, w, c, i, alpha_p, mj_p,
+                           float(cfg.s_selected), progress_b=p,
+                           n_logical=n, mesh=mesh)
+                       for b, (w, c, i, p) in enumerate(
+                           zip(srv_f, cli_f, ini_f, prog_f))]
                 srv_f = tuple(o[0] for o in out)
                 cli_f = tuple(o[1] for o in out)
                 ini_f = tuple(o[2] for o in out)

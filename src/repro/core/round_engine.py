@@ -47,7 +47,7 @@ from repro.utils.tree import tree_map
 @dataclasses.dataclass(frozen=True)
 class FlatSpec:
     """Static (hashable, trace-free) layout of a parameter pytree flattened
-    into one contiguous buffer per distinct leaf dtype ("bucket").
+    into one contiguous buffer per (leaf dtype, sharding group) "bucket".
 
     Leaves keep their original dtype; mixed-precision trees get one buffer
     per dtype so no storage precision is lost. Buffer length is padded up to
@@ -61,49 +61,105 @@ class FlatSpec:
     never re-pads either axis. Padded rows are all-zero with zero selection
     mask and unit alpha — they contribute exactly nothing to the masked
     aggregation and provably stay zero across rounds.
+
+    When built with ``mesh`` (or explicit ``shard_axes``/``model_shards``),
+    the spec is additionally *sharding-aware* (docs/architecture.md §6):
+    leaves whose resolved PartitionSpec (``sharding/rules.py``) puts a dim
+    on the "model" mesh axis land in a separate bucket per dtype, laid out
+    SHARD-MAJOR — the flat buffer is the concatenation over the S model
+    shards of that shard's slice of every leaf, each per-shard segment
+    independently padded to the lane tile. Partitioning the flat axis into S
+    equal contiguous blocks (``PartitionSpec("model")``) therefore hands
+    each device exactly its own leaf shards: flatten, the fused round, and
+    unflatten all stay communication-free on the model axis (no full-buffer
+    all-gather; see ``fused_bucket_update``). Invariant:
+    ``bucket_padded[b] == bucket_shards[b] * bucket_shard_padded[b]``.
     """
     treedef: Any
     shapes: tuple                 # per leaf, original shape
     dtypes: tuple                 # per leaf, jnp dtype name (str, hashable)
     bucket_of: tuple              # per leaf, bucket index
     offsets: tuple                # per leaf, start offset within its bucket
+    #                               (per-shard units for sharded buckets)
     bucket_dtypes: tuple          # per bucket, dtype name
-    bucket_sizes: tuple           # per bucket, unpadded element count
-    bucket_padded: tuple          # per bucket, padded element count
+    bucket_sizes: tuple           # per bucket, unpadded element count (total)
+    bucket_padded: tuple          # per bucket, padded element count (total)
     n_clients: Optional[int] = None   # logical client rows (None: not stacked)
     n_padded: Optional[int] = None    # stored client rows incl. padding
     client_tile: Optional[int] = None  # kernel client-axis tile
+    shard_axes: tuple = ()        # per leaf, model-sharded dim index or None
+    bucket_shards: tuple = ()     # per bucket, model shard count (1 = replicated)
+    bucket_shard_sizes: tuple = ()   # per bucket, unpadded elements PER SHARD
+    bucket_shard_padded: tuple = ()  # per bucket, padded elements PER SHARD
+    mesh_axis: Optional[str] = None  # mesh axis sharded buckets live on
 
     @property
     def n_buckets(self) -> int:
         return len(self.bucket_dtypes)
 
+    def shards(self, b: int) -> int:
+        """Model shard count of bucket ``b`` (1 for pre-sharding specs)."""
+        return self.bucket_shards[b] if self.bucket_shards else 1
+
 
 def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
-                   client_tile: int = CLIENT_TILE) -> FlatSpec:
+                   client_tile: int = CLIENT_TILE, mesh=None,
+                   shard_axes: Optional[Sequence] = None,
+                   model_shards: Optional[int] = None) -> FlatSpec:
     """Build the layout from a pytree of arrays / ShapeDtypeStructs.
 
     ``n_clients``: make the spec client-aware (see class docstring). Row
     padding only kicks in beyond one client block (n > client_tile), so
-    small federations carry no extra rows."""
+    small federations carry no extra rows.
+
+    ``mesh``: make the spec sharding-aware — leaves are classified through
+    ``sharding.rules.model_shard_axes`` (the same regex rules pjit uses)
+    and model-sharded leaves get their own shard-major bucket per dtype.
+    ``shard_axes`` (a per-leaf list of dim indices / None, aligned with
+    ``tree_leaves``) overrides the rule lookup; ``model_shards`` overrides
+    the shard count (needed when passing ``shard_axes`` without a mesh —
+    layout is pure metadata and never touches devices). A leaf whose
+    nominated dim does not divide by the shard count falls back to the
+    replicated bucket, mirroring ``sharding.rules.check_divisible``."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
-    shapes, dtypes, bucket_of, offsets = [], [], [], []
-    bucket_dtypes, cursors = [], []
-    for leaf in leaves:
+    S0 = model_shards or 1
+    if mesh is not None and model_shards is None:
+        S0 = dict(zip(mesh.axis_names, mesh.devices.shape)).get("model", 1)
+    if shard_axes is None:
+        if mesh is not None and S0 > 1:
+            from repro.sharding.rules import model_shard_axes  # lazy: no cycle
+            shard_axes = model_shard_axes(tree, mesh)
+        else:
+            shard_axes = [None] * len(leaves)
+    if len(shard_axes) != len(leaves):
+        raise ValueError(
+            f"shard_axes has {len(shard_axes)} entries for {len(leaves)} leaves")
+    shapes, dtypes, bucket_of, offsets, axes_out = [], [], [], [], []
+    keys, bucket_dtypes, shards_l, cursors = [], [], [], []
+    for leaf, ax in zip(leaves, shard_axes):
         dt = jnp.dtype(leaf.dtype).name
-        if dt not in bucket_dtypes:
-            bucket_dtypes.append(dt)
-            cursors.append(0)
-        b = bucket_dtypes.index(dt)
         size = 1
         for d in leaf.shape:
             size *= int(d)
+        if (ax is not None and (S0 <= 1 or ax >= len(leaf.shape)
+                                or leaf.shape[ax] % S0 != 0)):
+            ax = None                    # non-dividing dim: replicate
+        key = (dt, ax is not None)
+        if key not in keys:
+            keys.append(key)
+            bucket_dtypes.append(dt)
+            shards_l.append(S0 if ax is not None else 1)
+            cursors.append(0)
+        b = keys.index(key)
         shapes.append(tuple(leaf.shape))
         dtypes.append(dt)
         bucket_of.append(b)
         offsets.append(cursors[b])
-        cursors[b] += size
-    padded = tuple(c + ((-c) % tile) for c in cursors)
+        cursors[b] += size // shards_l[b]
+        axes_out.append(ax)
+    shard_padded = tuple(c + ((-c) % tile) for c in cursors)
+    padded = tuple(sp * s for sp, s in zip(shard_padded, shards_l))
+    sizes = tuple(c * s for c, s in zip(cursors, shards_l))
     n_padded = None
     if n_clients is not None:
         n_padded = (n_clients if n_clients <= client_tile
@@ -111,24 +167,47 @@ def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
     return FlatSpec(treedef=treedef, shapes=tuple(shapes), dtypes=tuple(dtypes),
                     bucket_of=tuple(bucket_of), offsets=tuple(offsets),
                     bucket_dtypes=tuple(bucket_dtypes),
-                    bucket_sizes=tuple(cursors), bucket_padded=padded,
+                    bucket_sizes=sizes, bucket_padded=padded,
                     n_clients=n_clients, n_padded=n_padded,
-                    client_tile=client_tile if n_clients is not None else None)
+                    client_tile=client_tile if n_clients is not None else None,
+                    shard_axes=tuple(axes_out),
+                    bucket_shards=tuple(shards_l),
+                    bucket_shard_sizes=tuple(cursors),
+                    bucket_shard_padded=shard_padded,
+                    mesh_axis="model" if any(s > 1 for s in shards_l) else None)
 
 
 def flatten_tree(spec: FlatSpec, tree) -> tuple:
-    """Pytree -> tuple of (Dp_b,) flat buffers (one per dtype bucket)."""
+    """Pytree -> tuple of (Dp_b,) flat buffers (one per spec bucket).
+
+    Sharded buckets are laid out shard-major: leaf dims sharded on the model
+    axis move to the front and split into S rows before concatenation, so
+    every op here is shard-local under GSPMD (transpose + reshape of the
+    sharded dim by exactly the shard count — no cross-device data motion)."""
     leaves = jax.tree_util.tree_leaves(tree)
     parts = [[] for _ in range(spec.n_buckets)]
-    for leaf, b in zip(leaves, spec.bucket_of):
-        parts[b].append(jnp.ravel(leaf))
+    for leaf, b, ax in zip(leaves, spec.bucket_of, spec.shard_axes):
+        S = spec.shards(b)
+        if S > 1:
+            parts[b].append(jnp.moveaxis(leaf, ax, 0).reshape(S, -1))
+        else:
+            parts[b].append(jnp.ravel(leaf))
     out = []
     for b in range(spec.n_buckets):
-        buf = jnp.concatenate(parts[b]) if len(parts[b]) > 1 else parts[b][0]
-        pad = spec.bucket_padded[b] - spec.bucket_sizes[b]
-        if pad:
-            buf = jnp.pad(buf, (0, pad))
-        out.append(buf)
+        S = spec.shards(b)
+        if S > 1:
+            buf = (jnp.concatenate(parts[b], axis=1) if len(parts[b]) > 1
+                   else parts[b][0])
+            pad = spec.bucket_shard_padded[b] - spec.bucket_shard_sizes[b]
+            if pad:
+                buf = jnp.pad(buf, ((0, 0), (0, pad)))
+            out.append(buf.reshape(-1))
+        else:
+            buf = jnp.concatenate(parts[b]) if len(parts[b]) > 1 else parts[b][0]
+            pad = spec.bucket_padded[b] - spec.bucket_sizes[b]
+            if pad:
+                buf = jnp.pad(buf, (0, pad))
+            out.append(buf)
     return tuple(out)
 
 
@@ -149,29 +228,51 @@ def flatten_stacked(spec: FlatSpec, tree) -> tuple:
                 f"for n_clients={spec.n_clients}")
         rpad = spec.n_padded - n
     parts = [[] for _ in range(spec.n_buckets)]
-    for leaf, b in zip(leaves, spec.bucket_of):
-        parts[b].append(leaf.reshape(n, -1))
+    for leaf, b, ax in zip(leaves, spec.bucket_of, spec.shard_axes):
+        S = spec.shards(b)
+        if S > 1:
+            parts[b].append(jnp.moveaxis(leaf, 1 + ax, 1).reshape(n, S, -1))
+        else:
+            parts[b].append(leaf.reshape(n, -1))
     out = []
     for b in range(spec.n_buckets):
-        buf = (jnp.concatenate(parts[b], axis=1) if len(parts[b]) > 1
-               else parts[b][0])
-        pad = spec.bucket_padded[b] - spec.bucket_sizes[b]
-        if pad or rpad:
-            buf = jnp.pad(buf, ((0, rpad), (0, pad)))
-        out.append(buf)
+        S = spec.shards(b)
+        if S > 1:
+            buf = (jnp.concatenate(parts[b], axis=2) if len(parts[b]) > 1
+                   else parts[b][0])
+            pad = spec.bucket_shard_padded[b] - spec.bucket_shard_sizes[b]
+            if pad or rpad:
+                buf = jnp.pad(buf, ((0, rpad), (0, 0), (0, pad)))
+            out.append(buf.reshape(n + rpad, spec.bucket_padded[b]))
+        else:
+            buf = (jnp.concatenate(parts[b], axis=1) if len(parts[b]) > 1
+                   else parts[b][0])
+            pad = spec.bucket_padded[b] - spec.bucket_sizes[b]
+            if pad or rpad:
+                buf = jnp.pad(buf, ((0, rpad), (0, pad)))
+            out.append(buf)
     return tuple(out)
 
 
 def unflatten_tree(spec: FlatSpec, bufs: Sequence):
-    """Tuple of (Dp_b,) buffers -> pytree with the original leaf layout."""
+    """Tuple of (Dp_b,) buffers -> pytree with the original leaf layout.
+    Sharded buckets invert the shard-major layout (shard-local under GSPMD,
+    exact inverse of ``flatten_tree`` — round-trips are bit-exact)."""
     leaves = []
-    for shape, dt, b, off in zip(spec.shapes, spec.dtypes, spec.bucket_of,
-                                 spec.offsets):
+    for shape, dt, b, off, ax in zip(spec.shapes, spec.dtypes, spec.bucket_of,
+                                     spec.offsets, spec.shard_axes):
         size = 1
         for d in shape:
             size *= d
-        leaves.append(jax.lax.dynamic_slice_in_dim(bufs[b], off, size)
-                      .reshape(shape))
+        S = spec.shards(b)
+        if S > 1:
+            rows = bufs[b].reshape(S, spec.bucket_shard_padded[b])
+            rows = jax.lax.dynamic_slice_in_dim(rows, off, size // S, axis=1)
+            moved = (shape[ax],) + shape[:ax] + shape[ax + 1:]
+            leaves.append(jnp.moveaxis(rows.reshape(moved), 0, ax))
+        else:
+            leaves.append(jax.lax.dynamic_slice_in_dim(bufs[b], off, size)
+                          .reshape(shape))
     return jax.tree_util.tree_unflatten(spec.treedef, leaves)
 
 
@@ -179,8 +280,8 @@ def unflatten_stacked(spec: FlatSpec, bufs: Sequence):
     """Tuple of (Np_b, Dp_b) buffers -> client-stacked pytree (padded client
     rows, if any, are dropped)."""
     leaves = []
-    for shape, dt, b, off in zip(spec.shapes, spec.dtypes, spec.bucket_of,
-                                 spec.offsets):
+    for shape, dt, b, off, ax in zip(spec.shapes, spec.dtypes, spec.bucket_of,
+                                     spec.offsets, spec.shard_axes):
         buf = bufs[b]
         n = buf.shape[0]
         if spec.n_padded is not None:
@@ -194,9 +295,16 @@ def unflatten_stacked(spec: FlatSpec, bufs: Sequence):
         size = 1
         for d in shape:
             size *= d
-        leaves.append(
-            jax.lax.dynamic_slice_in_dim(buf, off, size, axis=1)
-            .reshape((n,) + shape))
+        S = spec.shards(b)
+        if S > 1:
+            rows = buf.reshape(n, S, spec.bucket_shard_padded[b])
+            rows = jax.lax.dynamic_slice_in_dim(rows, off, size // S, axis=2)
+            moved = (n, shape[ax]) + shape[:ax] + shape[ax + 1:]
+            leaves.append(jnp.moveaxis(rows.reshape(moved), 1, 1 + ax))
+        else:
+            leaves.append(
+                jax.lax.dynamic_slice_in_dim(buf, off, size, axis=1)
+                .reshape((n,) + shape))
     return jax.tree_util.tree_unflatten(spec.treedef, leaves)
 
 
@@ -236,6 +344,114 @@ def stack_server_rows(spec: FlatSpec, server_bufs: Sequence, n: int) -> tuple:
 
 
 # ---------------------------------------------------------------------------
+# Mesh-aware execution: shardings, constraints, and the per-bucket fused call
+# ---------------------------------------------------------------------------
+
+def bucket_partition_specs(spec: FlatSpec, *, stacked: bool) -> tuple:
+    """Per-bucket ``PartitionSpec`` for flat buffers: sharded buckets put the
+    lane axis on the spec's model mesh axis, replicated buckets on nothing.
+    ``stacked``: (n, Dp) client/init matrices (leading client axis is NOT
+    model-sharded) vs (Dp,) server vectors."""
+    from jax.sharding import PartitionSpec as P
+    out = []
+    for b in range(spec.n_buckets):
+        ax = spec.mesh_axis if spec.shards(b) > 1 else None
+        out.append(P(None, ax) if stacked else P(ax))
+    return tuple(out)
+
+
+def engine_sharding(spec: FlatSpec, mesh):
+    """``NamedSharding`` pytree for an :class:`EngineState` on ``mesh`` —
+    what ``jax.device_put`` of the initial state and the jitted round's
+    output constraints use. Sharded buckets live with their lane axis on
+    "model"; counters/stale/key/t are replicated."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    srv = tuple(NamedSharding(mesh, p)
+                for p in bucket_partition_specs(spec, stacked=False))
+    stk = tuple(NamedSharding(mesh, p)
+                for p in bucket_partition_specs(spec, stacked=True))
+    return EngineState(server=srv, clients=stk, inits=stk,
+                       counters=rep, stale=rep, key=rep, t=rep)
+
+
+def _constrain_buckets(spec: FlatSpec, mesh, bufs, *, stacked: bool) -> tuple:
+    """Pin per-bucket flat buffers to their mesh sharding (None entries pass
+    through). Keeps GSPMD from replicating the buffers around the
+    flatten/unflatten transposes in the round body."""
+    if mesh is None:
+        return tuple(bufs)
+    from jax.sharding import NamedSharding
+    specs = bucket_partition_specs(spec, stacked=stacked)
+    return tuple(
+        x if x is None or spec.shards(b) <= 1
+        else jax.lax.with_sharding_constraint(x, NamedSharding(mesh, specs[b]))
+        for b, x in enumerate(bufs))
+
+
+def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
+                        alpha_p, mask_p, s: float, *, progress_b=None,
+                        n_logical: Optional[int] = None, mesh=None,
+                        use_kernel: Optional[bool] = None):
+    """One bucket's fused aggregation + selected-client reset, mesh-aware.
+
+    Dispatch (docs/architecture.md §6):
+
+    * no mesh, or a replicated bucket -> plain ``favas_fused_flat`` (kernel
+      or oracle; GSPMD replicates it on a mesh);
+    * sharded bucket + kernel -> ``shard_map`` over the model axis: each
+      device runs the Pallas kernel on its own (n, Dp_b/S) flat slice. The
+      slice is lane-tile aligned by construction (per-shard padding), the
+      client reduction is shard-local, and the body contains no collectives
+      — the round cannot all-gather the buffer;
+    * sharded bucket + oracle -> the jnp expression under pjit with explicit
+      output ``PartitionSpec`` constraints; GSPMD partitions the elementwise
+      lanes and the (unsharded) client-axis reduction locally.
+
+    Returns (server_new, clients_new, inits_new) with the inputs' shardings.
+    """
+    if mesh is None or spec.shards(b) <= 1:
+        return favas_fused_flat(server_b, trained_b, inits_b, alpha_p, mask_p,
+                                float(s), progress=progress_b,
+                                client_tile=spec.client_tile,
+                                n_logical=n_logical, use_kernel=use_kernel)
+    kernel_active = (use_kernel if use_kernel is not None
+                     else jax.default_backend() == "tpu")
+    from jax.sharding import PartitionSpec as P
+    lane, row, vec = P(spec.mesh_axis), P(None, spec.mesh_axis), P(None)
+    if kernel_active:
+        from jax.experimental.shard_map import shard_map
+
+        def body(*ops):
+            if progress_b is None:
+                srv, cli, ini, al, mk = ops
+                pr = None
+            else:
+                srv, cli, ini, pr, al, mk = ops
+            return favas_fused_flat(srv, cli, ini, al, mk, float(s),
+                                    progress=pr, client_tile=spec.client_tile,
+                                    n_logical=n_logical, use_kernel=True)
+
+        operands = [server_b, trained_b, inits_b]
+        in_specs = [lane, row, row]
+        if progress_b is not None:
+            operands.append(progress_b)
+            in_specs.append(row)
+        operands += [alpha_p, mask_p]
+        in_specs += [vec, vec]
+        return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=(lane, row, row),
+                         check_rep=False)(*operands)
+    from jax.sharding import NamedSharding
+    out = favas_fused_flat(server_b, trained_b, inits_b, alpha_p, mask_p,
+                           float(s), progress=progress_b,
+                           client_tile=spec.client_tile,
+                           n_logical=n_logical, use_kernel=False)
+    return tuple(jax.lax.with_sharding_constraint(o, NamedSharding(mesh, p))
+                 for o, p in zip(out, (lane, row, row)))
+
+
+# ---------------------------------------------------------------------------
 # Engine state (flat buffers held across rounds)
 # ---------------------------------------------------------------------------
 
@@ -260,9 +476,25 @@ class EngineState:
 
 
 def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
-    """All clients start from the server model (Algorithm 1 line 16).
+    """Build the initial :class:`EngineState` from a parameter pytree.
+
+    All clients start from the server model (Algorithm 1 line 16): the
+    server buffer is ``params`` flattened per ``spec``; the client and init
+    stacks are that row broadcast to ``cfg.n_clients`` distinct buffers.
     Client rows beyond ``n`` (the client-tile padding of a client-aware
-    spec) are zero and stay zero across rounds."""
+    spec) are zero and stay zero across rounds; per-shard lane tails of a
+    sharding-aware spec are likewise zero forever.
+
+    Args:
+      spec: layout from :func:`make_flat_spec` (must be client-aware with
+        ``n_clients == cfg.n_clients`` if built with ``n_clients``).
+      params: parameter pytree matching ``spec.treedef``.
+      cfg: :class:`repro.core.favas.FavasConfig` (reads ``n_clients``).
+      key: PRNG key stored in the state and split every round.
+
+    Returns an :class:`EngineState` on the default device; on a mesh,
+    ``jax.device_put`` it with :func:`engine_sharding` (``RoundEngine``
+    does both)."""
     n = cfg.n_clients
     server = flatten_tree(spec, params)
     clients = stack_server_rows(spec, server, n)
@@ -294,8 +526,13 @@ def _local_training(loss_fn: Callable, cfg, clients_tree, counters,
             k, batch_k = inp
             loss, g = jax.value_and_grad(loss_fn)(p, batch_k)
             live = ((q0 + k) < q1).astype(jnp.float32)
-            p = tree_map(lambda pp, gg: pp - cfg.eta * live * gg.astype(pp.dtype),
-                         p, g)
+            # update in f32, store back in the leaf dtype: keeps the scan
+            # carry type stable for bf16 leaves (f32 leaves are unchanged —
+            # the expression is the same f32 arithmetic as before)
+            p = tree_map(
+                lambda pp, gg: (pp - cfg.eta * live * gg.astype(jnp.float32)
+                                ).astype(pp.dtype),
+                p, g)
             return p, loss * live
         ks = jnp.arange(cfg.R)
         params, losses = jax.lax.scan(step, params, (ks, data))
@@ -307,12 +544,34 @@ def _local_training(loss_fn: Callable, cfg, clients_tree, counters,
 def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
                  loss_fn: Callable, lambdas,
                  det_alpha: Optional[jnp.ndarray] = None,
-                 use_kernel: Optional[bool] = None):
+                 use_kernel: Optional[bool] = None, mesh=None):
     """One FAVAS server round on flat buffers. Pure; jit/pjit this.
 
     The hot path is: unflatten clients -> vmapped local SGD -> flatten ->
-    ONE fused aggregation+reset pass per dtype bucket. No per-leaf tree_map
-    touches the aggregation."""
+    ONE fused aggregation+reset pass per bucket. No per-leaf tree_map
+    touches the aggregation.
+
+    Args:
+      spec: the :func:`make_flat_spec` layout the buffers follow.
+      state: current :class:`EngineState`; donate it when jitting.
+      batch: pytree with leading dims (n, R, ...) — one microbatch per
+        client per potential local step.
+      cfg: :class:`FavasConfig` (n_clients, s_selected, local_steps, eta,
+        reweight, quant_bits).
+      loss_fn: ``loss_fn(params_pytree, microbatch) -> scalar``; vmapped
+        over the client axis inside.
+      lambdas: (n,) per-client heterogeneity rates for the step sampler.
+      det_alpha: (n,) deterministic eq. 3 coefficients (used when
+        ``cfg.reweight == "deterministic"``).
+      use_kernel: None -> Pallas kernel on TPU / jnp oracle elsewhere;
+        True/False force the choice (True runs interpret mode off-TPU).
+      mesh: optional device mesh matching a sharding-aware ``spec``. Sharded
+        buckets then run their fused pass via :func:`fused_bucket_update`
+        (shard_map on the kernel path, pjit constraints on the oracle path)
+        so the round never gathers a full buffer onto one device.
+
+    Returns ``(new_state, metrics)`` where metrics holds the live-step-
+    weighted ``loss``, ``mean_steps``, ``selected`` and ``stale_rounds``."""
     n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
     key, k_inc, k_sel, k_q = jax.random.split(state.key, 4)
 
@@ -341,9 +600,11 @@ def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
         inits_tree = unflatten_stacked(spec, state.inits)
         prog = quantize_tree(tree_map(jnp.subtract, trained_tree, inits_tree),
                              cfg.quant_bits, k_q)
-        progress = flatten_stacked(spec, prog)
+        progress = _constrain_buckets(spec, mesh, flatten_stacked(spec, prog),
+                                      stacked=True)
 
-    trained = flatten_stacked(spec, trained_tree)
+    trained = _constrain_buckets(spec, mesh, flatten_stacked(spec, trained_tree),
+                                 stacked=True)
 
     # 4+5. fused aggregation + selected-client reset: one pass per bucket.
     # alpha/mask ride to the kernel padded alongside the buffers' client
@@ -354,10 +615,10 @@ def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     m_p = pad_client_vec(spec, m, 0.0)
     server_new, clients_new, inits_new = [], [], []
     for b in range(spec.n_buckets):
-        srv, cli, ini = favas_fused_flat(
-            state.server[b], trained[b], state.inits[b], alpha_p, m_p,
-            float(s), progress=progress[b], client_tile=spec.client_tile,
-            n_logical=n, use_kernel=use_kernel)
+        srv, cli, ini = fused_bucket_update(
+            spec, b, state.server[b], trained[b], state.inits[b], alpha_p,
+            m_p, float(s), progress_b=progress[b], n_logical=n, mesh=mesh,
+            use_kernel=use_kernel)
         server_new.append(srv)
         clients_new.append(cli)
         inits_new.append(ini)
@@ -407,15 +668,22 @@ def engine_variance(state: EngineState) -> jnp.ndarray:
 
 class RoundEngine:
     """Convenience wrapper owning the FlatSpec and the jitted, buffer-donating
-    round. The state never leaves flat form between rounds."""
+    round. The state never leaves flat form between rounds.
+
+    ``mesh``: run the engine mesh-native — the spec buckets leaves by
+    (dtype, sharding group), ``init_state`` places the buffers with
+    :func:`engine_sharding`, and every round keeps sharded buckets on the
+    model axis end-to-end (``--mesh`` in ``launch.train`` composes this with
+    ``--use-kernel``: kernel -> shard_map per shard, oracle -> pjit)."""
 
     def __init__(self, params_template, cfg, loss_fn: Callable, *,
                  lambdas=None, det_alpha=None, use_kernel: Optional[bool] = None,
-                 client_tile: int = CLIENT_TILE):
+                 client_tile: int = CLIENT_TILE, mesh=None):
         from repro.core.favas import client_lambdas  # cycle-free at call time
         self.cfg = cfg
+        self.mesh = mesh
         self.spec = make_flat_spec(params_template, n_clients=cfg.n_clients,
-                                   client_tile=client_tile)
+                                   client_tile=client_tile, mesh=mesh)
         self.loss_fn = loss_fn
         self.lambdas = (jnp.asarray(lambdas) if lambdas is not None
                         else jnp.asarray(client_lambdas(cfg)))
@@ -425,11 +693,14 @@ class RoundEngine:
             functools.partial(engine_round, self.spec, cfg=self.cfg,
                               loss_fn=self.loss_fn, lambdas=self.lambdas,
                               det_alpha=self.det_alpha,
-                              use_kernel=self.use_kernel),
+                              use_kernel=self.use_kernel, mesh=self.mesh),
             donate_argnums=(0,))
 
     def init_state(self, params, key) -> EngineState:
-        return engine_init(self.spec, params, self.cfg, key)
+        state = engine_init(self.spec, params, self.cfg, key)
+        if self.mesh is not None:
+            state = jax.device_put(state, engine_sharding(self.spec, self.mesh))
+        return state
 
     def step(self, state: EngineState, batch):
         """Jitted round; donates the previous state's buffers."""

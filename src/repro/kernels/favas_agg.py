@@ -153,7 +153,23 @@ def _agg_kernel_tiled(server_ref, clients_ref, inits_ref, coef_ref, mask_ref,
 def favas_agg_pallas(server, clients, inits, alpha, mask, s: float,
                      *, client_tile: int | None = None,
                      interpret: bool = True):
-    """server: (D,) f32/bf16; clients/inits: (n, D); alpha/mask: (n,)."""
+    """Single-output FAVAS aggregation kernel (Algorithm 1 line 10 + eq. 3).
+
+    Args:
+      server: (D,) f32/bf16 current server vector.
+      clients / inits: (n, D) stacked client / last-reset buffers.
+      alpha: (n,) eq. 3 reweight coefficients (clamped at 1e-9).
+      mask: (n,) 0/1 selection mask for this round's polled set.
+      s: |S_t| — the aggregation divides by ``s + 1``.
+      client_tile: sublane rows per client block (default ``CLIENT_TILE``);
+        ``n <= client_tile`` keeps the whole client axis resident in one
+        block, larger n streams blocks through the VMEM accumulator.
+      interpret: run the kernel in Pallas interpret mode (CPU validation);
+        pass False on TPU for the compiled kernel.
+
+    Returns the (D,) new server vector in the server's dtype. Lane padding
+    to ``TILE`` happens here if D is unaligned (the flat-buffer engine
+    pre-pads so this is a no-op on the engine path)."""
     n, D = clients.shape
     ct = client_tile or CLIENT_TILE
     pad = (-D) % TILE

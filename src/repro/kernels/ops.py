@@ -25,17 +25,33 @@ def favas_fused_flat(server, clients, inits, alpha, mask, s: float,
                      use_kernel=None):
     """Fused full-round aggregation + reset over flat buffers; see
     kernels/favas_agg.py. Returns (server_new, clients_new, inits_new).
-    ``progress``: optional explicit (quantized) transmitted progress.
-    ``client_tile``: client-axis tile for the kernel path (the jnp oracle is
-    shape-agnostic and ignores it). ``n_logical``: real client rows when the
-    buffers carry client-tile padding; the oracle path computes on the
-    logical rows and re-attaches the padding as exact zeros, so reducing
-    over a padded row count never reorders the fp32 client sum (keeps the
-    engine bit-identical to ``favas_round_reference`` at any n).
 
-    ``use_kernel=None`` (auto) picks the Pallas kernel on TPU and the jnp
-    oracle on CPU (interpret mode is a validation tool, not a fast path);
-    True forces the kernel (interpret off-TPU), False forces the oracle."""
+    Args:
+      server: (D,) flat server vector; clients / inits: (n, D) stacks.
+      alpha / mask: (n,) eq. 3 coefficients and 0/1 selection mask, already
+        padded alongside any client-row padding (unit alpha / zero mask on
+        padded rows keeps them exact no-ops).
+      s: |S_t|; the aggregation divides by ``s + 1``.
+      progress: optional explicit (n, D) transmitted progress (e.g. the
+        LUQ-quantized client deltas); None means ``clients - inits``,
+        computed inside. Resets always use full-precision ``clients`` —
+        quantization is communication-only (paper Remark 1).
+      client_tile: client-axis tile for the kernel path (the jnp oracle is
+        shape-agnostic and ignores it).
+      n_logical: real client rows when the buffers carry client-tile
+        padding; the oracle path computes on the logical rows and
+        re-attaches the padding as exact zeros, so reducing over a padded
+        row count never reorders the fp32 client sum (keeps the engine
+        bit-identical to ``favas_round_reference`` at any n).
+      use_kernel: None (auto) picks the Pallas kernel on TPU and the jnp
+        oracle on CPU (interpret mode is a validation tool, not a fast
+        path); True forces the kernel (interpret off-TPU), False forces the
+        oracle.
+
+    On a device mesh, call this through
+    ``core.round_engine.fused_bucket_update`` — it wraps the kernel path in
+    ``shard_map`` over per-shard flat slices and pins the oracle path's
+    output shardings, so sharded buckets never gather."""
     if use_kernel is None:
         use_kernel = _is_tpu()
     if use_kernel:

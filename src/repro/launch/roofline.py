@@ -98,6 +98,20 @@ def _wire_factor(kind: str, g: int) -> float:
 BF16_DOT_TAGS = ("...d,df->...f", "ecd,edf->ecf", "ecf,efd->ecd")
 
 
+def collective_ops(hlo_text: str) -> List[Tuple[str, int]]:
+    """Flat (kind, output_bytes) list of every collective op in an HLO text,
+    ignoring trip counts — the raw census the sharded-engine acceptance
+    check reads (tests assert no all-gather at full-flat-buffer size; see
+    docs/architecture.md §6 and tests/test_sharded_engine.py)."""
+    out = []
+    for ln in hlo_text.splitlines():
+        m = _COLL_RE.search(ln)
+        if m:
+            dtype, dims, kind = m.groups()
+            out.append((kind, _shape_bytes(dtype, dims)))
+    return out
+
+
 def parse_hlo_collectives(hlo_text: str, *, bf16_dot_comms: bool = False) -> Dict:
     """Trip-count-aware collective byte accounting (per-device program).
 

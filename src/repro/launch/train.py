@@ -6,7 +6,9 @@ FAVAS server round over the resident clients, driven by the flat-buffer
 ``core.round_engine.RoundEngine``: parameters live in contiguous flat
 buffers across rounds, the jitted round donates them, and the fused
 aggregation+reset runs as one pass (Pallas kernel on TPU, jnp oracle on
-CPU; override with --use-kernel).
+CPU; override with --use-kernel). With --mesh the engine is sharded: flat
+buffers stay partitioned over the "model" mesh axis end-to-end
+(docs/architecture.md §6) and the round never gathers them.
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
       --steps 50 --n-clients 4 --s 2 --seq 128 --batch 4
@@ -49,6 +51,14 @@ def build_cli():
                     help="fused Pallas aggregation kernel: auto = TPU only "
                          "(CPU gets the jnp oracle), on = force (interpret "
                          "mode off-TPU), off = always the oracle")
+    ap.add_argument("--mesh", default="none",
+                    help="device mesh for the sharded flat-buffer engine: "
+                         "none (default, single-device), model / model=K "
+                         "(1-D tensor-parallel mesh over local devices), "
+                         "single, multi (production TPU meshes). Composes "
+                         "with --use-kernel: the kernel runs per model "
+                         "shard via shard_map, the oracle under pjit — "
+                         "either way no full-buffer gather per round")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
@@ -75,8 +85,14 @@ def run(args):
         return loss_fn(p, cfg, b)
 
     use_kernel = {"auto": None, "on": True, "off": False}[args.use_kernel]
+    from repro.launch.mesh import mesh_from_arg, model_axis_size
+    mesh = mesh_from_arg(args.mesh)
+    if mesh is not None:
+        print(f"mesh: {dict(zip(mesh.axis_names, mesh.devices.shape))} "
+              f"({model_axis_size(mesh)}-way model sharding of the engine)")
     engine = RoundEngine(params, fcfg, lfn, lambdas=lambdas,
-                         det_alpha=det_alpha, use_kernel=use_kernel)
+                         det_alpha=det_alpha, use_kernel=use_kernel,
+                         mesh=mesh)
     state = engine.init_state(params, key)
     del params  # the flat buffers are now the authoritative copy
 

@@ -4,8 +4,8 @@ Tensor-parallel layout over the "model" mesh axis (Megatron f/g pattern):
 column-shard the in-projections (qkv, mlp up/gate, recurrent in-proj),
 row-shard the out-projections (wo, mlp down, recurrent out), shard the
 embedding table on (padded) vocab. MoE experts are tensor-sharded on the
-per-expert ff dim (see DESIGN.md §6 for why expert-parallelism is rejected
-for the assigned expert counts).
+per-expert ff dim (see docs/architecture.md §6 for why expert-parallelism
+is rejected for the assigned expert counts).
 
 Every candidate axis is validated for divisibility against the mesh; a
 non-dividing axis falls back to replication (logged via `check_divisible`),
@@ -59,6 +59,11 @@ _RULES: Tuple[Tuple[str, Tuple], ...] = (
     (r"rnn/lam$",                       (None,)),
     (r"rnn/out/w$",                     ("model", None)),
     (r"rnn/out/b$",                     (None,)),
+    # shallow classifier MLP (fl_sim / paper-experiment engine): hidden-dim
+    # tensor parallelism; the final (d_hidden, n_classes) layer replicates
+    # automatically via the divisibility check (n_classes = 10)
+    (r"l\d+/w$",                        (None, "model")),
+    (r"l\d+/b$",                        ("model",)),
 )
 
 
@@ -109,6 +114,33 @@ def spec_for(path_str: str, shape, axis_sizes, *, prefix: Sequence = ()) -> P:
     full = check_divisible(shape[:len(prefix)], tuple(prefix), axis_sizes) \
         + (None,) * len(body_shape)
     return P(*full)
+
+
+def model_shard_axes(tree, mesh, *, axis: str = "model") -> list:
+    """Per-leaf index of the dim sharded on the ``axis`` mesh axis, or None.
+
+    Resolved through the same regex rules as ``param_specs`` (divisibility
+    fallbacks included), so a flat buffer laid out from this classification
+    agrees with how pjit would shard the unflattened leaves. This is what
+    ``core.round_engine.make_flat_spec(mesh=...)`` uses to bucket leaves by
+    (dtype, sharding group) — docs/architecture.md §6.
+
+    Returns a list aligned with ``jax.tree_util.tree_leaves(tree)``."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(tree)[0]
+    if axis_sizes.get(axis, 1) <= 1:
+        return [None] * len(leaves_with_path)
+    out = []
+    for path, leaf in leaves_with_path:
+        spec = spec_for(_path_str(path), leaf.shape, axis_sizes)
+        found = None
+        for k, dim_ax in enumerate(spec):
+            names = dim_ax if isinstance(dim_ax, tuple) else (dim_ax,)
+            if dim_ax is not None and axis in names:
+                found = k
+                break
+        out.append(found)
+    return out
 
 
 def param_specs(params, mesh, cfg=None, *, client_axis=None):

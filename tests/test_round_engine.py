@@ -92,6 +92,39 @@ def test_flat_spec_roundtrip_mixed_dtypes():
                                       np.asarray(b, np.float32))
 
 
+def test_flat_spec_sharded_layout_roundtrip():
+    """The shard-major (dtype, sharding group) bucket layout is pure
+    metadata — flatten/unflatten must be bit-exact with explicit shard axes
+    and no mesh, including the stacked (client-padded) path."""
+    tree = {
+        "wq": {"w": jnp.arange(6 * 16, dtype=jnp.float32).reshape(6, 16)},
+        "wo": {"w": jnp.arange(16 * 5, dtype=jnp.float32).reshape(16, 5) * .5},
+        "scale": jnp.arange(7, dtype=jnp.float32),
+        "bf": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+    }
+    # leaves (sorted keys): bf, scale, wo/w (row-sharded), wq/w (col-sharded)
+    spec = round_engine.make_flat_spec(tree, tile=8, n_clients=5,
+                                       client_tile=4, shard_axes=[None, None, 0, 1],
+                                       model_shards=4)
+    assert spec.bucket_shards == (1, 1, 4)
+    assert all(p == spec.shards(b) * spec.bucket_shard_padded[b]
+               for b, p in enumerate(spec.bucket_padded))
+    back = round_engine.unflatten_tree(spec, round_engine.flatten_tree(spec, tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    n = 5
+    stacked = tree_map(lambda x: jnp.stack([x * (i + 1) for i in range(n)]), tree)
+    sback = round_engine.unflatten_stacked(
+        spec, round_engine.flatten_stacked(spec, stacked))
+    for a, b in zip(jax.tree_util.tree_leaves(stacked),
+                    jax.tree_util.tree_leaves(sback)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
 def _setup(n=4, s=2, K=4, **fkw):
     cfg = get_reduced_config("qwen3-4b")
     fcfg = FavasConfig(n_clients=n, s_selected=s, local_steps=K, eta=0.05,

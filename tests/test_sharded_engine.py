@@ -1,0 +1,265 @@
+"""Sharded flat-buffer engine acceptance tests (docs/architecture.md §6).
+
+These run on a forced 8-device CPU topology:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m pytest -q tests/test_sharded_engine.py -m "not slow"
+
+which is exactly what the CI ``sharded`` job executes. Without >= 8 visible
+devices every device-gated test here SKIPS (the tier-1 suite must keep
+seeing the real 1-device topology — see tests/conftest.py); the slow-marked
+``test_sharded_engine_subprocess`` self-runs this file under the flag so
+plain environments still exercise the suite end-to-end.
+
+What is proven:
+
+* the sharded engine is BIT-EXACT against the single-device engine (and
+  against ``favas_round_reference``) across n in {7, 257} x {fp32, bf16},
+  for both the pjit oracle path and the shard_map + Pallas-interpret kernel
+  path. Bit-exactness holds because every per-lane operation of the round
+  is elementwise over the lane axis and the client reduction is not
+  model-sharded — partitioning the lanes cannot reorder any float sum. The
+  test loss is elementwise-gradient (mean of squares per leaf) so local SGD
+  is shard-invariant too; only the scalar *loss metric* may differ in
+  summation order and is compared approximately.
+* per-shard padded lane tails and padded client rows stay exactly zero.
+* the compiled round contains NO all-gather at full-flat-buffer size
+  (``launch.roofline.collective_ops`` census over ``compiled.as_text()``),
+  and ``launch.dryrun.normalize_cost_analysis`` stays usable on the
+  sharded executable.
+"""
+import functools
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import round_engine
+from repro.core.favas import FavasConfig, client_lambdas, favas_init, \
+    favas_round_reference
+from repro.launch.mesh import make_model_mesh
+
+needs8 = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+def make_params(dtype, *, extra_f32_leaf: bool = True):
+    """Small pytree whose paths hit the sharding/rules.py regexes: column-,
+    row-, and vocab-sharded leaves (dims divisible by 8), one replicated
+    leaf, and optionally a second-dtype leaf to force a mixed bucket set."""
+    def f(*s, seed=0, dt=dtype):
+        size = int(np.prod(s))
+        v = np.linspace(-1.0, 1.0, size).reshape(s) * (1.0 + 0.1 * seed)
+        return jnp.asarray(v, dt)
+    tree = {
+        "embed": {"table": f(16, 6, seed=1)},            # ("model", None)
+        "blk": {"wq": {"w": f(6, 16, seed=2),            # (None, "model")
+                       "b": f(16, seed=3)},              # ("model",)
+                "wo": {"w": f(16, 6, seed=4)},           # ("model", None)
+                "q_norm": {"scale": f(6, seed=5)}},      # replicated
+        "mlp": {"down": {"w": f(16, 5, seed=6)}},        # ("model", None)
+    }
+    if extra_f32_leaf and dtype != jnp.float32:
+        tree["blk"]["q_norm"]["scale"] = f(6, seed=5, dt=jnp.float32)
+    return tree
+
+
+def quad_loss(p, b):
+    """Elementwise-gradient loss: d/dp_i mean_j (p_j - t)^2 = 2 (p_i - t)/N
+    touches no cross-shard reduction, so the SGD trajectory is bit-exact
+    under model sharding (the scalar loss VALUE is reduction-ordered and
+    only compared approximately)."""
+    t = b["t"]
+    return sum(jnp.mean((l.astype(jnp.float32) - t) ** 2)
+               for l in jax.tree_util.tree_leaves(p))
+
+
+def _trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def _setup(n, dtype, *, quant_bits=0):
+    mesh = make_model_mesh(8)
+    params = make_params(dtype)
+    fcfg = FavasConfig(n_clients=n, s_selected=min(3, n), local_steps=2,
+                       eta=0.1, quant_bits=quant_bits)
+    lambdas = jnp.asarray(client_lambdas(fcfg))
+    spec_s = round_engine.make_flat_spec(params, n_clients=n, mesh=mesh)
+    spec_r = round_engine.make_flat_spec(params, n_clients=n)
+    assert max(spec_s.bucket_shards) == 8, "mesh spec must shard something"
+    assert spec_s.mesh_axis == "model"
+    key = jax.random.PRNGKey(0)
+    st_s = jax.device_put(round_engine.engine_init(spec_s, params, fcfg, key),
+                          round_engine.engine_sharding(spec_s, mesh))
+    st_r = round_engine.engine_init(spec_r, params, fcfg, key)
+    batch = {"t": jnp.linspace(0.0, 1.0, n * fcfg.R).reshape(n, fcfg.R)}
+    return mesh, params, fcfg, lambdas, spec_s, spec_r, st_s, st_r, batch, key
+
+
+def _steps(spec_s, spec_r, mesh, fcfg, lambdas, use_kernel):
+    step_s = jax.jit(functools.partial(
+        round_engine.engine_round, spec_s, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, mesh=mesh, use_kernel=use_kernel))
+    step_r = jax.jit(functools.partial(
+        round_engine.engine_round, spec_r, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, use_kernel=use_kernel))
+    return step_s, step_r
+
+
+@needs8
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["fp32", "bf16"])
+@pytest.mark.parametrize("n", [7, 257])
+def test_sharded_engine_bit_exact_vs_single_device(n, dtype):
+    """Oracle (pjit) path: 3 rounds sharded vs single-device, all state
+    bit-exact, plus a reference-implementation cross-check."""
+    (mesh, params, fcfg, lambdas, spec_s, spec_r,
+     st_s, st_r, batch, key) = _setup(n, dtype)
+    step_s, step_r = _steps(spec_s, spec_r, mesh, fcfg, lambdas, False)
+    ref_state = favas_init(params, fcfg, key)
+    step_ref = jax.jit(functools.partial(
+        favas_round_reference, cfg=fcfg, loss_fn=quad_loss, lambdas=lambdas))
+    # reference needs the batch stacked like _local_training feeds it
+    for _ in range(3):
+        st_s, m_s = step_s(st_s, batch)
+        st_r, m_r = step_r(st_r, batch)
+        ref_state, m_f = step_ref(ref_state, batch)
+        np.testing.assert_allclose(float(m_s["loss"]), float(m_r["loss"]),
+                                   rtol=1e-6)
+        assert float(m_s["selected"]) == float(m_r["selected"])
+    _trees_equal(round_engine.engine_server_params(spec_s, st_s),
+                 round_engine.engine_server_params(spec_r, st_r))
+    _trees_equal(round_engine.unflatten_stacked(spec_s, st_s.clients),
+                 round_engine.unflatten_stacked(spec_r, st_r.clients))
+    _trees_equal(round_engine.unflatten_stacked(spec_s, st_s.inits),
+                 round_engine.unflatten_stacked(spec_r, st_r.inits))
+    np.testing.assert_array_equal(np.asarray(st_s.counters),
+                                  np.asarray(st_r.counters))
+    # and the seed reference agrees with both
+    _trees_equal(round_engine.engine_server_params(spec_s, st_s),
+                 ref_state.server)
+    _trees_equal(round_engine.unflatten_stacked(spec_s, st_s.clients),
+                 ref_state.clients)
+
+
+@needs8
+@pytest.mark.parametrize("n", [7, 40])
+def test_sharded_kernel_path_bit_exact(n):
+    """shard_map + Pallas interpret kernel per shard vs the single-device
+    kernel path — n=40 exercises the tiled (n > CLIENT_TILE) client axis."""
+    (mesh, params, fcfg, lambdas, spec_s, spec_r,
+     st_s, st_r, batch, key) = _setup(n, jnp.float32)
+    step_s, step_r = _steps(spec_s, spec_r, mesh, fcfg, lambdas, True)
+    for _ in range(2):
+        st_s, _ = step_s(st_s, batch)
+        st_r, _ = step_r(st_r, batch)
+    _trees_equal(round_engine.engine_server_params(spec_s, st_s),
+                 round_engine.engine_server_params(spec_r, st_r))
+    _trees_equal(round_engine.unflatten_stacked(spec_s, st_s.clients),
+                 round_engine.unflatten_stacked(spec_r, st_r.clients))
+
+
+@needs8
+def test_sharded_quantized_progress_bit_exact():
+    """FAVAS[QNN] on the sharded engine: LUQ scales are max-based (order-
+    insensitive) and the PRNG draws are sharding-invariant, so even the
+    quantized round is bit-exact vs single-device."""
+    (mesh, params, fcfg, lambdas, spec_s, spec_r,
+     st_s, st_r, batch, key) = _setup(7, jnp.float32, quant_bits=4)
+    step_s, step_r = _steps(spec_s, spec_r, mesh, fcfg, lambdas, False)
+    for _ in range(2):
+        st_s, _ = step_s(st_s, batch)
+        st_r, _ = step_r(st_r, batch)
+    _trees_equal(round_engine.engine_server_params(spec_s, st_s),
+                 round_engine.engine_server_params(spec_r, st_r))
+    _trees_equal(round_engine.unflatten_stacked(spec_s, st_s.inits),
+                 round_engine.unflatten_stacked(spec_r, st_r.inits))
+
+
+@needs8
+def test_sharded_padded_tails_stay_zero():
+    """Per-shard lane tails and padded client rows must remain exactly zero
+    after rounds — the invariant that makes per-shard padding safe."""
+    (mesh, params, fcfg, lambdas, spec_s, _spec_r,
+     st_s, _st_r, batch, key) = _setup(257, jnp.float32)
+    step_s, _ = _steps(spec_s, _spec_r, mesh, fcfg, lambdas, False)
+    for _ in range(2):
+        st_s, _ = step_s(st_s, batch)
+    n = spec_s.n_clients
+    for b in range(spec_s.n_buckets):
+        S = spec_s.shards(b)
+        used = spec_s.bucket_shard_sizes[b]
+        srv = np.asarray(st_s.server[b], np.float32).reshape(
+            S, spec_s.bucket_shard_padded[b])
+        assert np.all(srv[:, used:] == 0.0), f"server tail bucket {b}"
+        cli = np.asarray(st_s.clients[b], np.float32)
+        assert np.all(cli[n:] == 0.0), f"padded client rows bucket {b}"
+        cli3 = cli.reshape(cli.shape[0], S, spec_s.bucket_shard_padded[b])
+        assert np.all(cli3[:, :, used:] == 0.0), f"client lane tails bucket {b}"
+
+
+@needs8
+def test_sharded_round_has_no_full_buffer_gather():
+    """Acceptance check: the compiled sharded round's collective census has
+    no all-gather at (or above) full-flat-buffer size, and the normalized
+    cost analysis remains readable."""
+    (mesh, params, fcfg, lambdas, spec_s, _spec_r,
+     st_s, _st_r, batch, key) = _setup(7, jnp.float32)
+    step_s, _ = _steps(spec_s, _spec_r, mesh, fcfg, lambdas, False)
+    compiled = step_s.lower(st_s, batch).compile()
+    hlo = compiled.as_text()
+    from repro.launch.roofline import collective_ops
+    full_bytes = min(
+        p * jnp.dtype(dt).itemsize
+        for p, dt, S in zip(spec_s.bucket_padded, spec_s.bucket_dtypes,
+                            spec_s.bucket_shards) if S > 1)
+    gathers = [b for kind, b in collective_ops(hlo) if kind == "all-gather"]
+    assert all(b < full_bytes for b in gathers), (
+        f"full-buffer all-gather in the round: {gathers} >= {full_bytes}")
+    # the jax-version-portable cost accessor must work on this executable
+    from repro.launch.dryrun import normalize_cost_analysis
+    cost = normalize_cost_analysis(compiled.cost_analysis())
+    assert isinstance(cost, dict)
+
+
+def test_flat_spec_invariants_without_devices():
+    """Sharding-aware layout metadata needs no devices: explicit shard_axes
+    + model_shards give the same bucket structure tier-1 can verify."""
+    tree = {"a": jnp.zeros((8, 6)), "b": jnp.zeros((5,)),
+            "c": jnp.zeros((4, 4), jnp.bfloat16)}
+    spec = round_engine.make_flat_spec(tree, tile=8, n_clients=3,
+                                       shard_axes=[0, None, 1],
+                                       model_shards=4)
+    for b in range(spec.n_buckets):
+        assert (spec.bucket_padded[b]
+                == spec.shards(b) * spec.bucket_shard_padded[b])
+        assert spec.bucket_shard_padded[b] % 8 == 0
+    # non-dividing nominated dim falls back to the replicated bucket
+    spec2 = round_engine.make_flat_spec(tree, tile=8, shard_axes=[0, 0, 1],
+                                        model_shards=4)
+    b_of_b = spec2.bucket_of[1]          # leaf "b": (5,) % 4 != 0
+    assert spec2.shards(b_of_b) == 1 and spec2.shard_axes[1] is None
+
+
+@pytest.mark.slow
+def test_sharded_engine_subprocess():
+    """Self-run this file under the forced-8-device flag so environments
+    without the flag still get full sharded coverage (the CI ``sharded``
+    job runs the same command directly)."""
+    env = dict(os.environ, PYTHONPATH="src",
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-m", "not slow",
+         "tests/test_sharded_engine.py"],
+        capture_output=True, text=True, env=env, cwd=root, timeout=1200)
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "skipped" not in out.stdout.lower() or "passed" in out.stdout

@@ -1,0 +1,77 @@
+"""Docs validity check (run by the CI ``docs`` job).
+
+Verifies that README.md and docs/architecture.md only reference things that
+exist:
+
+* every repo-relative path mentioned (``src/...``, ``tests/...``,
+  ``examples/...``, ``benchmarks/...``, ``docs/...``, ``experiments/...``)
+  resolves to a real file or directory;
+* every ``python -m <module>`` in a fenced shell block imports under
+  PYTHONPATH=src (spec lookup only — nothing is executed);
+* every ``python <script.py>`` in a fenced shell block points at a real
+  file.
+
+Usage:  python tools/check_docs.py
+Exit status 0 = docs are consistent with the tree.
+"""
+from __future__ import annotations
+
+import importlib.util
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ("README.md", "docs/architecture.md")
+
+PATH_RE = re.compile(
+    r"\b((?:src|tests|examples|benchmarks|docs|experiments|tools)"
+    r"/[\w./\-]+)")
+MODULE_RE = re.compile(r"python\s+-m\s+([\w.]+)")
+SCRIPT_RE = re.compile(r"python\s+([\w/.\-]+\.py)")
+
+
+def fenced_blocks(text: str):
+    return re.findall(r"```(?:bash|sh|console)?\n(.*?)```", text, re.S)
+
+
+def _resolves(mod: str) -> bool:
+    try:
+        return importlib.util.find_spec(mod) is not None
+    except (ImportError, ModuleNotFoundError, ValueError):
+        return False
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    sys.path.insert(0, ROOT)          # benchmarks/ is a root-level package
+    errors = []
+    for doc in DOCS:
+        path = os.path.join(ROOT, doc)
+        if not os.path.exists(path):
+            errors.append(f"{doc}: missing")
+            continue
+        text = open(path).read()
+        for ref in sorted(set(PATH_RE.findall(text))):
+            ref = ref.rstrip(".")
+            # globs / placeholder patterns are not literal paths
+            if "*" in ref or "{" in ref or ref.endswith("/"):
+                continue
+            if not os.path.exists(os.path.join(ROOT, ref)):
+                errors.append(f"{doc}: references nonexistent path {ref!r}")
+        for block in fenced_blocks(text):
+            for mod in MODULE_RE.findall(block):
+                if not _resolves(mod):
+                    errors.append(f"{doc}: `python -m {mod}` does not resolve")
+            for script in SCRIPT_RE.findall(block):
+                if not os.path.exists(os.path.join(ROOT, script)):
+                    errors.append(f"{doc}: `python {script}` — no such file")
+    if errors:
+        print("\n".join(errors))
+        return 1
+    print(f"docs OK: {', '.join(DOCS)} consistent with the tree")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
