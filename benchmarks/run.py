@@ -20,11 +20,13 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (fl_paper, theory_table, kernel_bench,
-                            roofline_table, ablation_reweight)
+                            roofline_table, ablation_reweight,
+                            round_loop_bench)
 
     suite = [
         ("table1_theory", lambda: theory_table.run(quick)),
         ("kernel_bench", lambda: kernel_bench.run(quick)),
+        ("round_loop_bench", lambda: round_loop_bench.run(quick)),
         ("roofline_table", lambda: roofline_table.run(quick)),
         ("fig1_table2_mnist", lambda: fl_paper.fig1_table2(quick)),
         ("fig2_stragglers_1of9fast", lambda: fl_paper.fig2_stragglers(quick)),
@@ -61,6 +63,12 @@ def _derive(name: str, out) -> str:
         if name == "kernel_bench":
             return (f"round_fused={out['favas_round_fused_jnp_us']:.0f}us"
                     f";unfused={out['favas_round_unfused_jnp_us']:.0f}us")
+        if name == "round_loop_bench":
+            o = out["cpu_oracle"]
+            s32 = o["superstep"].get("32", {})
+            return (f"host={o['host_loop']['rounds_per_sec']:.0f}r/s"
+                    f";superstep32={s32.get('rounds_per_sec', 0):.0f}r/s"
+                    f";x{s32.get('speedup_vs_host_loop', 0):.2f}")
         if name == "ablation_reweight":
             return ";".join(
                 f"{k}={v['final_mean']:.3f}/rec{v['slow_class_recall']:.3f}"

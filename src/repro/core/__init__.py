@@ -4,6 +4,7 @@ from repro.core.favas import (
     FavasState,
     favas_init,
     favas_round,
+    favas_multi_round,
     favas_round_reference,
     favas_variance,
     favas_mu,
@@ -16,6 +17,7 @@ from repro.core.round_engine import (
     RoundEngine,
     engine_init,
     engine_round,
+    engine_multi_round,
     make_flat_spec,
 )
 from repro.core.quant import luq_quantize, quantize_tree

@@ -110,6 +110,29 @@ def favas_init(params, cfg: FavasConfig, key) -> FavasState:
     )
 
 
+def _on_engine(engine_fn, state: FavasState, batch, *, cfg: FavasConfig,
+               mesh, **kw):
+    """Run an engine entry point (``engine_round`` / ``engine_multi_round``)
+    with the pytree API: flatten the FavasState to an EngineState at the
+    call boundary and unflatten the result. The one place the
+    FavasState <-> EngineState mapping lives."""
+    spec = round_engine.make_flat_spec(state.server, n_clients=cfg.n_clients,
+                                       mesh=mesh)
+    est = EngineState(
+        server=round_engine.flatten_tree(spec, state.server),
+        clients=round_engine.flatten_stacked(spec, state.clients),
+        inits=round_engine.flatten_stacked(spec, state.inits),
+        counters=state.counters, stale=state.stale,
+        key=state.key, t=state.t)
+    est, metrics = engine_fn(spec, est, batch, cfg=cfg, mesh=mesh, **kw)
+    new_state = FavasState(
+        server=round_engine.unflatten_tree(spec, est.server),
+        clients=round_engine.unflatten_stacked(spec, est.clients),
+        inits=round_engine.unflatten_stacked(spec, est.inits),
+        counters=est.counters, stale=est.stale, key=est.key, t=est.t)
+    return new_state, metrics
+
+
 def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable,
                 lambdas, det_alpha: Optional[jnp.ndarray] = None,
                 use_kernel: Optional[bool] = None, mesh=None):
@@ -121,23 +144,24 @@ def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable
     ``mesh``: bucket the flat buffers by (dtype, sharding group) and keep
     model-sharded leaves sharded through the fused round (no full-buffer
     gather; see core/round_engine.py and docs/architecture.md §6)."""
-    spec = round_engine.make_flat_spec(state.server, n_clients=cfg.n_clients,
-                                       mesh=mesh)
-    est = EngineState(
-        server=round_engine.flatten_tree(spec, state.server),
-        clients=round_engine.flatten_stacked(spec, state.clients),
-        inits=round_engine.flatten_stacked(spec, state.inits),
-        counters=state.counters, stale=state.stale,
-        key=state.key, t=state.t)
-    est, metrics = round_engine.engine_round(
-        spec, est, batch, cfg=cfg, loss_fn=loss_fn, lambdas=lambdas,
-        det_alpha=det_alpha, use_kernel=use_kernel, mesh=mesh)
-    new_state = FavasState(
-        server=round_engine.unflatten_tree(spec, est.server),
-        clients=round_engine.unflatten_stacked(spec, est.clients),
-        inits=round_engine.unflatten_stacked(spec, est.inits),
-        counters=est.counters, stale=est.stale, key=est.key, t=est.t)
-    return new_state, metrics
+    return _on_engine(round_engine.engine_round, state, batch, cfg=cfg,
+                      mesh=mesh, loss_fn=loss_fn, lambdas=lambdas,
+                      det_alpha=det_alpha, use_kernel=use_kernel)
+
+
+def favas_multi_round(state: FavasState, batches, *, cfg: FavasConfig,
+                      loss_fn: Callable, lambdas,
+                      det_alpha: Optional[jnp.ndarray] = None,
+                      use_kernel: Optional[bool] = None, mesh=None):
+    """A chunk of server rounds as ONE on-device scan, pytree API preserved
+    (``round_engine.engine_multi_round`` under the hood). ``batches`` leaves
+    carry a leading (T,) rounds axis; metrics come back (T,)-stacked. Jit
+    this with donation and a T-round chunk costs one dispatch — bit-exact
+    with T sequential :func:`favas_round` calls (the per-round key split
+    makes the RNG streams identical)."""
+    return _on_engine(round_engine.engine_multi_round, state, batches,
+                      cfg=cfg, mesh=mesh, loss_fn=loss_fn, lambdas=lambdas,
+                      det_alpha=det_alpha, use_kernel=use_kernel)
 
 
 def favas_round_reference(state: FavasState, batch, *, cfg: FavasConfig,

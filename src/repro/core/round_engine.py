@@ -23,6 +23,13 @@ engine instead:
 ``engine_round`` with flatten/unflatten at the call boundary;
 ``launch.train`` uses ``RoundEngine`` directly so the buffers genuinely
 persist across rounds and the jitted round donates them.
+
+Beyond the fused single round, ``engine_multi_round`` /
+``RoundEngine.run`` scan a whole CHUNK of rounds on-device — one jitted,
+buffer-donating dispatch and one stacked metrics fetch per chunk instead
+of per round ("supersteps", docs/architecture.md §7) — which removes the
+per-round host dispatch + sync overhead that dominates FAVAS's cheap,
+frequent server rounds.
 """
 from __future__ import annotations
 
@@ -499,11 +506,14 @@ def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
     server = flatten_tree(spec, params)
     clients = stack_server_rows(spec, server, n)
     inits = stack_server_rows(spec, server, n)
+    # private copy of the key: the jitted round DONATES the state, and a
+    # caller-owned key array shared between two states (or reused for a
+    # second init) would be deleted by the first state's first dispatch
     return EngineState(
         server=server, clients=clients, inits=inits,
         counters=jnp.zeros((n,), jnp.int32),
         stale=jnp.zeros((n,), jnp.int32),
-        key=key, t=jnp.zeros((), jnp.int32))
+        key=jnp.array(key, copy=True), t=jnp.zeros((), jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -644,6 +654,36 @@ def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     return new_state, metrics
 
 
+def engine_multi_round(spec: FlatSpec, state: EngineState, batches, *, cfg,
+                       loss_fn: Callable, lambdas,
+                       det_alpha: Optional[jnp.ndarray] = None,
+                       use_kernel: Optional[bool] = None, mesh=None):
+    """A whole chunk of FAVAS rounds as ONE ``jax.lax.scan`` — the
+    "superstep" (docs/architecture.md §7). Pure; jit/pjit this and donate
+    ``state``: a T-round chunk then costs one dispatch instead of T.
+
+    ``batches`` is the per-round batch pytree with an extra LEADING rounds
+    axis — leaves are (T, n, R, ...); round t consumes slice ``batches[t]``.
+    The scan carries the :class:`EngineState` and stacks each round's
+    metrics, so the caller fetches one (T,)-shaped metrics pytree per chunk
+    instead of blocking on T scalar transfers.
+
+    RNG equivalence: :func:`engine_round` derives everything it draws from
+    ``state.key`` (split once per round, the new key rides in the carry), so
+    the scanned stream is IDENTICAL to T sequential ``engine_round`` calls —
+    superstep-vs-sequential parity is bit-exact, not approximate
+    (tests/test_superstep.py). Composes with ``use_kernel`` and ``mesh``
+    exactly like ``engine_round``: the shard_map / pjit dispatch sits inside
+    the scan body, compiled once for the whole chunk.
+
+    Returns ``(new_state, metrics)`` with every metric stacked to (T,)."""
+    def body(st, batch):
+        return engine_round(spec, st, batch, cfg=cfg, loss_fn=loss_fn,
+                            lambdas=lambdas, det_alpha=det_alpha,
+                            use_kernel=use_kernel, mesh=mesh)
+    return jax.lax.scan(body, state, batches)
+
+
 def engine_server_params(spec: FlatSpec, state: EngineState):
     """Current server model as the original parameter pytree."""
     return unflatten_tree(spec, state.server)
@@ -695,6 +735,15 @@ class RoundEngine:
                               det_alpha=self.det_alpha,
                               use_kernel=self.use_kernel, mesh=self.mesh),
             donate_argnums=(0,))
+        self._multi = jax.jit(
+            functools.partial(engine_multi_round, self.spec, cfg=self.cfg,
+                              loss_fn=self.loss_fn, lambdas=self.lambdas,
+                              det_alpha=self.det_alpha,
+                              use_kernel=self.use_kernel, mesh=self.mesh),
+            donate_argnums=(0,))
+        # dispatches into the jitted round/superstep — the regression guard
+        # tests/test_superstep.py uses to pin "one chunk = one dispatch"
+        self.dispatch_count = 0
 
     def init_state(self, params, key) -> EngineState:
         state = engine_init(self.spec, params, self.cfg, key)
@@ -704,7 +753,25 @@ class RoundEngine:
 
     def step(self, state: EngineState, batch):
         """Jitted round; donates the previous state's buffers."""
+        self.dispatch_count += 1
         return self._round(state, batch)
+
+    def run(self, state: EngineState, batches,
+            n_rounds: Optional[int] = None):
+        """A chunk of rounds as one superstep dispatch (see
+        :func:`engine_multi_round`); donates the previous state's buffers.
+
+        ``batches``: per-round batch pytree with a leading (T,) rounds axis.
+        ``n_rounds``: optional sanity check that T is what the caller thinks
+        it is (chunks of different T compile once each — the scan length is
+        static). Returns ``(new_state, metrics)`` with (T,)-stacked metrics;
+        bit-exact with T sequential :meth:`step` calls."""
+        T = jax.tree_util.tree_leaves(batches)[0].shape[0]
+        if n_rounds is not None and n_rounds != T:
+            raise ValueError(
+                f"batches carry {T} rounds but n_rounds={n_rounds}")
+        self.dispatch_count += 1
+        return self._multi(state, batches)
 
     def server_params(self, state: EngineState):
         return engine_server_params(self.spec, state)

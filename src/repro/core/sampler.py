@@ -34,11 +34,39 @@ def sample_increments(key, lambdas) -> jnp.ndarray:
     return jnp.maximum(d, 1)
 
 
-def sample_selection(key, n: int, s: int) -> jnp.ndarray:
-    """Uniform s-of-n without replacement -> float mask (n,) with sum s."""
+def sample_selection_indices(key, n: int, s: int):
+    """Uniform s-of-n without replacement, drawn in-jit via Gumbel top-s
+    (exact uniform w/o replacement). Returns ``(idx (s,) int32, mask (n,)
+    float32)`` — the on-device replacement for the simulator's old host-side
+    ``np.random.choice(n, s, replace=False)``, so client selection can live
+    inside a scanned superstep."""
     z = jax.random.gumbel(key, (n,))
     _, idx = jax.lax.top_k(z, s)
-    return jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+    mask = jnp.zeros((n,), jnp.float32).at[idx].set(1.0)
+    return idx, mask
+
+
+def sample_selection(key, n: int, s: int) -> jnp.ndarray:
+    """Uniform s-of-n without replacement -> float mask (n,) with sum s."""
+    return sample_selection_indices(key, n, s)[1]
+
+
+def credit_steps(credit, step_time, q, K: int, round_dur: float):
+    """Deterministic-rate local-step bookkeeping, on-device (the simulator's
+    App. C.2 clock): every client accrues ``round_dur`` time units, converts
+    whole ``step_time`` quanta into available steps (keeping the fractional
+    remainder as credit), and runs ``min(available, K - q)`` of them this
+    round. All (n,) float32. Returns ``(steps_run, new_credit)`` — the
+    arithmetic the host loop used to do in numpy, now scannable. Note the
+    clock runs in float32 on-device (x64 is disabled): with exactly
+    representable step times (the App. C.2 defaults 2.0 / 16.0 are) it
+    matches the old float64 host loop exactly; non-representable step
+    times (e.g. 0.3) can land ``floor`` on the other side of an integer in
+    rare rounds."""
+    credit = credit + round_dur
+    avail = jnp.floor(credit / step_time)
+    credit = credit - avail * step_time
+    return jnp.minimum(avail, K - q), credit
 
 
 # ---------------------------------------------------------------------------

@@ -3,10 +3,20 @@
 * ``FederatedBatcher`` — per-client minibatch streams for the FL simulator
   and the distributed trainer: each call yields a (n_clients, R, B, ...)
   stack (one microbatch per client per potential local step).
-* ``lm_round_batch`` — token batches for the assigned-architecture trainer:
-  clients are mapped to corpus domains (non-IID domain skew).
+  ``superstep_batch`` stacks T of those along a leading rounds axis for the
+  on-device superstep scan (core/round_engine.py::engine_multi_round).
+* ``lm_round_batch`` / ``lm_superstep_batch`` — token batches for the
+  assigned-architecture trainer: clients are mapped to corpus domains
+  (non-IID domain skew).
+* ``BatchPrefetcher`` — double-buffered background-thread prefetcher: host
+  batch generation (and the H2D ``jax.device_put``) overlaps device
+  compute, so the superstep host loop never blocks on numpy sampling.
 """
 from __future__ import annotations
+
+import queue
+import threading
+from typing import Any, Callable, Optional
 
 import numpy as np
 
@@ -33,6 +43,19 @@ class FederatedBatcher:
                 xs[i, k], ys[i, k] = self.client_batch(i)
         return xs, ys
 
+    def superstep_batch(self, n_rounds: int, n_steps: int):
+        """(T, n, R, B, d) x, (T, n, R, B) y — ``n_rounds`` round batches
+        stacked on a leading rounds axis, drawn in round order so the rng
+        stream is identical to ``n_rounds`` sequential ``round_batch``
+        calls."""
+        n = len(self.parts)
+        xs = np.empty((n_rounds, n, n_steps, self.B) + self.x.shape[1:],
+                      self.x.dtype)
+        ys = np.empty((n_rounds, n, n_steps, self.B), self.y.dtype)
+        for t in range(n_rounds):
+            xs[t], ys[t] = self.round_batch(n_steps)
+        return xs, ys
+
 
 def lm_round_batch(tokens: np.ndarray, domains: np.ndarray, n_clients: int,
                    n_steps: int, batch: int, seq: int, rng: np.random.Generator):
@@ -50,3 +73,133 @@ def lm_round_batch(tokens: np.ndarray, domains: np.ndarray, n_clients: int,
                 s = int(starts[k, b])
                 out[i, k, b] = tokens[s:s + seq]
     return out
+
+
+def lm_superstep_batch(tokens: np.ndarray, domains: np.ndarray,
+                       n_rounds: int, n_clients: int, n_steps: int,
+                       batch: int, seq: int, rng: np.random.Generator):
+    """(T, n, R, B, S) int32 — ``n_rounds`` LM round batches stacked on a
+    leading rounds axis, same rng stream as sequential ``lm_round_batch``
+    calls."""
+    return np.stack([lm_round_batch(tokens, domains, n_clients, n_steps,
+                                    batch, seq, rng)
+                     for _ in range(n_rounds)])
+
+
+class BatchPrefetcher:
+    """Double-buffered background-thread batch prefetcher.
+
+    ``make_batch(i)`` runs on ONE background thread for i = 0, 1, ... and
+    its results queue up to ``depth`` chunks ahead of the consumer;
+    :meth:`get` pops the next one. While the device runs superstep i, the
+    host is already generating (and, with ``to_device``, ``jax.device_put``-
+    copying) superstep i+1 — batch generation leaves the critical path.
+
+    Contract (docs/architecture.md §7):
+
+    * **order & determinism** — generation happens strictly in index order
+      on a single thread, so a seeded ``np.random.Generator`` owned by
+      ``make_batch`` produces exactly the stream the synchronous loop would;
+    * **bounded lookahead** — at most ``depth`` chunks are ever buffered
+      (``depth=2`` is classic double buffering: one in flight to the
+      device, one being built), so host memory stays bounded;
+    * **errors surface at get()** — an exception in ``make_batch`` is
+      re-raised on the consumer thread at its position in the stream
+      (batches built before the failure are still served first), never
+      swallowed;
+    * ``n_steps=None`` streams forever; otherwise :meth:`get` raises
+      ``StopIteration`` after ``n_steps`` chunks. :meth:`close` stops the
+      producer promptly (it may still finish the chunk it is building).
+
+    ``to_device`` applies ``jax.device_put`` on the producer thread, which
+    overlaps the host->device copy with compute as well (JAX transfers are
+    thread-safe and async).
+    """
+
+    def __init__(self, make_batch: Callable[[int], Any],
+                 n_steps: Optional[int] = None, depth: int = 2,
+                 to_device: bool = True):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._n = n_steps
+        self._served = 0
+        self._done = object()           # sentinel: producer exhausted
+        self._make = make_batch
+        self._to_device = to_device
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def _produce(self):
+        try:
+            i = 0
+            while not self._stop.is_set() and (self._n is None or i < self._n):
+                b = self._make(i)
+                if self._to_device:
+                    import jax
+                    b = jax.device_put(b)
+                # bounded put that still honors close(): poll the stop flag
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(b, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                i += 1
+        except BaseException as e:  # noqa: BLE001 — re-raised at get()
+            self._err = e
+        finally:
+            try:
+                self._q.put(self._done, timeout=0.1)
+            except queue.Full:
+                pass
+
+    def get(self):
+        """Next batch, blocking until the producer has one ready. Batches
+        built before a producer failure are still served (FIFO); the error
+        surfaces at its position in the stream."""
+        while True:
+            if self._n is not None and self._served >= self._n:
+                raise StopIteration
+            try:
+                b = self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self._err is not None:
+                    err, self._err = self._err, None
+                    raise err
+                if not self._thread.is_alive():
+                    raise StopIteration from None
+                continue
+            if b is self._done:
+                if self._err is not None:
+                    err, self._err = self._err, None
+                    raise err
+                raise StopIteration
+            self._served += 1
+            return b
+
+    def __iter__(self):
+        while True:
+            try:
+                yield self.get()
+            except StopIteration:
+                return
+
+    def close(self):
+        """Stop the producer and drop buffered chunks."""
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

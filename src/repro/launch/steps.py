@@ -22,7 +22,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
-from repro.core.favas import FavasConfig, favas_init, favas_round, client_lambdas
+from repro.core.favas import FavasConfig, favas_init, favas_round, \
+    favas_multi_round, client_lambdas
 from repro.launch.mesh import data_axes, n_client_slots
 from repro.models.model import ModelConfig, init_params, loss_fn, forward, \
     init_cache, decode_step
@@ -131,13 +132,18 @@ def _dp(mesh):
     return da if len(da) > 1 else da[0]
 
 
-def batch_shardings(batch_sds, mesh, *, leading_client_axis: bool):
+def batch_shardings(batch_sds, mesh, *, leading_client_axis: bool,
+                    leading_rounds_axis: bool = False):
+    """``leading_rounds_axis``: the batch carries a superstep (T,) rounds
+    axis in front — the scan axis is never device-sharded, so the data axes
+    move to dim 1."""
     dp = _dp(mesh)
     sizes = _axis_sizes(mesh)
+    lead = 1 if leading_rounds_axis else 0
 
     def one(sds):
         dims = [None] * len(sds.shape)
-        dims[0] = dp
+        dims[lead] = dp
         spec = P(*check_divisible(sds.shape, tuple(dims), sizes))
         return NamedSharding(mesh, spec)
     return jax.tree_util.tree_map(one, batch_sds)
@@ -187,9 +193,13 @@ def cache_specs(cache_sds, mesh, cfg: ModelConfig):
 # ---------------------------------------------------------------------------
 
 def build_train_step(arch: str, mesh, fcfg: Optional[FavasConfig] = None,
-                     *, use_agg_kernel: bool = False, variant: str = "opt"):
+                     *, use_agg_kernel: bool = False, variant: str = "opt",
+                     rounds_per_step: int = 1):
     """Returns (jitted_step, state_sds, batch_sds). train_step = one FAVAS
-    server round over the resident clients."""
+    server round over the resident clients — or, with ``rounds_per_step`` >
+    1, one SUPERSTEP: that many rounds scanned on-device in a single
+    dispatch (``favas_multi_round``; batch gains a leading (T,) rounds axis
+    and metrics come back (T,)-stacked)."""
     cfg = get_config(arch)
     ms = _axis_sizes(mesh)["model"]
     cfg = apply_variant(cfg, variant, INPUT_SHAPES["train_4k"]["seq"], ms)
@@ -202,6 +212,10 @@ def build_train_step(arch: str, mesh, fcfg: Optional[FavasConfig] = None,
     def step(state, batch):
         # use_agg_kernel=False keeps the jnp oracle under pjit (XLA fuses the
         # flat-buffer expression); True forces the Pallas fused kernel.
+        if rounds_per_step > 1:
+            return favas_multi_round(state, batch, cfg=fcfg, loss_fn=lfn,
+                                     lambdas=lambdas,
+                                     use_kernel=use_agg_kernel)
         return favas_round(state, batch, cfg=fcfg, loss_fn=lfn,
                            lambdas=lambdas, use_kernel=use_agg_kernel)
 
@@ -216,7 +230,11 @@ def build_train_step(arch: str, mesh, fcfg: Optional[FavasConfig] = None,
         is_leaf=lambda x: isinstance(x, P))
     info = INPUT_SHAPES["train_4k"]
     batch_sds = train_batch_specs(cfg, fcfg, info["seq"], info["global_batch"])
-    batch_sh = batch_shardings(batch_sds, mesh, leading_client_axis=True)
+    if rounds_per_step > 1:
+        batch_sds = jax.tree_util.tree_map(
+            lambda s: _sds((rounds_per_step,) + s.shape, s.dtype), batch_sds)
+    batch_sh = batch_shardings(batch_sds, mesh, leading_client_axis=True,
+                               leading_rounds_axis=rounds_per_step > 1)
     metrics_sh = {k: NamedSharding(mesh, P()) for k in
                   ("loss", "mean_steps", "selected", "stale_rounds")}
     jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),

@@ -10,8 +10,16 @@ CPU; override with --use-kernel). With --mesh the engine is sharded: flat
 buffers stay partitioned over the "model" mesh axis end-to-end
 (docs/architecture.md §6) and the round never gathers them.
 
+The host loop is pipelined (docs/architecture.md §7): with
+``--rounds-per-step T`` every chunk of T rounds runs as ONE on-device
+superstep dispatch (``RoundEngine.run``, bit-exact with T sequential
+rounds), batch generation runs ahead on a background thread
+(``data.pipeline.BatchPrefetcher``, H2D copies overlapped), and metrics
+stay on device until a ``--log-every`` boundary — the loop never blocks
+on a per-round ``float(loss)``.
+
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
-      --steps 50 --n-clients 4 --s 2 --seq 128 --batch 4
+      --steps 50 --n-clients 4 --s 2 --seq 128 --batch 4 --rounds-per-step 8
 """
 from __future__ import annotations
 
@@ -26,7 +34,8 @@ from repro.checkpointing import save_checkpoint, latest_checkpoint, load_checkpo
 from repro.configs import get_config, get_reduced_config
 from repro.core import FavasConfig, RoundEngine, client_lambdas
 from repro.data import make_lm_corpus
-from repro.data.pipeline import lm_round_batch
+from repro.data.pipeline import BatchPrefetcher, lm_round_batch, \
+    lm_superstep_batch
 from repro.models.model import init_params, loss_fn
 from repro.utils.metrics import MetricsLogger
 
@@ -46,6 +55,12 @@ def build_cli():
     ap.add_argument("--reweight", default="stochastic",
                     choices=["stochastic", "deterministic"])
     ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--rounds-per-step", type=int, default=1,
+                    help="rounds per superstep dispatch: T > 1 scans T "
+                         "server rounds on-device in ONE jitted call "
+                         "(bit-exact with T sequential rounds) and fetches "
+                         "metrics once per chunk — removes per-round host "
+                         "dispatch/sync overhead")
     ap.add_argument("--use-kernel", default="auto",
                     choices=["auto", "on", "off"],
                     help="fused Pallas aggregation kernel: auto = TPU only "
@@ -110,29 +125,95 @@ def run(args):
                     f"different parameter layout cannot be restored — start "
                     f"from a fresh --ckpt-dir.") from e
 
-    step_fn = engine.step
-
     tokens, domains = make_lm_corpus(cfg.vocab_size_raw, 400_000,
                                      n_domains=max(args.n_clients, 2),
                                      seed=args.seed)
     rng = np.random.default_rng(args.seed)
     logger = MetricsLogger(args.metrics)
+
+    # chunk schedule: T-round supersteps plus a short remainder chunk
+    T = max(args.rounds_per_step, 1)
+    schedule = [T] * (args.steps // T)
+    if args.steps % T:
+        schedule.append(args.steps % T)
+
+    def make_chunk(i):
+        """Host batch generation for chunk i — runs on the prefetch thread,
+        concurrently with the device's current superstep; the prefetcher
+        also overlaps the H2D copy (device_put on that thread)."""
+        W = schedule[i]
+        if T == 1:
+            b = lm_round_batch(tokens, domains, fcfg.n_clients, fcfg.R,
+                               args.batch, args.seq, rng)
+        else:
+            b = lm_superstep_batch(tokens, domains, W, fcfg.n_clients,
+                                   fcfg.R, args.batch, args.seq, rng)
+        return {"tokens": b}
+
     losses = []
+    pending = []      # (first_round_idx, W, device metrics) — NOT fetched yet
+    rounds_done, next_log = 0, args.log_every
+    next_ckpt = args.ckpt_every
+
+    def flush():
+        """Materialize pending chunk metrics (ONE host sync per flush) and
+        emit the per-round JSONL records the per-round loop used to write."""
+        nonlocal pending
+        for start, W, m in pending:
+            host = {k: np.atleast_1d(np.asarray(v)) for k, v in m.items()}
+            for j in range(W):
+                losses.append(float(host["loss"][j]))
+                logger.log(start + j + 1, loss=host["loss"][j],
+                           mean_steps=host["mean_steps"][j],
+                           stale_rounds=host["stale_rounds"][j])
+        pending = []
+
+    prefetch = BatchPrefetcher(make_chunk, n_steps=len(schedule))
     t0 = time.time()
-    for t in range(args.steps):
-        batch_np = lm_round_batch(tokens, domains, fcfg.n_clients, fcfg.R,
-                                  args.batch, args.seq, rng)
-        state, metrics = step_fn(state, {"tokens": jnp.asarray(batch_np)})
-        losses.append(float(metrics["loss"]))
-        logger.log(t + 1, loss=metrics["loss"], mean_steps=metrics["mean_steps"],
-                   stale_rounds=metrics["stale_rounds"])
-        if (t + 1) % args.log_every == 0:
-            var = float(engine.variance(state))
-            logger.log(t + 1, client_variance=var)
-            print(f"round {t+1:5d} | loss {np.mean(losses[-args.log_every:]):.4f}"
-                  f" | client-var {var:.3e} | {(t+1)/(time.time()-t0):.2f} it/s")
-        if args.ckpt_dir and (t + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, t + 1, state)
+    try:
+        for W in schedule:
+            batch = prefetch.get()
+            if T == 1:
+                state, metrics = engine.step(state, batch)
+            else:
+                state, metrics = engine.run(state, batch, n_rounds=W)
+            pending.append((rounds_done, W, metrics))
+            rounds_done += W
+            # host syncs only at --log-every / --ckpt-every boundaries: the
+            # loop above never blocks on a per-round float(loss). A chunk
+            # can cross several boundaries at once; each gets its own
+            # window mean. Client variance is measured once per crossing
+            # chunk from the chunk-end state (the only state the host has)
+            # and is labeled with THAT round number.
+            need_var = rounds_done >= next_log
+            rate = f"{rounds_done/(time.time()-t0):.2f} it/s"
+            while rounds_done >= next_log:
+                flush()
+                window = losses[next_log - args.log_every:next_log]
+                line = f"round {next_log:5d} | loss {np.mean(window):.4f}"
+                if next_log == rounds_done:
+                    # variance and throughput are measured at the chunk-end
+                    # state/round — only printed on the line they belong to
+                    var = float(engine.variance(state))
+                    logger.log(rounds_done, client_variance=var)
+                    line += f" | client-var {var:.3e} | {rate}"
+                    need_var = False
+                print(line)
+                next_log += args.log_every
+            if need_var:      # boundaries crossed mid-chunk only
+                var = float(engine.variance(state))
+                logger.log(rounds_done, client_variance=var)
+                print(f"round {rounds_done:5d} | client-var {var:.3e} | {rate}")
+            if args.ckpt_dir and rounds_done >= next_ckpt:
+                # one snapshot per chunk (mid-chunk state never exists on
+                # the host); keep the cadence anchored to --ckpt-every
+                # multiples even when a chunk crosses several boundaries
+                save_checkpoint(args.ckpt_dir, rounds_done, state)
+                while next_ckpt <= rounds_done:
+                    next_ckpt += args.ckpt_every
+    finally:
+        prefetch.close()
+    flush()
     print(f"done: first-10 loss {np.mean(losses[:10]):.4f} -> "
           f"last-10 {np.mean(losses[-10:]):.4f}")
     return state, losses

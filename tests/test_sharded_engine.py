@@ -22,6 +22,10 @@ What is proven:
   test loss is elementwise-gradient (mean of squares per leaf) so local SGD
   is shard-invariant too; only the scalar *loss metric* may differ in
   summation order and is compared approximately.
+* the SUPERSTEP scan (``engine_multi_round``) on the mesh is bit-exact vs
+  sequential sharded rounds and vs the single-device superstep, for the
+  oracle, kernel, and quantized paths — the mesh leg of the
+  tests/test_superstep.py parity matrix.
 * per-shard padded lane tails and padded client rows stay exactly zero.
 * the compiled round contains NO all-gather at full-flat-buffer size
   (``launch.roofline.collective_ops`` census over ``compiled.as_text()``),
@@ -182,6 +186,71 @@ def test_sharded_quantized_progress_bit_exact():
                  round_engine.engine_server_params(spec_r, st_r))
     _trees_equal(round_engine.unflatten_stacked(spec_s, st_s.inits),
                  round_engine.unflatten_stacked(spec_r, st_r.inits))
+
+
+@needs8
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["fp32", "bf16"])
+@pytest.mark.parametrize("n", [7, 257])
+def test_sharded_superstep_bit_exact(n, dtype):
+    """engine_multi_round on the mesh: a 5-round superstep scan equals 5
+    sequential sharded rounds AND the single-device superstep — the mesh leg
+    of the tests/test_superstep.py parity matrix (scan composes with the
+    shard_map/pjit per-bucket dispatch without re-dispatching per round)."""
+    (mesh, params, fcfg, lambdas, spec_s, spec_r,
+     st_s, st_r, batch, key) = _setup(n, dtype)
+    step_s, _step_r = _steps(spec_s, spec_r, mesh, fcfg, lambdas, False)
+    multi_s = jax.jit(functools.partial(
+        round_engine.engine_multi_round, spec_s, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, mesh=mesh, use_kernel=False))
+    multi_r = jax.jit(functools.partial(
+        round_engine.engine_multi_round, spec_r, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, use_kernel=False))
+    T = 5
+    batches = {"t": jnp.stack([batch["t"] * (1.0 + 0.1 * t)
+                               for t in range(T)])}
+    st_seq = st_s
+    for t in range(T):
+        st_seq, _ = step_s(st_seq, {"t": batches["t"][t]})
+    st_sup, m_sup = multi_s(st_s, batches)
+    st_rep, m_rep = multi_r(st_r, batches)
+    assert m_sup["loss"].shape == (T,)
+    for getter in (lambda s: round_engine.engine_server_params(spec_s, s),
+                   lambda s: round_engine.unflatten_stacked(spec_s, s.clients),
+                   lambda s: round_engine.unflatten_stacked(spec_s, s.inits)):
+        _trees_equal(getter(st_seq), getter(st_sup))
+    # sharded superstep == single-device superstep, tree-for-tree
+    _trees_equal(round_engine.engine_server_params(spec_s, st_sup),
+                 round_engine.engine_server_params(spec_r, st_rep))
+    _trees_equal(round_engine.unflatten_stacked(spec_s, st_sup.clients),
+                 round_engine.unflatten_stacked(spec_r, st_rep.clients))
+    np.testing.assert_array_equal(np.asarray(st_sup.counters),
+                                  np.asarray(st_rep.counters))
+
+
+@needs8
+def test_sharded_superstep_quantized_and_kernel_paths():
+    """The superstep scan composes with FAVAS[QNN] quantization and with the
+    shard_map + interpret-Pallas kernel path, staying bit-exact vs the
+    sequential sharded rounds."""
+    for quant, use_kernel in ((4, False), (0, True)):
+        (mesh, params, fcfg, lambdas, spec_s, spec_r,
+         st_s, _st_r, batch, key) = _setup(7, jnp.float32, quant_bits=quant)
+        step_s, _ = _steps(spec_s, spec_r, mesh, fcfg, lambdas, use_kernel)
+        multi_s = jax.jit(functools.partial(
+            round_engine.engine_multi_round, spec_s, cfg=fcfg,
+            loss_fn=quad_loss, lambdas=lambdas, mesh=mesh,
+            use_kernel=use_kernel))
+        T = 3
+        batches = {"t": jnp.stack([batch["t"]] * T)}
+        st_seq = st_s
+        for t in range(T):
+            st_seq, _ = step_s(st_seq, {"t": batches["t"][t]})
+        st_sup, _ = multi_s(st_s, batches)
+        _trees_equal(round_engine.engine_server_params(spec_s, st_seq),
+                     round_engine.engine_server_params(spec_s, st_sup))
+        _trees_equal(round_engine.unflatten_stacked(spec_s, st_seq.clients),
+                     round_engine.unflatten_stacked(spec_s, st_sup.clients))
 
 
 @needs8
