@@ -1,0 +1,217 @@
+"""Data-plane throughput benchmark: host batch generation vs the
+on-device resident corpus (docs/architecture.md §8).
+
+After PR 4 made the round path one-dispatch supersteps, the last host work
+per chunk is batch GENERATION itself — the per-round × per-client ×
+per-step numpy loops in ``data/pipeline.py``. This bench measures
+end-to-end rounds/sec of the two data planes on the same engine:
+
+* **host plane** — the PR-4 trainer behavior: ``FederatedBatcher.
+  superstep_batch`` on a background ``BatchPrefetcher`` thread (generation
+  + H2D overlap compute), one ``RoundEngine.run`` dispatch per chunk.
+  Recorded for both rng streams: ``v1`` (the original per-(client, step)
+  ``rng.choice`` loops — the default) and ``v2`` (vectorized gathers, one
+  generator call per round);
+* **device plane** — the corpus + per-client partition tables resident on
+  device (``data.device_corpus.DeviceCorpus``), one ``RoundEngine.
+  run_device`` dispatch per chunk, minibatch indices sampled INSIDE the
+  scan. Zero host batch work per round.
+
+Two sweeps: chunk ∈ {1, 8, 32, 128} at fixed n, and n_clients ∈
+{64, 256, 1024} at chunk 32 — host generation scales with n × R × B
+python-loop iterations while the device plane scales with one gather, so
+the gap must WIDEN with n (the ISSUE-5 acceptance signal). The planes are
+statistically equivalent, not stream-identical (jax vs numpy PRNG), so
+this is a throughput comparison of equivalent training runs.
+
+Results go to ``experiments/bench/data_plane.json`` AND the repo-root
+``BENCH_data_plane.json`` (the perf-trajectory file).
+
+  PYTHONPATH=src:. python benchmarks/data_plane_bench.py [--full|--smoke]
+
+``--smoke`` (the CI ``data-plane`` job) shrinks the sweep and exits
+non-zero if the device plane is slower than the host plane at chunk 32.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_artifact
+from repro.core.favas import FavasConfig, client_lambdas
+from repro.core.round_engine import RoundEngine
+from repro.data.device_corpus import make_classification_corpus
+from repro.data.pipeline import BatchPrefetcher, FederatedBatcher
+from repro.models.classifier import classifier_loss, mlp_apply, mlp_init
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+D_IN, D_HIDDEN, N_CLASSES = 16, 16, 10
+K, B = 1, 2
+N_ROWS = 8192          # corpus rows — constant across the n_clients sweep
+
+
+def _data(n_clients: int, seed: int = 0):
+    """Synthetic corpus + ragged IID partitions (sizes vary ±50% so the
+    padded index table genuinely exercises the masked-rows invariant)."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (N_ROWS, D_IN)).astype(np.float32)
+    y = rng.integers(0, N_CLASSES, N_ROWS).astype(np.int32)
+    per = N_ROWS // n_clients
+    parts = [rng.choice(N_ROWS, max(int(per * rng.uniform(0.5, 1.5)), B),
+                        replace=False)
+             for _ in range(n_clients)]
+    return x, y, parts
+
+
+def _make_engine(n_clients: int):
+    key = jax.random.PRNGKey(0)
+    params = mlp_init(key, D_IN, D_HIDDEN, N_CLASSES)
+    fcfg = FavasConfig(n_clients=n_clients, s_selected=max(n_clients // 4, 1),
+                       local_steps=K, eta=0.1)
+
+    def lfn(p, b):
+        return classifier_loss(p, mlp_apply, b["x"], b["y"], N_CLASSES)
+
+    eng = RoundEngine(params, fcfg, lfn,
+                      lambdas=jnp.asarray(client_lambdas(fcfg)),
+                      use_kernel=False)
+    return eng, fcfg, params, key
+
+
+def _host_plane(eng, fcfg, params, key, data, rounds: int, chunk: int,
+                stream: str) -> float:
+    """The PR-4 trainer loop: prefetcher-overlapped numpy generation, one
+    superstep dispatch per chunk, one stacked metrics fetch. Seconds for
+    ``rounds`` rounds INCLUDING generation (that is the point)."""
+    x, y, parts = data
+    n_chunks = rounds // chunk
+
+    def run_once() -> float:
+        batcher = FederatedBatcher(x, y, parts, B, seed=1, stream=stream)
+
+        def make_chunk(i):
+            xs, ys = batcher.superstep_batch(chunk, fcfg.R)
+            return {"x": xs, "y": ys}
+
+        state = eng.init_state(params, key)
+        with BatchPrefetcher(make_chunk, n_steps=n_chunks) as pf:
+            t0 = time.perf_counter()
+            for _ in range(n_chunks):
+                state, m = eng.run(state, pf.get())
+                np.asarray(m["loss"])
+            jax.block_until_ready(state.server)
+            return time.perf_counter() - t0
+
+    # compile warmup outside the timed region
+    warm = FederatedBatcher(x, y, parts, B, seed=1, stream=stream)
+    xs, ys = warm.superstep_batch(chunk, fcfg.R)
+    state = eng.init_state(params, key)
+    state, m = eng.run(state, {"x": jnp.asarray(xs), "y": jnp.asarray(ys)})
+    np.asarray(m["loss"])
+    return run_once()
+
+
+def _device_plane(eng, fcfg, params, key, data, rounds: int,
+                  chunk: int) -> float:
+    """Resident-corpus loop: upload once, then one ``run_device`` dispatch
+    per chunk — no host generation anywhere. Seconds for ``rounds``."""
+    x, y, parts = data
+    corpus = make_classification_corpus(x, y, parts, B)
+    state = eng.init_state(params, key)
+    state, m = eng.run_device(state, corpus, chunk)        # compile
+    np.asarray(m["loss"])
+    state = eng.init_state(params, key)
+    t0 = time.perf_counter()
+    for _ in range(rounds // chunk):
+        state, m = eng.run_device(state, corpus, chunk)
+        np.asarray(m["loss"])
+    jax.block_until_ready(state.server)
+    return time.perf_counter() - t0
+
+
+def _compare(n_clients: int, rounds: int, chunk: int, reps: int = 2) -> dict:
+    eng, fcfg, params, key = _make_engine(n_clients)
+    data = _data(n_clients)
+    t_h1 = min(_host_plane(eng, fcfg, params, key, data, rounds, chunk, "v1")
+               for _ in range(reps))
+    t_h2 = min(_host_plane(eng, fcfg, params, key, data, rounds, chunk, "v2")
+               for _ in range(reps))
+    t_d = min(_device_plane(eng, fcfg, params, key, data, rounds, chunk)
+              for _ in range(reps))
+    return {
+        "n_clients": n_clients, "rounds": rounds, "chunk": chunk,
+        "host_v1": {"seconds": t_h1, "rounds_per_sec": rounds / t_h1},
+        "host_v2": {"seconds": t_h2, "rounds_per_sec": rounds / t_h2},
+        "device": {"seconds": t_d, "rounds_per_sec": rounds / t_d,
+                   "speedup_vs_host_v1": t_h1 / t_d,
+                   "speedup_vs_host_v2": t_h2 / t_d},
+    }
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        chunk_rows = [_compare(64, rounds=64, chunk=c, reps=1)
+                      for c in (1, 32)]
+        n_rows = []
+    else:
+        rounds = 128 if quick else 512
+        chunk_rows = [_compare(64, rounds=rounds, chunk=c)
+                      for c in (1, 8, 32, 128)]
+        n_rows = [_compare(n, rounds=64, chunk=32)
+                  for n in (64, 256, 1024)]
+    rows = {
+        "config": {"K": K, "batch": B, "d_in": D_IN, "d_hidden": D_HIDDEN,
+                   "corpus_rows": N_ROWS,
+                   "model": "classifier MLP under core.round_engine."
+                            "RoundEngine (jnp oracle path, CPU)"},
+        "chunk_sweep_n64": chunk_rows,
+        "n_clients_sweep_chunk32": n_rows,
+        "note": "host_v1/host_v2 = prefetcher-overlapped numpy generation "
+                "(original rng.choice loops / vectorized v2 stream) + one "
+                "RoundEngine.run dispatch per chunk; device = resident "
+                "DeviceCorpus, minibatch indices sampled inside the scan "
+                "(RoundEngine.run_device). Planes are statistically "
+                "equivalent (jax vs numpy PRNG stream). Acceptance: "
+                "device rounds/sec >= host_v1 at chunk 32, gap widening "
+                "over the n_clients sweep.",
+    }
+    if smoke:
+        save_artifact("data_plane_smoke", rows)
+    else:
+        save_artifact("data_plane", rows)
+        with open(os.path.join(ROOT, "BENCH_data_plane.json"), "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv
+    rows = run(quick="--full" not in sys.argv, smoke=smoke)
+    for r in rows["chunk_sweep_n64"] + rows["n_clients_sweep_chunk32"]:
+        d = r["device"]
+        print(f"n={r['n_clients']:5d} chunk={r['chunk']:4d} | "
+              f"host_v1 {r['host_v1']['rounds_per_sec']:8.1f} r/s | "
+              f"host_v2 {r['host_v2']['rounds_per_sec']:8.1f} r/s | "
+              f"device {d['rounds_per_sec']:8.1f} r/s "
+              f"({d['speedup_vs_host_v1']:.2f}x vs v1)")
+    gate = [r for r in rows["chunk_sweep_n64"] if r["chunk"] == 32]
+    if smoke and gate:
+        spd = gate[0]["device"]["speedup_vs_host_v1"]
+        if spd < 1.0:
+            print(f"FAIL: device plane at {spd:.2f}x — slower than the "
+                  f"host plane at chunk 32")
+            return 1
+        print(f"smoke OK: device plane at {spd:.2f}x >= host plane "
+              f"(chunk 32)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,12 +21,13 @@ def main() -> None:
 
     from benchmarks import (fl_paper, theory_table, kernel_bench,
                             roofline_table, ablation_reweight,
-                            round_loop_bench)
+                            round_loop_bench, data_plane_bench)
 
     suite = [
         ("table1_theory", lambda: theory_table.run(quick)),
         ("kernel_bench", lambda: kernel_bench.run(quick)),
         ("round_loop_bench", lambda: round_loop_bench.run(quick)),
+        ("data_plane_bench", lambda: data_plane_bench.run(quick)),
         ("roofline_table", lambda: roofline_table.run(quick)),
         ("fig1_table2_mnist", lambda: fl_paper.fig1_table2(quick)),
         ("fig2_stragglers_1of9fast", lambda: fl_paper.fig2_stragglers(quick)),
@@ -69,6 +70,12 @@ def _derive(name: str, out) -> str:
             return (f"host={o['host_loop']['rounds_per_sec']:.0f}r/s"
                     f";superstep32={s32.get('rounds_per_sec', 0):.0f}r/s"
                     f";x{s32.get('speedup_vs_host_loop', 0):.2f}")
+        if name == "data_plane_bench":
+            rows32 = [r for r in out["chunk_sweep_n64"] if r["chunk"] == 32]
+            r = rows32[0]
+            return (f"host={r['host_v1']['rounds_per_sec']:.0f}r/s"
+                    f";device={r['device']['rounds_per_sec']:.0f}r/s"
+                    f";x{r['device']['speedup_vs_host_v1']:.2f}")
         if name == "ablation_reweight":
             return ";".join(
                 f"{k}={v['final_mean']:.3f}/rec{v['slow_class_recall']:.3f}"

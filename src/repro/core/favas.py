@@ -149,19 +149,26 @@ def favas_round(state: FavasState, batch, *, cfg: FavasConfig, loss_fn: Callable
                       det_alpha=det_alpha, use_kernel=use_kernel)
 
 
-def favas_multi_round(state: FavasState, batches, *, cfg: FavasConfig,
+def favas_multi_round(state: FavasState, batches=None, *, cfg: FavasConfig,
                       loss_fn: Callable, lambdas,
                       det_alpha: Optional[jnp.ndarray] = None,
-                      use_kernel: Optional[bool] = None, mesh=None):
+                      use_kernel: Optional[bool] = None, mesh=None,
+                      corpus=None, n_rounds: Optional[int] = None):
     """A chunk of server rounds as ONE on-device scan, pytree API preserved
     (``round_engine.engine_multi_round`` under the hood). ``batches`` leaves
     carry a leading (T,) rounds axis; metrics come back (T,)-stacked. Jit
     this with donation and a T-round chunk costs one dispatch — bit-exact
     with T sequential :func:`favas_round` calls (the per-round key split
-    makes the RNG streams identical)."""
+    makes the RNG streams identical).
+
+    Device data plane: pass ``corpus`` (a
+    ``data.device_corpus.DeviceCorpus``) + a static ``n_rounds`` instead of
+    ``batches`` — the scan body then samples each round's minibatches from
+    the resident corpus (docs/architecture.md §8)."""
     return _on_engine(round_engine.engine_multi_round, state, batches,
                       cfg=cfg, mesh=mesh, loss_fn=loss_fn, lambdas=lambdas,
-                      det_alpha=det_alpha, use_kernel=use_kernel)
+                      det_alpha=det_alpha, use_kernel=use_kernel,
+                      corpus=corpus, n_rounds=n_rounds)
 
 
 def favas_round_reference(state: FavasState, batch, *, cfg: FavasConfig,

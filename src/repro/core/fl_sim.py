@@ -21,10 +21,14 @@ The FAVAS and QuAFL branches run as **supersteps** (docs/architecture.md
 §7): every eval-to-eval window of server rounds is ONE jitted, donated
 ``jax.lax.scan`` over the flat-buffer engine — client selection
 (``sampler.sample_selection``), the deterministic credit/step-time clock
-(``sampler.credit_steps``), eq. 3 alphas, and the q bookkeeping all live
-on-device inside the scan, and the next window's batch is generated by a
-background-thread ``BatchPrefetcher`` while the current window computes.
-The host only syncs at eval boundaries.
+(``sampler.credit_steps``, on exact integer ticks), eq. 3 alphas, and the
+q bookkeeping all live on-device inside the scan. The host only syncs at
+eval boundaries. Batches come from one of two data planes
+(``SimConfig.data_plane``, docs/architecture.md §8): ``"host"`` generates
+them in numpy on a background-thread ``BatchPrefetcher`` while the current
+window computes; ``"device"`` keeps the corpus RESIDENT
+(``data.device_corpus.DeviceCorpus``) and samples each round's minibatch
+indices inside the scan body — zero host work per round.
 """
 from __future__ import annotations
 
@@ -71,6 +75,10 @@ class SimConfig:
     quant_bits: int = 0              # FAVAS[QNN]
     permute_speeds: bool = True      # False: clients [0, n_slow) are the slow
     #                                  ones (for speed/data-correlated setups)
+    data_plane: str = "host"         # "host": numpy batches + prefetcher;
+    #                                  "device": resident DeviceCorpus, the
+    #                                  scan samples minibatches in-body
+    #                                  (docs/architecture.md §8)
     seed: int = 0
 
 
@@ -181,7 +189,10 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128,
         srv_f = round_engine.flatten_tree(spec, server)
         cli_f = round_engine.stack_server_rows(spec, srv_f, n)
         ini_f = round_engine.stack_server_rows(spec, srv_f, n)
-        step_time_j = jnp.asarray(step_time, jnp.float32)
+        # App. C.2 clock on integer ticks: exact for rational step times
+        # (0.3 == 3/10), no f32 drift vs the f64 host reference
+        step_ticks_np, round_ticks = sampler.time_ticks(step_time, round_dur)
+        step_ticks_j = jnp.asarray(step_ticks_np)
         if cfg.method == "favas" and cfg.reweight == "deterministic":
             det_alpha = jnp.asarray(
                 np.maximum(_det_alpha(cfg, step_time, round_dur), 1e-6),
@@ -195,8 +206,8 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128,
             alphas, the fused poll, and the q reset."""
             srv_f, cli_f, ini_f, q, credit, rkey = carry
             xs_t, ys_t = batch
-            do, credit = sampler.credit_steps(credit, step_time_j, q,
-                                              cfg.K, round_dur)
+            do, credit = sampler.credit_steps(credit, step_ticks_j, q,
+                                              cfg.K, round_ticks)
             clients_t = round_engine.unflatten_stacked(spec, cli_f)
             clients_t = sgd(clients_t, xs_t, ys_t, do.astype(jnp.int32))
             q_new = q + do
@@ -260,6 +271,23 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128,
             carry, _ = jax.lax.scan(one_round, carry, (xs, ys))
             return carry
 
+        @functools.partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
+        def superstep_device(carry, corpus, C):
+            """Device data plane (docs/architecture.md §8): same window
+            scan, but each round's minibatches are SAMPLED IN THE SCAN BODY
+            from the resident corpus (one batch key split off the carried
+            chain per round) — no host batch generation, no prefetcher, no
+            per-chunk H2D batch copies. The corpus rides as an argument so
+            its buffers stay shared inputs, not baked-in constants."""
+            def body(c, _):
+                srv, cli, ini, q, credit, rkey = c
+                rkey, k_batch = jax.random.split(rkey)
+                b = corpus.sample_round_batch(k_batch, R)
+                return one_round((srv, cli, ini, q, credit, rkey),
+                                 (b["x"], b["y"]))
+            carry, _ = jax.lax.scan(body, carry, None, length=C)
+            return carry
+
         # split eval-to-eval windows into <= MAX_SUPERSTEP_ROUNDS sub-chunks
         # (bounded batch memory); only the first sub-chunk of a window
         # records, so the curves are identical to whole-window scans
@@ -270,13 +298,20 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128,
                 c = min(W, MAX_SUPERSTEP_ROUNDS)
                 chunks.append((c, first))
                 first, W = False, W - c
-        from repro.data.pipeline import BatchPrefetcher
-        prefetch = BatchPrefetcher(
-            lambda i: batcher.superstep_batch(chunks[i][0], R),
-            n_steps=len(chunks))
+        use_device_plane = cfg.data_plane == "device"
+        if use_device_plane:
+            from repro.data.device_corpus import make_classification_corpus
+            corpus = make_classification_corpus(xtr, ytr, parts,
+                                                cfg.batch_size, mesh=mesh)
+            prefetch = None
+        else:
+            from repro.data.pipeline import BatchPrefetcher
+            prefetch = BatchPrefetcher(
+                lambda i: batcher.superstep_batch(chunks[i][0], R),
+                n_steps=len(chunks))
         carry = (srv_f, cli_f, ini_f,
                  jnp.zeros((n,), jnp.float32),       # q: steps since reset
-                 jnp.zeros((n,), jnp.float32),       # fractional time credit
+                 jnp.zeros((n,), jnp.int32),         # time credit (ticks)
                  key)
         try:
             for C, at_record in chunks:
@@ -287,12 +322,16 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128,
                     server = round_engine.unflatten_tree(spec, srv_f)
                     clients = round_engine.unflatten_stacked(spec, cli_f)
                     record()
-                xs, ys = prefetch.get()
-                carry = superstep(carry, xs, ys)
+                if use_device_plane:
+                    carry = superstep_device(carry, corpus, C)
+                else:
+                    xs, ys = prefetch.get()
+                    carry = superstep(carry, xs, ys)
                 t_now += C * round_dur
                 srv_step += C
         finally:
-            prefetch.close()
+            if prefetch is not None:
+                prefetch.close()
         server = round_engine.unflatten_tree(spec, carry[0])
         clients = round_engine.unflatten_stacked(spec, carry[1])
 

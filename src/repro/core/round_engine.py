@@ -654,29 +654,62 @@ def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     return new_state, metrics
 
 
-def engine_multi_round(spec: FlatSpec, state: EngineState, batches, *, cfg,
-                       loss_fn: Callable, lambdas,
+def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
+                       cfg, loss_fn: Callable, lambdas,
                        det_alpha: Optional[jnp.ndarray] = None,
-                       use_kernel: Optional[bool] = None, mesh=None):
+                       use_kernel: Optional[bool] = None, mesh=None,
+                       corpus=None, n_rounds: Optional[int] = None):
     """A whole chunk of FAVAS rounds as ONE ``jax.lax.scan`` — the
     "superstep" (docs/architecture.md §7). Pure; jit/pjit this and donate
     ``state``: a T-round chunk then costs one dispatch instead of T.
 
-    ``batches`` is the per-round batch pytree with an extra LEADING rounds
-    axis — leaves are (T, n, R, ...); round t consumes slice ``batches[t]``.
+    Two data planes feed the scan (docs/architecture.md §8):
+
+    * **host plane** — ``batches`` is the per-round batch pytree with an
+      extra LEADING rounds axis — leaves are (T, n, R, ...); round t
+      consumes slice ``batches[t]``;
+    * **device plane** — ``corpus`` is a
+      :class:`repro.data.device_corpus.DeviceCorpus` and ``n_rounds`` the
+      (static) chunk length: the scan body draws each round's per-client
+      minibatch indices from the carried PRNG key and gathers the rows on
+      device (``corpus.sample_round_batch``), so a compiled chunk does ZERO
+      host batch-generation work between dispatches.
+
     The scan carries the :class:`EngineState` and stacks each round's
     metrics, so the caller fetches one (T,)-shaped metrics pytree per chunk
     instead of blocking on T scalar transfers.
 
     RNG equivalence: :func:`engine_round` derives everything it draws from
     ``state.key`` (split once per round, the new key rides in the carry), so
-    the scanned stream is IDENTICAL to T sequential ``engine_round`` calls —
-    superstep-vs-sequential parity is bit-exact, not approximate
-    (tests/test_superstep.py). Composes with ``use_kernel`` and ``mesh``
-    exactly like ``engine_round``: the shard_map / pjit dispatch sits inside
-    the scan body, compiled once for the whole chunk.
+    the scanned host-plane stream is IDENTICAL to T sequential
+    ``engine_round`` calls — superstep-vs-sequential parity is bit-exact,
+    not approximate (tests/test_superstep.py). The device plane splits one
+    extra batch key per round off the same chain (see
+    tests/test_device_corpus.py for the sequential-parity proof), so it is
+    *statistically equivalent* to the host plane, not stream-identical —
+    the same contract PR 4 set for on-device selection. Composes with
+    ``use_kernel`` and ``mesh`` exactly like ``engine_round``: the
+    shard_map / pjit dispatch sits inside the scan body, compiled once for
+    the whole chunk.
 
     Returns ``(new_state, metrics)`` with every metric stacked to (T,)."""
+    if corpus is not None:
+        if batches is not None:
+            raise ValueError("pass either batches (host plane) or corpus "
+                             "(device plane), not both")
+        if n_rounds is None:
+            raise ValueError("the device plane needs a static n_rounds "
+                             "(there is no batches axis to infer it from)")
+
+        def body_c(st, _):
+            key, k_batch = jax.random.split(st.key)
+            st = dataclasses.replace(st, key=key)
+            batch = corpus.sample_round_batch(k_batch, cfg.R)
+            return engine_round(spec, st, batch, cfg=cfg, loss_fn=loss_fn,
+                                lambdas=lambdas, det_alpha=det_alpha,
+                                use_kernel=use_kernel, mesh=mesh)
+        return jax.lax.scan(body_c, state, None, length=n_rounds)
+
     def body(st, batch):
         return engine_round(spec, st, batch, cfg=cfg, loss_fn=loss_fn,
                             lambdas=lambdas, det_alpha=det_alpha,
@@ -741,6 +774,15 @@ class RoundEngine:
                               det_alpha=self.det_alpha,
                               use_kernel=self.use_kernel, mesh=self.mesh),
             donate_argnums=(0,))
+        # device data plane: the corpus rides as a pytree ARGUMENT (not a
+        # closure) so its buffers are shared inputs, never baked into the
+        # executable as constants; n_rounds is static (scan length)
+        self._multi_device = jax.jit(
+            functools.partial(engine_multi_round, self.spec, cfg=self.cfg,
+                              loss_fn=self.loss_fn, lambdas=self.lambdas,
+                              det_alpha=self.det_alpha,
+                              use_kernel=self.use_kernel, mesh=self.mesh),
+            static_argnames=("n_rounds",), donate_argnums=(0,))
         # dispatches into the jitted round/superstep — the regression guard
         # tests/test_superstep.py uses to pin "one chunk = one dispatch"
         self.dispatch_count = 0
@@ -772,6 +814,18 @@ class RoundEngine:
                 f"batches carry {T} rounds but n_rounds={n_rounds}")
         self.dispatch_count += 1
         return self._multi(state, batches)
+
+    def run_device(self, state: EngineState, corpus, n_rounds: int):
+        """A chunk of rounds on the DEVICE data plane: one superstep
+        dispatch whose scan body samples each round's minibatches from the
+        resident ``corpus`` (a ``data.device_corpus.DeviceCorpus``) — no
+        host batch generation, no H2D batch traffic, no prefetcher.
+        Donates the previous state's buffers; ``n_rounds`` is static (one
+        compilation per distinct chunk length, like the host plane's batch
+        shapes). Returns ``(new_state, metrics)`` with (T,)-stacked
+        metrics."""
+        self.dispatch_count += 1
+        return self._multi_device(state, corpus=corpus, n_rounds=n_rounds)
 
     def server_params(self, state: EngineState):
         return engine_server_params(self.spec, state)

@@ -51,22 +51,59 @@ def sample_selection(key, n: int, s: int) -> jnp.ndarray:
     return sample_selection_indices(key, n, s)[1]
 
 
-def credit_steps(credit, step_time, q, K: int, round_dur: float):
+def time_ticks(step_time, round_dur: float, max_denominator: int = 10 ** 4):
+    """Scale (possibly fractional) step times + round duration to a common
+    INTEGER tick grid: each time is read as the rational
+    ``Fraction(t).limit_denominator(max_denominator)`` (so the float 0.3
+    means the rational 3/10, exactly) and everything is multiplied by the
+    lcm of the denominators. Returns ``(step_ticks (n,) int32 numpy,
+    round_ticks int)`` for :func:`credit_steps`.
+
+    The tick clock is drift-free integer arithmetic — unlike the previous
+    f32 on-device clock, non-representable step times like 0.3 match the
+    f64 host reference exactly at every round
+    (tests/test_superstep.py::test_credit_steps_ticks_adversarial)."""
+    from fractions import Fraction
+    from math import gcd
+    fr = [Fraction(float(t)).limit_denominator(max_denominator)
+          for t in np.asarray(step_time).ravel()]
+    fr.append(Fraction(float(round_dur)).limit_denominator(max_denominator))
+    den = 1
+    for f in fr:
+        den = den * f.denominator // gcd(den, f.denominator)
+    ticks = [int(f * den) for f in fr]
+    if min(ticks) <= 0:
+        raise ValueError(
+            f"step times {np.asarray(step_time)!r} / round_dur {round_dur} "
+            f"contain a value below the 1/{max_denominator} tick resolution "
+            f"(it would quantize to zero ticks and divide by zero); use "
+            f"larger times or a bigger max_denominator")
+    if max(ticks) + ticks[-1] >= 2 ** 31:
+        raise ValueError(
+            f"step times {np.asarray(step_time)!r} / round_dur {round_dur} "
+            f"need > int32 ticks (common denominator {den}); pass simpler "
+            f"rational times or a smaller max_denominator")
+    return (np.asarray(ticks[:-1], np.int32).reshape(np.shape(step_time)),
+            ticks[-1])
+
+
+def credit_steps(credit, step_ticks, q, K: int, round_ticks: int):
     """Deterministic-rate local-step bookkeeping, on-device (the simulator's
-    App. C.2 clock): every client accrues ``round_dur`` time units, converts
-    whole ``step_time`` quanta into available steps (keeping the fractional
-    remainder as credit), and runs ``min(available, K - q)`` of them this
-    round. All (n,) float32. Returns ``(steps_run, new_credit)`` — the
-    arithmetic the host loop used to do in numpy, now scannable. Note the
-    clock runs in float32 on-device (x64 is disabled): with exactly
-    representable step times (the App. C.2 defaults 2.0 / 16.0 are) it
-    matches the old float64 host loop exactly; non-representable step
-    times (e.g. 0.3) can land ``floor`` on the other side of an integer in
-    rare rounds."""
-    credit = credit + round_dur
-    avail = jnp.floor(credit / step_time)
-    credit = credit - avail * step_time
-    return jnp.minimum(avail, K - q), credit
+    App. C.2 clock), on INTEGER ticks: every client accrues ``round_ticks``
+    ticks, converts whole ``step_ticks`` quanta into available steps
+    (keeping the remainder as credit), and runs ``min(available, K - q)``
+    of them this round. ``credit``/``step_ticks`` are (n,) int32 (build the
+    ticks once with :func:`time_ticks`); ``q`` stays (n,) float32. Returns
+    ``(steps_run (n,) float32, new_credit (n,) int32)``.
+
+    Integer division replaces the old f32 ``floor(credit / step_time)``,
+    so the clock is exact for ANY rational step time — the f64 host loop
+    and this scan body can no longer disagree by a step (the ROADMAP
+    f32-clock caveat)."""
+    credit = credit + round_ticks
+    avail = credit // step_ticks
+    credit = credit - avail * step_ticks
+    return jnp.minimum(avail.astype(jnp.float32), K - q), credit
 
 
 # ---------------------------------------------------------------------------

@@ -2,3 +2,5 @@ from repro.data.synthetic import make_classification, make_lm_corpus
 from repro.data.partition import partition_iid, partition_label_skew
 from repro.data.pipeline import (BatchPrefetcher, FederatedBatcher,
                                  lm_round_batch, lm_superstep_batch)
+from repro.data.device_corpus import (DeviceCorpus, make_classification_corpus,
+                                      make_lm_device_corpus)

@@ -22,11 +22,37 @@ import numpy as np
 
 
 class FederatedBatcher:
-    def __init__(self, x, y, parts, batch_size: int, seed: int = 0):
+    """Per-client minibatch streams.
+
+    ``stream`` versions the rng stream (docs/architecture.md §8):
+
+    * ``"v1"`` (default) — the original per-(client, step)
+      ``rng.choice`` loop: without-replacement minibatches whenever the
+      partition is large enough, one generator call per cell. Kept as the
+      reference stream — results of every pre-existing seed reproduce.
+    * ``"v2"`` — fully vectorized: ONE uniform draw per round mapped
+      through the padded partition table with the same index math the
+      device plane uses (``data.device_corpus.uniform_to_indices``), so a
+      round costs one numpy gather instead of ``n * R`` generator calls.
+      Samples WITH replacement (like the device plane); the stream differs
+      from v1, hence the explicit opt-in.
+    """
+
+    def __init__(self, x, y, parts, batch_size: int, seed: int = 0,
+                 stream: str = "v1"):
+        if stream not in ("v1", "v2"):
+            raise ValueError(f"unknown stream version {stream!r}")
         self.x, self.y = x, y
         self.parts = parts
         self.B = batch_size
         self.rng = np.random.default_rng(seed)
+        self.stream = stream
+        self._lens = np.array([len(p) for p in parts], np.int64)
+        if stream == "v2":
+            lmax = int(self._lens.max())
+            self._table = np.zeros((len(parts), lmax), np.int64)
+            for i, p in enumerate(parts):
+                self._table[i, :len(p)] = p
 
     def client_batch(self, i: int):
         idx = self.parts[i]
@@ -36,6 +62,14 @@ class FederatedBatcher:
     def round_batch(self, n_steps: int):
         """(n, R, B, d) x, (n, R, B) y for one server round."""
         n = len(self.parts)
+        if self.stream == "v2":
+            # one generator call + one gather per round: the numpy run of
+            # the device plane's index math (j = min(int(u * L), L - 1))
+            u = self.rng.random((n, n_steps, self.B))
+            j = np.minimum((u * self._lens[:, None, None]).astype(np.int64),
+                           self._lens[:, None, None] - 1)
+            take = self._table[np.arange(n)[:, None, None], j]
+            return self.x[take], self.y[take]
         xs = np.empty((n, n_steps, self.B) + self.x.shape[1:], self.x.dtype)
         ys = np.empty((n, n_steps, self.B), self.y.dtype)
         for i in range(n):
@@ -57,32 +91,61 @@ class FederatedBatcher:
         return xs, ys
 
 
-def lm_round_batch(tokens: np.ndarray, domains: np.ndarray, n_clients: int,
-                   n_steps: int, batch: int, seq: int, rng: np.random.Generator):
-    """(n, R, B, S) int32 token batch; client i samples from domain
-    i % n_domains (domain-skew non-IID)."""
+def _lm_start_bounds(domains: np.ndarray, n_clients: int, seq: int):
+    """Per-client window-start (lo, span): client i samples starts uniformly
+    from [lo_i, lo_i + span_i) over domain i % n_domains (domain-skew
+    non-IID). The ONE copy of the window-bound formula — shared by both
+    host stream versions AND ``data.device_corpus.make_lm_device_corpus``,
+    so the two data planes draw from identical pools by construction."""
     n_domains = int(domains.max()) + 1
-    out = np.empty((n_clients, n_steps, batch, seq), np.int32)
     dom_index = [np.where(domains == d)[0] for d in range(n_domains)]
+    lo = np.empty((n_clients,), np.int64)
+    span = np.empty((n_clients,), np.int64)
     for i in range(n_clients):
         pool = dom_index[i % n_domains]
-        lo, hi = pool.min(), pool.max() - seq - 1
-        starts = rng.integers(lo, max(hi, lo + 1), (n_steps, batch))
-        for k in range(n_steps):
-            for b in range(batch):
-                s = int(starts[k, b])
-                out[i, k, b] = tokens[s:s + seq]
-    return out
+        a, b = int(pool.min()), int(pool.max()) - seq - 1
+        lo[i], span[i] = a, max(b, a + 1) - a
+    return lo, span
+
+
+def lm_round_batch(tokens: np.ndarray, domains: np.ndarray, n_clients: int,
+                   n_steps: int, batch: int, seq: int,
+                   rng: np.random.Generator, stream: str = "v1"):
+    """(n, R, B, S) int32 token batch; client i samples from domain
+    i % n_domains (domain-skew non-IID).
+
+    ``stream="v1"`` (default) keeps the original per-client
+    ``rng.integers`` draws — the stream is IDENTICAL to the seed's triple
+    Python loop; only the window gather is vectorized (pure indexing, no
+    generator calls). ``"v2"`` draws one uniform block for all clients and
+    maps it with the device plane's index math — one generator call per
+    round, stream intentionally different."""
+    lo, span = _lm_start_bounds(domains, n_clients, seq)
+    if stream == "v2":
+        u = rng.random((n_clients, n_steps, batch))
+        starts = lo[:, None, None] + np.minimum(
+            (u * span[:, None, None]).astype(np.int64),
+            span[:, None, None] - 1)
+    elif stream == "v1":
+        starts = np.empty((n_clients, n_steps, batch), np.int64)
+        for i in range(n_clients):
+            # one rng.integers call per client, exactly as the old loop made
+            starts[i] = rng.integers(lo[i], lo[i] + span[i],
+                                     (n_steps, batch))
+    else:
+        raise ValueError(f"unknown stream version {stream!r}")
+    return tokens[starts[..., None] + np.arange(seq)].astype(np.int32)
 
 
 def lm_superstep_batch(tokens: np.ndarray, domains: np.ndarray,
                        n_rounds: int, n_clients: int, n_steps: int,
-                       batch: int, seq: int, rng: np.random.Generator):
+                       batch: int, seq: int, rng: np.random.Generator,
+                       stream: str = "v1"):
     """(T, n, R, B, S) int32 — ``n_rounds`` LM round batches stacked on a
     leading rounds axis, same rng stream as sequential ``lm_round_batch``
     calls."""
     return np.stack([lm_round_batch(tokens, domains, n_clients, n_steps,
-                                    batch, seq, rng)
+                                    batch, seq, rng, stream=stream)
                      for _ in range(n_rounds)])
 
 
@@ -188,18 +251,41 @@ class BatchPrefetcher:
                 return
 
     def close(self):
-        """Stop the producer and drop buffered chunks."""
+        """Stop the producer and drop buffered chunks.
+
+        Deadlock-safe even when the producer is blocked on a FULL queue:
+        the stop flag is set first (the producer's ``put`` polls it every
+        0.1 s), then drain-and-join repeats until the thread exits — a
+        single drain could race a producer that was mid-``put`` and leave
+        it parked behind a re-filled queue. A pending producer error is
+        NOT cleared here; :meth:`__exit__` re-raises it so failures can't
+        vanish when the consumer stops early."""
         self._stop.set()
+        deadline = 30.0
+        while self._thread.is_alive() and deadline > 0:
+            while True:
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+            self._thread.join(timeout=0.25)
+            deadline -= 0.25
+        # drop anything the producer managed to enqueue while exiting
         while True:
             try:
                 self._q.get_nowait()
             except queue.Empty:
                 break
-        self._thread.join(timeout=5.0)
 
     def __enter__(self):
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, exc_type, exc, tb):
+        """Close, then PROPAGATE a pending producer error (one that was
+        raised on the producer thread but never surfaced through ``get``)
+        — unless the body is already unwinding with its own exception."""
         self.close()
+        if self._err is not None and exc_type is None:
+            err, self._err = self._err, None
+            raise err
         return False

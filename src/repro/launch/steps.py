@@ -96,6 +96,21 @@ def prefill_batch_specs(cfg: ModelConfig, seq: int, global_batch: int) -> Dict:
     return batch
 
 
+def lm_corpus_specs(fcfg: FavasConfig, seq: int, global_batch: int,
+                    n_tokens: int = 400_000):
+    """ShapeDtypeStruct stand-in for a device-resident LM corpus
+    (``data.device_corpus.DeviceCorpus``): the token stream + per-client
+    window-start tables the device data plane samples in-scan
+    (docs/architecture.md §8). Shardable (replicated), no allocation."""
+    from repro.data.device_corpus import DeviceCorpus
+    n = fcfg.n_clients
+    B_loc = max(global_batch // n, 1)
+    return DeviceCorpus(kind="lm", batch=B_loc, seq=seq,
+                        tokens=_sds((n_tokens,), jnp.int32),
+                        lo=_sds((n,), jnp.int32),
+                        span=_sds((n,), jnp.int32))
+
+
 def input_specs(arch: str, shape_name: str,
                 fcfg: Optional[FavasConfig] = None, mesh=None) -> Dict:
     """Public entry: ShapeDtypeStruct stand-ins for every model input of the
@@ -194,12 +209,18 @@ def cache_specs(cache_sds, mesh, cfg: ModelConfig):
 
 def build_train_step(arch: str, mesh, fcfg: Optional[FavasConfig] = None,
                      *, use_agg_kernel: bool = False, variant: str = "opt",
-                     rounds_per_step: int = 1):
+                     rounds_per_step: int = 1, data_plane: str = "host"):
     """Returns (jitted_step, state_sds, batch_sds). train_step = one FAVAS
     server round over the resident clients — or, with ``rounds_per_step`` >
     1, one SUPERSTEP: that many rounds scanned on-device in a single
     dispatch (``favas_multi_round``; batch gains a leading (T,) rounds axis
-    and metrics come back (T,)-stacked)."""
+    and metrics come back (T,)-stacked).
+
+    ``data_plane="device"`` (docs/architecture.md §8): the step's second
+    operand becomes a replicated ``DeviceCorpus`` stand-in instead of a
+    batch — the superstep samples every round's minibatches in-scan, so
+    the host ships no batch bytes at all. Token-corpus archs only (audio /
+    VLM side inputs have no corpus sampler yet)."""
     cfg = get_config(arch)
     ms = _axis_sizes(mesh)["model"]
     cfg = apply_variant(cfg, variant, INPUT_SHAPES["train_4k"]["seq"], ms)
@@ -209,9 +230,22 @@ def build_train_step(arch: str, mesh, fcfg: Optional[FavasConfig] = None,
     def lfn(p, b):
         return loss_fn(p, cfg, b)
 
+    if data_plane not in ("host", "device"):
+        raise ValueError(f"unknown data_plane {data_plane!r}")
+    if data_plane == "device" and cfg.arch_type in ("audio", "vlm"):
+        raise ValueError(
+            f"--data-plane device needs a pure token corpus; {arch} "
+            f"({cfg.arch_type}) feeds extra side inputs per batch")
+
     def step(state, batch):
         # use_agg_kernel=False keeps the jnp oracle under pjit (XLA fuses the
         # flat-buffer expression); True forces the Pallas fused kernel.
+        if data_plane == "device":
+            # batch IS the resident corpus; minibatches are sampled in-scan
+            return favas_multi_round(state, corpus=batch,
+                                     n_rounds=max(rounds_per_step, 1),
+                                     cfg=fcfg, loss_fn=lfn, lambdas=lambdas,
+                                     use_kernel=use_agg_kernel)
         if rounds_per_step > 1:
             return favas_multi_round(state, batch, cfg=fcfg, loss_fn=lfn,
                                      lambdas=lambdas,
@@ -229,12 +263,20 @@ def build_train_step(arch: str, mesh, fcfg: Optional[FavasConfig] = None,
         lambda spec: NamedSharding(mesh, spec), sspec,
         is_leaf=lambda x: isinstance(x, P))
     info = INPUT_SHAPES["train_4k"]
-    batch_sds = train_batch_specs(cfg, fcfg, info["seq"], info["global_batch"])
-    if rounds_per_step > 1:
-        batch_sds = jax.tree_util.tree_map(
-            lambda s: _sds((rounds_per_step,) + s.shape, s.dtype), batch_sds)
-    batch_sh = batch_shardings(batch_sds, mesh, leading_client_axis=True,
-                               leading_rounds_axis=rounds_per_step > 1)
+    if data_plane == "device":
+        batch_sds = lm_corpus_specs(fcfg, info["seq"], info["global_batch"])
+        # the corpus is a replicated side input: every shard gathers locally
+        batch_sh = jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, P()), batch_sds)
+    else:
+        batch_sds = train_batch_specs(cfg, fcfg, info["seq"],
+                                      info["global_batch"])
+        if rounds_per_step > 1:
+            batch_sds = jax.tree_util.tree_map(
+                lambda s: _sds((rounds_per_step,) + s.shape, s.dtype),
+                batch_sds)
+        batch_sh = batch_shardings(batch_sds, mesh, leading_client_axis=True,
+                                   leading_rounds_axis=rounds_per_step > 1)
     metrics_sh = {k: NamedSharding(mesh, P()) for k in
                   ("loss", "mean_steps", "selected", "stale_rounds")}
     jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),

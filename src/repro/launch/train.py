@@ -16,7 +16,11 @@ superstep dispatch (``RoundEngine.run``, bit-exact with T sequential
 rounds), batch generation runs ahead on a background thread
 (``data.pipeline.BatchPrefetcher``, H2D copies overlapped), and metrics
 stay on device until a ``--log-every`` boundary — the loop never blocks
-on a per-round ``float(loss)``.
+on a per-round ``float(loss)``. With ``--data-plane device`` batch
+generation leaves the host entirely (docs/architecture.md §8): the token
+corpus is uploaded once (``data.device_corpus``) and the superstep scan
+samples every round's minibatch indices in-body (``RoundEngine.
+run_device``) — no prefetcher, no per-chunk H2D batch copies.
 
   PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --reduced \
       --steps 50 --n-clients 4 --s 2 --seq 128 --batch 4 --rounds-per-step 8
@@ -61,6 +65,15 @@ def build_cli():
                          "(bit-exact with T sequential rounds) and fetches "
                          "metrics once per chunk — removes per-round host "
                          "dispatch/sync overhead")
+    ap.add_argument("--data-plane", default="host",
+                    choices=["host", "device"],
+                    help="host (default): numpy batch generation on the "
+                         "background prefetch thread, batches shipped per "
+                         "chunk; device: the token corpus is uploaded ONCE "
+                         "and every round's minibatch indices are sampled "
+                         "inside the on-device scan — zero host batch work "
+                         "per round (docs/architecture.md §8; jax-PRNG "
+                         "stream, statistically equivalent to host)")
     ap.add_argument("--use-kernel", default="auto",
                     choices=["auto", "on", "off"],
                     help="fused Pallas aggregation kernel: auto = TPU only "
@@ -137,6 +150,15 @@ def run(args):
     if args.steps % T:
         schedule.append(args.steps % T)
 
+    device_plane = args.data_plane == "device"
+    corpus = None
+    if device_plane:
+        # upload the corpus + per-client sampling tables ONCE; every chunk
+        # is then a single dispatch with zero host batch-generation work
+        from repro.data.device_corpus import make_lm_device_corpus
+        corpus = make_lm_device_corpus(tokens, domains, fcfg.n_clients,
+                                       args.batch, args.seq, mesh=mesh)
+
     def make_chunk(i):
         """Host batch generation for chunk i — runs on the prefetch thread,
         concurrently with the device's current superstep; the prefetcher
@@ -168,14 +190,18 @@ def run(args):
                            stale_rounds=host["stale_rounds"][j])
         pending = []
 
-    prefetch = BatchPrefetcher(make_chunk, n_steps=len(schedule))
+    prefetch = (None if device_plane
+                else BatchPrefetcher(make_chunk, n_steps=len(schedule)))
     t0 = time.time()
     try:
         for W in schedule:
-            batch = prefetch.get()
-            if T == 1:
+            if device_plane:
+                state, metrics = engine.run_device(state, corpus, W)
+            elif T == 1:
+                batch = prefetch.get()
                 state, metrics = engine.step(state, batch)
             else:
+                batch = prefetch.get()
                 state, metrics = engine.run(state, batch, n_rounds=W)
             pending.append((rounds_done, W, metrics))
             rounds_done += W
@@ -212,7 +238,8 @@ def run(args):
                 while next_ckpt <= rounds_done:
                     next_ckpt += args.ckpt_every
     finally:
-        prefetch.close()
+        if prefetch is not None:
+            prefetch.close()
     flush()
     print(f"done: first-10 loss {np.mean(losses[:10]):.4f} -> "
           f"last-10 {np.mean(losses[-10:]):.4f}")

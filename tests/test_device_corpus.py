@@ -1,0 +1,265 @@
+"""Device data plane tests (docs/architecture.md §8).
+
+* **numpy-mirror bit-exactness** — the on-device index sampling
+  (``uniform_to_indices`` over the padded partition table / LM window
+  bounds) equals the numpy mirror element-exactly under a fixed key,
+  across n ∈ {7, 257} × {classification, LM}. The mirror consumes the
+  same uniforms (the PRNG stream is jax's; the *math* from uniforms to
+  rows is what the mirror pins down — the same contract PR 4 used for
+  ``credit_steps``).
+* **ragged-partition padding invariants** — padded table entries are
+  never sampled: every gathered row belongs to the owning client's real
+  partition, over many keys, even with wildly ragged partition sizes.
+* **zero host work per chunk** — ``RoundEngine.run_device`` is ONE
+  compiled dispatch per chunk (the dispatch-count guard of
+  tests/test_superstep.py, re-proven for the device plane), its compiled
+  HLO scans on-device, and the chunk equals the sequential
+  split-key-then-sample-then-step reference exactly (array-for-array).
+* **host-plane equivalence** — the simulator converges the same with
+  ``data_plane="device"`` as with the host plane on the structured
+  corpus (statistical equivalence; streams differ by design).
+
+The forced-8-device mesh leg (replicated corpus, shard-local gather, no
+full-corpus all-gather) lives in tests/test_sharded_engine.py with the
+rest of the mesh tier.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import round_engine
+from repro.core.favas import FavasConfig, client_lambdas
+from repro.data.device_corpus import (DeviceCorpus, make_classification_corpus,
+                                      make_lm_device_corpus,
+                                      mirror_lm_starts,
+                                      mirror_partition_indices,
+                                      sample_partition_indices)
+from repro.models.classifier import classifier_loss, mlp_apply, mlp_init
+
+D_IN, N_CLASSES = 8, 5
+
+
+def _ragged_data(n, n_rows=600, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, 1, (n_rows, D_IN)).astype(np.float32)
+    y = rng.integers(0, N_CLASSES, n_rows).astype(np.int32)
+    # wildly ragged: sizes from 1 to ~n_rows/2
+    parts = [rng.choice(n_rows, rng.integers(1, max(n_rows // 2, 2)),
+                        replace=False) for _ in range(n)]
+    return x, y, parts
+
+
+@pytest.mark.parametrize("n", [7, 257])
+def test_classification_sampler_matches_numpy_mirror(n):
+    """Device indices == numpy mirror, element-exact, and the gathered
+    batch equals the mirror's numpy gather."""
+    x, y, parts = _ragged_data(n)
+    corpus = make_classification_corpus(x, y, parts, batch=3)
+    R = 4
+    key = jax.random.PRNGKey(42)
+    j_dev = np.asarray(sample_partition_indices(key, corpus.lengths, R, 3))
+    u = np.asarray(jax.random.uniform(key, (n, R, 3)))
+    lengths = np.asarray(corpus.lengths)
+    j_np = mirror_partition_indices(u, lengths)
+    np.testing.assert_array_equal(j_dev, j_np)
+    assert np.all(j_np < lengths[:, None, None])
+    # full batch equality through the table gather
+    b = corpus.sample_round_batch(key, R)
+    table = np.asarray(corpus.idx)
+    rows = table[np.arange(n)[:, None, None], j_np]
+    np.testing.assert_array_equal(np.asarray(b["x"]), x[rows])
+    np.testing.assert_array_equal(np.asarray(b["y"]), y[rows])
+
+
+@pytest.mark.parametrize("n", [7, 257])
+def test_lm_sampler_matches_numpy_mirror(n):
+    from repro.data import make_lm_corpus
+    tokens, domains = make_lm_corpus(64, 30_000, n_domains=5, seed=1)
+    seq = 6
+    corpus = make_lm_device_corpus(tokens, domains, n, batch=2, seq=seq)
+    R = 3
+    key = jax.random.PRNGKey(7)
+    b = corpus.sample_round_batch(key, R)
+    u = np.asarray(jax.random.uniform(key, (n, R, 2)))
+    starts = mirror_lm_starts(u, np.asarray(corpus.lo), np.asarray(corpus.span))
+    want = tokens[starts[..., None] + np.arange(seq)]
+    np.testing.assert_array_equal(np.asarray(b["tokens"]), want)
+    # starts stay inside each client's domain-skew window
+    lo, span = np.asarray(corpus.lo), np.asarray(corpus.span)
+    assert np.all(starts >= lo[:, None, None])
+    assert np.all(starts < (lo + span)[:, None, None])
+
+
+def test_masked_rows_never_sampled():
+    """Padded table entries (index 0 fill) must be unreachable: every
+    sampled row is a member of the owning client's real partition, across
+    many keys — the ragged-padding invariant."""
+    n = 9
+    x, y, parts = _ragged_data(n, seed=3)
+    corpus = make_classification_corpus(x, y, parts, batch=4)
+    part_sets = [set(int(v) for v in p) for p in parts]
+    table = np.asarray(corpus.idx)
+    lengths = np.asarray(corpus.lengths)
+    for s in range(25):
+        j = np.asarray(sample_partition_indices(
+            jax.random.PRNGKey(s), corpus.lengths, 5, 4))
+        assert np.all(j < lengths[:, None, None])
+        rows = table[np.arange(n)[:, None, None], j]
+        for i in range(n):
+            assert set(rows[i].ravel().tolist()) <= part_sets[i], (
+                f"client {i} sampled rows outside its partition")
+
+
+def test_corpus_rejects_empty_partition():
+    x, y, parts = _ragged_data(4)
+    with pytest.raises(ValueError, match="non-empty"):
+        make_classification_corpus(x, y, parts[:3] + [np.array([], int)],
+                                   batch=2)
+
+
+def test_corpus_is_a_jit_stable_pytree():
+    """DeviceCorpus round-trips tree_flatten/unflatten and jits without
+    retracing per call (static aux, array leaves)."""
+    x, y, parts = _ragged_data(5)
+    corpus = make_classification_corpus(x, y, parts, batch=2)
+    leaves, treedef = jax.tree_util.tree_flatten(corpus)
+    corpus2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert corpus2.kind == "classification" and corpus2.batch == 2
+    traces = {"n": 0}
+
+    @jax.jit
+    def f(c, key):
+        traces["n"] += 1
+        return c.sample_round_batch(key, 2)["y"]
+
+    f(corpus, jax.random.PRNGKey(0))
+    f(corpus2, jax.random.PRNGKey(1))
+    assert traces["n"] == 1
+
+
+# ---------------------------------------------------------------------------
+# The engine on the device plane
+# ---------------------------------------------------------------------------
+
+def _engine(n=6, batch=3):
+    x, y, parts = _ragged_data(n, seed=5)
+    corpus = make_classification_corpus(x, y, parts, batch=batch)
+    key = jax.random.PRNGKey(0)
+    params = mlp_init(key, D_IN, 8, N_CLASSES)
+    fcfg = FavasConfig(n_clients=n, s_selected=2, local_steps=2, eta=0.1)
+
+    def lfn(p, b):
+        return classifier_loss(p, mlp_apply, b["x"], b["y"], N_CLASSES)
+
+    eng = round_engine.RoundEngine(
+        params, fcfg, lfn, lambdas=jnp.asarray(client_lambdas(fcfg)))
+    return eng, fcfg, params, corpus, key
+
+
+def test_run_device_matches_sequential_key_split():
+    """run_device(T) == the sequential reference: split one batch key off
+    the carried chain per round, sample on device, engine.step — exactly
+    the scan body, driven from the host. Array-for-array equality proves
+    the device plane's RNG chain is the documented one."""
+    eng, fcfg, params, corpus, key = _engine()
+    T = 9
+    s_dev = eng.init_state(params, key)
+    s_dev, ms = eng.run_device(s_dev, corpus, T)
+    st = eng.init_state(params, key)
+    seq_losses = []
+    for _ in range(T):
+        k, kb = jax.random.split(st.key)
+        st = dataclasses.replace(st, key=k)
+        batch = corpus.sample_round_batch(kb, fcfg.R)
+        st, m = eng.step(st, batch)
+        seq_losses.append(float(m["loss"]))
+    for a, b in zip(s_dev.server + s_dev.clients + s_dev.inits,
+                    st.server + st.clients + st.inits):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(s_dev.counters),
+                                  np.asarray(st.counters))
+    np.testing.assert_array_equal(np.asarray(s_dev.key), np.asarray(st.key))
+    np.testing.assert_array_equal(np.asarray(ms["loss"]),
+                                  np.asarray(seq_losses, np.float32))
+
+
+def test_run_device_single_dispatch_no_host_batch_work():
+    """The ISSUE-5 acceptance guard: a compiled 32-round device-plane chunk
+    is ONE dispatch into ONE compiled callable (<= 2 XLA executions with
+    the metrics fetch), the loop lives on-device (a `while` op in the
+    HLO), and there is no host batch-generation machinery at all — the
+    only host-side inputs per chunk are the donated state and the
+    (already-resident) corpus buffers."""
+    eng, fcfg, params, corpus, key = _engine()
+    state = eng.init_state(params, key)
+    calls = {"n": 0}
+    orig = eng._multi_device
+
+    def wrap(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    eng._multi_device = wrap
+    try:
+        state, m = eng.run_device(state, corpus, 32)       # compile + run
+        del m
+        calls["n"] = 0
+        state, m = eng.run_device(state, corpus, 32)       # cache hit
+        del m
+        assert calls["n"] == 1, "a device-plane chunk must be ONE dispatch"
+        assert eng.dispatch_count == 2
+    finally:
+        eng._multi_device = orig
+    hlo = orig.lower(state, corpus=corpus, n_rounds=32).compile().as_text()
+    assert "while" in hlo, "device-plane superstep HLO has no on-device loop"
+
+
+def test_run_device_donates_buffers():
+    eng, fcfg, params, corpus, key = _engine()
+    state = eng.init_state(params, key)
+    prev = state
+    state, m = eng.run_device(state, corpus, 4)
+    del m
+    assert prev.server[0].is_deleted(), "run_device must donate the state"
+    # the corpus must NOT be donated — it is reused every chunk
+    assert not corpus.x.is_deleted()
+    state, m = eng.run_device(state, corpus, 4)
+    assert bool(jnp.isfinite(m["loss"]).all())
+
+
+def test_engine_multi_round_corpus_validation():
+    eng, fcfg, params, corpus, key = _engine()
+    state = eng.init_state(params, key)
+    batches = {"x": jnp.zeros((2, 6, 2, 3, D_IN)),
+               "y": jnp.zeros((2, 6, 2, 3), jnp.int32)}
+    with pytest.raises(ValueError, match="not both"):
+        round_engine.engine_multi_round(
+            eng.spec, state, batches, cfg=fcfg, loss_fn=eng.loss_fn,
+            lambdas=eng.lambdas, corpus=corpus, n_rounds=2)
+    with pytest.raises(ValueError, match="n_rounds"):
+        round_engine.engine_multi_round(
+            eng.spec, state, cfg=fcfg, loss_fn=eng.loss_fn,
+            lambdas=eng.lambdas, corpus=corpus)
+
+
+def test_device_plane_simulation_matches_host_plane_convergence():
+    """fl_sim with data_plane="device" trains comparably to the host plane
+    on the structured corpus — the statistical-equivalence contract (the
+    jax-PRNG stream replaces numpy's, so curves match in distribution,
+    not bit-for-bit)."""
+    from benchmarks.common import classification_data
+    from repro.core.fl_sim import SimConfig, run_simulation
+    data = classification_data("mnist-like", 8, non_iid=True,
+                               n_train=1500, n_test=400)
+    kw = dict(method="favas", n_clients=8, s_selected=3, K=5,
+              total_time=350.0, eval_every=350.0, batch_size=32, seed=0)
+    res_h = run_simulation(SimConfig(**kw), data)
+    res_d = run_simulation(SimConfig(data_plane="device", **kw), data)
+    # both train away from chance (1/10) and land in the same band
+    assert res_h["final_accuracy"] > 0.12
+    assert res_d["final_accuracy"] > 0.12
+    assert abs(res_d["final_accuracy"] - res_h["final_accuracy"]) < 0.25

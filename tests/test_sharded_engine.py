@@ -299,6 +299,60 @@ def test_sharded_round_has_no_full_buffer_gather():
     assert isinstance(cost, dict)
 
 
+@needs8
+def test_device_corpus_gather_stays_shard_local():
+    """Device data plane on the mesh (docs/architecture.md §8): with a
+    REPLICATED corpus, the in-scan minibatch gather is shard-local — the
+    compiled device-plane superstep contains NO all-gather at (or above)
+    full-corpus size — and the sharded device plane stays bit-exact
+    against the single-device device plane (same key chain, same sampled
+    indices, elementwise-gradient loss)."""
+    import functools as ft
+    from repro.data.device_corpus import make_classification_corpus
+    (mesh, params, fcfg, lambdas, spec_s, spec_r,
+     st_s, st_r, _batch, key) = _setup(7, jnp.float32)
+    rng = np.random.default_rng(0)
+    N = 2048
+    x = rng.normal(0, 1, (N, 8)).astype(np.float32)
+    y = rng.integers(0, 4, N).astype(np.int32)
+    parts = [rng.choice(N, rng.integers(5, 200), replace=False)
+             for _ in range(fcfg.n_clients)]
+    corpus_s = make_classification_corpus(x, y, parts, batch=2, mesh=mesh)
+    corpus_r = make_classification_corpus(x, y, parts, batch=2)
+
+    def corpus_loss(p, b):
+        # elementwise gradient (see quad_loss); the batch enters only
+        # through a replicated scalar, so sharding cannot reorder sums
+        t = jnp.mean(b["x"]) + 0.01 * jnp.mean(b["y"].astype(jnp.float32))
+        return sum(jnp.mean((l.astype(jnp.float32) - t) ** 2)
+                   for l in jax.tree_util.tree_leaves(p))
+
+    multi_s = jax.jit(ft.partial(
+        round_engine.engine_multi_round, spec_s, cfg=fcfg,
+        loss_fn=corpus_loss, lambdas=lambdas, mesh=mesh, use_kernel=False),
+        static_argnames=("n_rounds",))
+    multi_r = jax.jit(ft.partial(
+        round_engine.engine_multi_round, spec_r, cfg=fcfg,
+        loss_fn=corpus_loss, lambdas=lambdas, use_kernel=False),
+        static_argnames=("n_rounds",))
+    st_sup, m_s = multi_s(st_s, corpus=corpus_s, n_rounds=4)
+    st_rep, m_r = multi_r(st_r, corpus=corpus_r, n_rounds=4)
+    assert m_s["loss"].shape == (4,)
+    _trees_equal(round_engine.engine_server_params(spec_s, st_sup),
+                 round_engine.engine_server_params(spec_r, st_rep))
+    _trees_equal(round_engine.unflatten_stacked(spec_s, st_sup.clients),
+                 round_engine.unflatten_stacked(spec_r, st_rep.clients))
+    # collective census: nothing may gather the corpus (or more) per chunk
+    hlo = multi_s.lower(st_s, corpus=corpus_s,
+                        n_rounds=4).compile().as_text()
+    from repro.launch.roofline import collective_ops
+    corpus_bytes = x.nbytes
+    gathers = [b for kind, b in collective_ops(hlo) if kind == "all-gather"]
+    assert all(b < corpus_bytes for b in gathers), (
+        f"full-corpus all-gather in the device-plane superstep: "
+        f"{gathers} >= {corpus_bytes}")
+
+
 def test_flat_spec_invariants_without_devices():
     """Sharding-aware layout metadata needs no devices: explicit shard_axes
     + model_shards give the same bucket structure tier-1 can verify."""
