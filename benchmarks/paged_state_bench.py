@@ -1,0 +1,228 @@
+"""Paged client state benchmark: resident population at fixed memory +
+rounds/sec vs the dense engine (docs/architecture.md §9).
+
+The residency layer virtualizes the (n, D) client/init buffers: a hot
+working set of ``s_max`` full-precision rows plus LUQ cold pools holding
+all n clients at ``cold_bits`` per weight. Two measurements:
+
+* **residency sweep** — actual ``EngineState`` resident bytes (hot stacks
+  + cold pools + bookkeeping, measured off the live arrays via
+  ``RoundEngine.resident_bytes``) for dense vs paged at n in {1e3, 1e4,
+  1e5}. From two population sizes we fit bytes/client and report the MAX
+  RESIDENT POPULATION at a fixed memory budget (16 GiB, an HBM-class
+  device) for each engine — the headline ratio the layer exists for
+  (acceptance: paged fits >= 4x the dense population).
+* **throughput sweep** — end-to-end rounds/sec of ``RoundEngine.
+  run_device`` (device data plane, one dispatch per 32-round chunk) at
+  n = 1024: dense vs paged (s_max = 256, 4-bit cold pools). Paging adds
+  the select -> gather+dequant -> requant+scatter rim around the fused
+  round; the acceptance gate is paged >= 0.75x dense rounds/sec — the
+  memory headroom may not cost more than a quarter of the throughput.
+
+Results go to ``experiments/bench/paged_state.json`` AND the repo-root
+``BENCH_paged_state.json`` (the perf-trajectory file).
+
+  PYTHONPATH=src:. python benchmarks/paged_state_bench.py [--full|--smoke]
+
+``--smoke`` (the CI ``paged`` job) runs the cheapest defensible check and
+exits non-zero if the paged state is not strictly smaller than the dense
+state at n = 4096; smoke artifacts go to ``paged_state_smoke.json`` and
+never overwrite the canonical files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_artifact
+from repro.core.favas import FavasConfig, client_lambdas
+from repro.core.round_engine import RoundEngine
+from repro.data.device_corpus import make_classification_corpus
+from repro.models.classifier import classifier_loss, mlp_apply, mlp_init
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+D_IN, D_HIDDEN, N_CLASSES = 16, 16, 10
+K, B = 1, 2
+S_MAX, COLD_BITS = 256, 4
+BUDGET_BYTES = 16 * 1024 ** 3          # 16 GiB — an HBM-class device
+
+
+def _make_engine(n_clients: int, *, paged: bool):
+    key = jax.random.PRNGKey(0)
+    params = mlp_init(key, D_IN, D_HIDDEN, N_CLASSES)
+    s_sel = min(64, max(n_clients // 4, 1))
+    fcfg = FavasConfig(n_clients=n_clients, s_selected=s_sel,
+                       local_steps=K, eta=0.1)
+
+    def lfn(p, b):
+        return classifier_loss(p, mlp_apply, b["x"], b["y"], N_CLASSES)
+
+    kw = {}
+    if paged:
+        kw = dict(residency="paged", s_max=min(S_MAX, n_clients),
+                  cold_bits=COLD_BITS)
+    eng = RoundEngine(params, fcfg, lfn,
+                      lambdas=jnp.asarray(client_lambdas(fcfg)),
+                      use_kernel=False, **kw)
+    return eng, fcfg, params, key
+
+
+def _resident_bytes(n_clients: int, *, paged: bool) -> int:
+    eng, fcfg, params, key = _make_engine(n_clients, paged=paged)
+    state = eng.init_state(params, key)
+    b = eng.resident_bytes(state)
+    jax.tree_util.tree_map(lambda x: x.delete(),
+                           jax.tree_util.tree_leaves(state))
+    return int(b)
+
+
+def _fit_population(points: list, budget: int) -> dict:
+    """bytes(n) is affine in n (per-client pools + fixed hot/server cost):
+    fit on the two largest measured populations and invert at the budget."""
+    (n1, b1), (n2, b2) = points[-2], points[-1]
+    per_client = (b2 - b1) / (n2 - n1)
+    fixed = b1 - per_client * n1
+    return {
+        "bytes_per_client": per_client,
+        "fixed_bytes": fixed,
+        "max_population_at_budget": int((budget - fixed) / per_client),
+    }
+
+
+def _throughput(n_clients: int, rounds: int, chunk: int, *,
+                paged: bool, reps: int = 2) -> dict:
+    """rounds/sec of the device data plane: resident corpus, one
+    ``run_device`` dispatch per chunk (the PR-5 trainer loop)."""
+    eng, fcfg, params, key = _make_engine(n_clients, paged=paged)
+    rng = np.random.default_rng(0)
+    n_rows = 8192
+    x = rng.normal(0, 1, (n_rows, D_IN)).astype(np.float32)
+    y = rng.integers(0, N_CLASSES, n_rows).astype(np.int32)
+    per = n_rows // n_clients
+    parts = [rng.choice(n_rows, max(int(per * rng.uniform(0.5, 1.5)), B),
+                        replace=False)
+             for _ in range(n_clients)]
+    corpus = make_classification_corpus(x, y, parts, B)
+    state = eng.init_state(params, key)
+    state, m = eng.run_device(state, corpus, chunk)        # compile
+    np.asarray(m["loss"])
+    best = float("inf")
+    for _ in range(reps):
+        state = eng.init_state(params, key)
+        t0 = time.perf_counter()
+        for _ in range(rounds // chunk):
+            state, m = eng.run_device(state, corpus, chunk)
+            np.asarray(m["loss"])
+        jax.block_until_ready(state.server)
+        best = min(best, time.perf_counter() - t0)
+    return {"seconds": best, "rounds_per_sec": rounds / best}
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        n = 4096
+        dense_b = _resident_bytes(n, paged=False)
+        paged_b = _resident_bytes(n, paged=True)
+        rows = {
+            "config": {"n_clients": n, "s_max": S_MAX,
+                       "cold_bits": COLD_BITS},
+            "dense_bytes": dense_b, "paged_bytes": paged_b,
+            "ratio": dense_b / paged_b,
+            "note": "CI smoke gate: paged EngineState must be strictly "
+                    "smaller than dense at n = 4096.",
+        }
+        save_artifact("paged_state_smoke", rows)
+        return rows
+
+    populations = [1_000, 10_000, 100_000]
+    residency = []
+    for n in populations:
+        dense_b = _resident_bytes(n, paged=False)
+        paged_b = _resident_bytes(n, paged=True)
+        residency.append({"n_clients": n, "dense_bytes": dense_b,
+                          "paged_bytes": paged_b,
+                          "ratio": dense_b / paged_b})
+    dense_fit = _fit_population(
+        [(r["n_clients"], r["dense_bytes"]) for r in residency], BUDGET_BYTES)
+    paged_fit = _fit_population(
+        [(r["n_clients"], r["paged_bytes"]) for r in residency], BUDGET_BYTES)
+    pop_ratio = (paged_fit["max_population_at_budget"]
+                 / dense_fit["max_population_at_budget"])
+
+    rounds = 64 if quick else 256
+    t_dense = _throughput(1024, rounds, 32, paged=False)
+    t_paged = _throughput(1024, rounds, 32, paged=True)
+    rel = t_paged["rounds_per_sec"] / t_dense["rounds_per_sec"]
+
+    rows = {
+        "config": {"d_in": D_IN, "d_hidden": D_HIDDEN, "K": K, "batch": B,
+                   "s_max": S_MAX, "cold_bits": COLD_BITS,
+                   "budget_bytes": BUDGET_BYTES,
+                   "model": "classifier MLP under core.round_engine."
+                            "RoundEngine (jnp oracle path, CPU)"},
+        "residency_sweep": residency,
+        "max_population_at_fixed_memory": {
+            "dense": dense_fit, "paged": paged_fit,
+            "population_ratio_paged_vs_dense": pop_ratio,
+        },
+        "throughput_n1024_chunk32": {
+            "rounds": rounds,
+            "dense": t_dense, "paged": t_paged,
+            "paged_over_dense": rel,
+        },
+        "note": "residency = measured EngineState bytes (hot stacks + LUQ "
+                "cold pools + bookkeeping) at init; max population inverts "
+                "the affine bytes(n) fit at a 16 GiB budget. throughput = "
+                "device-plane rounds/sec, one run_device dispatch per "
+                "32-round chunk. Acceptance: population ratio >= 4x with "
+                "paged/dense rounds/sec >= 0.75x.",
+    }
+    save_artifact("paged_state", rows)
+    with open(os.path.join(ROOT, "BENCH_paged_state.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv
+    rows = run(quick="--full" not in sys.argv, smoke=smoke)
+    if smoke:
+        r = rows["ratio"]
+        if rows["paged_bytes"] >= rows["dense_bytes"]:
+            print(f"FAIL: paged state {rows['paged_bytes']} B >= dense "
+                  f"{rows['dense_bytes']} B at n={rows['config']['n_clients']}")
+            return 1
+        print(f"smoke OK: paged {rows['paged_bytes']} B vs dense "
+              f"{rows['dense_bytes']} B ({r:.2f}x smaller) at n=4096")
+        return 0
+    for r in rows["residency_sweep"]:
+        print(f"n={r['n_clients']:7d} | dense {r['dense_bytes']:>12,} B | "
+              f"paged {r['paged_bytes']:>12,} B | {r['ratio']:.2f}x")
+    pop = rows["max_population_at_fixed_memory"]
+    print(f"max population @16GiB: dense "
+          f"{pop['dense']['max_population_at_budget']:,} | paged "
+          f"{pop['paged']['max_population_at_budget']:,} "
+          f"({pop['population_ratio_paged_vs_dense']:.1f}x)")
+    t = rows["throughput_n1024_chunk32"]
+    print(f"rounds/sec n=1024 chunk=32: dense "
+          f"{t['dense']['rounds_per_sec']:.1f} | paged "
+          f"{t['paged']['rounds_per_sec']:.1f} "
+          f"({t['paged_over_dense']:.2f}x)")
+    ok = (pop["population_ratio_paged_vs_dense"] >= 4.0
+          and t["paged_over_dense"] >= 0.75)
+    if not ok:
+        print("FAIL: acceptance targets missed (need >= 4x population and "
+              ">= 0.75x rounds/sec)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

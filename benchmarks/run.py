@@ -3,7 +3,12 @@
 the roofline/kernel harnesses. ``--full`` runs paper-scale FL simulations
 (slow); the default quick mode keeps CPU CI in minutes.
 
-  PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only NAME]
+
+``--smoke`` asks each benchmark that supports it (data_plane_bench,
+paged_state_bench) for its cheapest defensible check; smoke artifacts go
+to ``*_smoke.json`` and never overwrite the canonical files. Benchmarks
+without a smoke path just run their quick mode.
 """
 from __future__ import annotations
 
@@ -15,19 +20,25 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--only", default=None)
     args, _ = ap.parse_known_args()
     quick = not args.full
+    smoke = args.smoke
 
     from benchmarks import (fl_paper, theory_table, kernel_bench,
                             roofline_table, ablation_reweight,
-                            round_loop_bench, data_plane_bench)
+                            round_loop_bench, data_plane_bench,
+                            paged_state_bench)
 
     suite = [
         ("table1_theory", lambda: theory_table.run(quick)),
         ("kernel_bench", lambda: kernel_bench.run(quick)),
         ("round_loop_bench", lambda: round_loop_bench.run(quick)),
-        ("data_plane_bench", lambda: data_plane_bench.run(quick)),
+        ("data_plane_bench", lambda: data_plane_bench.run(quick,
+                                                          smoke=smoke)),
+        ("paged_state_bench", lambda: paged_state_bench.run(quick,
+                                                            smoke=smoke)),
         ("roofline_table", lambda: roofline_table.run(quick)),
         ("fig1_table2_mnist", lambda: fl_paper.fig1_table2(quick)),
         ("fig2_stragglers_1of9fast", lambda: fl_paper.fig2_stragglers(quick)),
@@ -76,6 +87,13 @@ def _derive(name: str, out) -> str:
             return (f"host={r['host_v1']['rounds_per_sec']:.0f}r/s"
                     f";device={r['device']['rounds_per_sec']:.0f}r/s"
                     f";x{r['device']['speedup_vs_host_v1']:.2f}")
+        if name == "paged_state_bench":
+            if "ratio" in out:                       # --smoke shape
+                return f"smoke_bytes_ratio=x{out['ratio']:.2f}"
+            pop = out["max_population_at_fixed_memory"]
+            t = out["throughput_n1024_chunk32"]
+            return (f"pop=x{pop['population_ratio_paged_vs_dense']:.1f}"
+                    f";rps=x{t['paged_over_dense']:.2f}")
         if name == "ablation_reweight":
             return ";".join(
                 f"{k}={v['final_mean']:.3f}/rec{v['slow_class_recall']:.3f}"

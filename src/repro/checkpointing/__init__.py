@@ -1,1 +1,4 @@
-from repro.checkpointing.ckpt import save_checkpoint, load_checkpoint, latest_checkpoint
+from repro.checkpointing.ckpt import (save_checkpoint, load_checkpoint,
+                                      latest_checkpoint,
+                                      save_engine_checkpoint,
+                                      load_engine_checkpoint)

@@ -58,6 +58,72 @@ def load_checkpoint(path: str, reference: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+_META_KEY = "__engine_dtypes__"
+
+
+def save_engine_checkpoint(directory: str, step: int, state: Any) -> str:
+    """Save a ``core.round_engine.EngineState`` — hot flat buffers,
+    counters, staleness, the rng KEY CHAIN, and (paged states) the hot-id
+    vector plus the codec-encoded cold pools (packed uint8 codes and f32
+    scales serialize natively).
+
+    Rides the generic '/'-joined-path npz layout of :func:`save_checkpoint`
+    but additionally records every leaf's ORIGINAL dtype under
+    ``__engine_dtypes__``, so :func:`load_engine_checkpoint` can tell a
+    genuinely-f32 buffer from a losslessly widened bf16 one and refuse a
+    silently-casting restore. Round-trip is exact to the bit for every
+    dtype the engine stores (tests/test_paged_engine.py)."""
+    os.makedirs(directory, exist_ok=True)
+    flat, meta = {}, []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = _path_str(path)
+        arr = np.asarray(jax.device_get(leaf))
+        meta.append(f"{key}:{arr.dtype.name}")
+        if arr.dtype.name == "bfloat16":
+            arr = arr.astype(np.float32)   # lossless widening
+        flat[key] = arr
+    flat[_META_KEY] = np.array(meta)
+    final = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **flat)
+    os.replace(tmp, final)
+    return final
+
+
+def load_engine_checkpoint(path: str, state_template: Any) -> Any:
+    """Restore an ``EngineState`` into ``state_template``'s structure.
+
+    Stricter than :func:`load_checkpoint`: besides shapes, leaf DTYPES are
+    validated against the recorded originals — restoring a bf16 engine's
+    checkpoint into an f32 engine (or a 4-bit cold pool into an 8-bit one)
+    raises instead of silently casting. Checkpoints written by the generic
+    :func:`save_checkpoint` (no dtype record) still load, dtype-unchecked,
+    so pre-existing run directories keep restoring."""
+    with np.load(path) as data:
+        recorded = {}
+        if _META_KEY in data:
+            for item in data[_META_KEY]:
+                k, _, dt = str(item).rpartition(":")
+                recorded[k] = dt
+        paths, treedef = jax.tree_util.tree_flatten_with_path(state_template)
+        leaves = []
+        for p, ref in paths:
+            key = _path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            want = np.dtype(ref.dtype).name
+            if recorded and recorded.get(key) != want:
+                raise ValueError(
+                    f"{key}: checkpoint dtype {recorded.get(key)} != state "
+                    f"dtype {want} (engine layout change)")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(ref.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {ref.shape}")
+            leaves.append(jax.numpy.asarray(arr).astype(ref.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def latest_checkpoint(directory: str) -> Optional[str]:
     if not os.path.isdir(directory):
         return None

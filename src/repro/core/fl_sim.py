@@ -206,13 +206,19 @@ def run_simulation(cfg: SimConfig, data, *, d_hidden: int = 128,
             alphas, the fused poll, and the q reset."""
             srv_f, cli_f, ini_f, q, credit, rkey = carry
             xs_t, ys_t = batch
+            # SELECT FIRST (docs/architecture.md §9): the round's selection
+            # is drawn before any client buffer is touched, mirroring the
+            # paged engine's select -> gather -> fused -> scatter order.
+            # The split positions are unchanged, so the streams (and every
+            # regression baseline) are bit-identical to the old
+            # train-then-select body.
+            rkey, k_sel, k_q = jax.random.split(rkey, 3)
+            mj = sampler.sample_selection(k_sel, n, cfg.s_selected)
             do, credit = sampler.credit_steps(credit, step_ticks_j, q,
                                               cfg.K, round_ticks)
             clients_t = round_engine.unflatten_stacked(spec, cli_f)
             clients_t = sgd(clients_t, xs_t, ys_t, do.astype(jnp.int32))
             q_new = q + do
-            rkey, k_sel, k_q = jax.random.split(rkey, 3)
-            mj = sampler.sample_selection(k_sel, n, cfg.s_selected)
             cli_f = round_engine._constrain_buckets(
                 spec, mesh, round_engine.flatten_stacked(spec, clients_t),
                 stacked=True)

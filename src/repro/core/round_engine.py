@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sampler, reweight
+from repro.core.paging import PassthroughCodec, make_codec
 from repro.core.quant import quantize_tree
 from repro.kernels.favas_agg import CLIENT_TILE, TILE
 from repro.kernels.ops import favas_fused_flat
@@ -99,6 +100,13 @@ class FlatSpec:
     bucket_shard_sizes: tuple = ()   # per bucket, unpadded elements PER SHARD
     bucket_shard_padded: tuple = ()  # per bucket, padded elements PER SHARD
     mesh_axis: Optional[str] = None  # mesh axis sharded buckets live on
+    # residency axis (docs/architecture.md §9): "dense" keeps all n client
+    # rows in full precision; "paged" keeps a hot working set of s_max rows
+    # plus a codec-encoded cold pool covering all n clients
+    residency: str = "dense"
+    s_max: Optional[int] = None        # hot rows (logical), paged specs only
+    s_hot_padded: Optional[int] = None  # hot rows incl. client-tile padding
+    cold_codec: Any = None             # hashable codec (core.paging)
 
     @property
     def n_buckets(self) -> int:
@@ -108,11 +116,28 @@ class FlatSpec:
         """Model shard count of bucket ``b`` (1 for pre-sharding specs)."""
         return self.bucket_shards[b] if self.bucket_shards else 1
 
+    @property
+    def paged(self) -> bool:
+        return self.residency == "paged"
+
+    @property
+    def stacked_logical(self) -> Optional[int]:
+        """Logical rows of the client/init stacks the state carries: the hot
+        working set for paged specs, all clients for dense ones."""
+        return self.s_max if self.paged else self.n_clients
+
+    @property
+    def stacked_rows(self) -> Optional[int]:
+        """Stored rows of the client/init stacks (incl. client-tile pad)."""
+        return self.s_hot_padded if self.paged else self.n_padded
+
 
 def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
                    client_tile: int = CLIENT_TILE, mesh=None,
                    shard_axes: Optional[Sequence] = None,
-                   model_shards: Optional[int] = None) -> FlatSpec:
+                   model_shards: Optional[int] = None,
+                   residency: str = "dense", s_max: Optional[int] = None,
+                   cold_codec=None) -> FlatSpec:
     """Build the layout from a pytree of arrays / ShapeDtypeStructs.
 
     ``n_clients``: make the spec client-aware (see class docstring). Row
@@ -127,7 +152,15 @@ def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
     the shard count (needed when passing ``shard_axes`` without a mesh —
     layout is pure metadata and never touches devices). A leaf whose
     nominated dim does not divide by the shard count falls back to the
-    replicated bucket, mirroring ``sharding.rules.check_divisible``."""
+    replicated bucket, mirroring ``sharding.rules.check_divisible``.
+
+    ``residency="paged"``: virtualize the client axis (docs/architecture.md
+    §9) — the state's stacks hold only ``s_max`` hot rows (padded with the
+    same client-tile formula as the dense n), and a ``cold_codec``-encoded
+    pool covers all n clients. ``s_max`` defaults to (and is clamped at)
+    ``n_clients``; at ``s_max == n_clients`` the hot set is the whole
+    id-ordered population and the paged round is bit-exact with the dense
+    one. ``cold_codec`` defaults to the passthrough (identity) codec."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     S0 = model_shards or 1
     if mesh is not None and model_shards is None:
@@ -171,6 +204,20 @@ def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
     if n_clients is not None:
         n_padded = (n_clients if n_clients <= client_tile
                     else n_clients + ((-n_clients) % client_tile))
+    s_hot_padded = None
+    if residency == "paged":
+        if n_clients is None:
+            raise ValueError("residency='paged' requires n_clients")
+        s_max = n_clients if s_max is None else min(int(s_max), n_clients)
+        if s_max < 1:
+            raise ValueError(f"s_max must be >= 1 (got {s_max})")
+        # same padding formula as the dense client axis, so at s_max == n
+        # the hot stacks have exactly the dense shapes (the parity regime)
+        s_hot_padded = (s_max if s_max <= client_tile
+                        else s_max + ((-s_max) % client_tile))
+        cold_codec = cold_codec if cold_codec is not None else PassthroughCodec()
+    else:
+        s_max, cold_codec = None, None
     return FlatSpec(treedef=treedef, shapes=tuple(shapes), dtypes=tuple(dtypes),
                     bucket_of=tuple(bucket_of), offsets=tuple(offsets),
                     bucket_dtypes=tuple(bucket_dtypes),
@@ -181,7 +228,9 @@ def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
                     bucket_shards=tuple(shards_l),
                     bucket_shard_sizes=tuple(cursors),
                     bucket_shard_padded=shard_padded,
-                    mesh_axis="model" if any(s > 1 for s in shards_l) else None)
+                    mesh_axis="model" if any(s > 1 for s in shards_l) else None,
+                    residency=residency, s_max=s_max,
+                    s_hot_padded=s_hot_padded, cold_codec=cold_codec)
 
 
 def flatten_tree(spec: FlatSpec, tree) -> tuple:
@@ -226,14 +275,15 @@ def flatten_stacked(spec: FlatSpec, tree) -> tuple:
     leaves = jax.tree_util.tree_leaves(tree)
     n = leaves[0].shape[0]
     rpad = 0
-    if spec.n_padded is not None:
+    if spec.stacked_rows is not None:
         # loud failure instead of silently mis-padding: a client-aware spec
-        # only describes trees with exactly n_clients rows
-        if n != spec.n_clients:
+        # only describes trees with exactly stacked_logical rows (n_clients
+        # dense, the s_max hot working set paged)
+        if n != spec.stacked_logical:
             raise ValueError(
-                f"stacked tree has {n} client rows but the spec was built "
-                f"for n_clients={spec.n_clients}")
-        rpad = spec.n_padded - n
+                f"stacked tree has {n} client rows but the spec stacks "
+                f"{spec.stacked_logical} ({spec.residency})")
+        rpad = spec.stacked_rows - n
     parts = [[] for _ in range(spec.n_buckets)]
     for leaf, b, ax in zip(leaves, spec.bucket_of, spec.shard_axes):
         S = spec.shards(b)
@@ -291,13 +341,13 @@ def unflatten_stacked(spec: FlatSpec, bufs: Sequence):
                                      spec.offsets, spec.shard_axes):
         buf = bufs[b]
         n = buf.shape[0]
-        if spec.n_padded is not None:
-            if n != spec.n_padded:
+        if spec.stacked_rows is not None:
+            if n != spec.stacked_rows:
                 raise ValueError(
                     f"stacked buffer has {n} rows but the spec stores "
-                    f"n_padded={spec.n_padded}")
-            if spec.n_clients < n:
-                n = spec.n_clients
+                    f"{spec.stacked_rows} ({spec.residency})")
+            if spec.stacked_logical < n:
+                n = spec.stacked_logical
                 buf = buf[:n]
         size = 1
         for d in shape:
@@ -319,13 +369,13 @@ def pad_client_vec(spec: FlatSpec, v, fill: float = 0.0):
     """(n,) per-client vector -> (Np,) padded to the spec's stored rows.
     ``fill``: value for padded rows (0 for masks — padded rows are never
     selected; 1 for alphas — keeps the guarded division trivially exact)."""
-    if spec.n_padded is None:
+    if spec.stacked_rows is None:
         return v
-    if v.shape[0] != spec.n_clients:
+    if v.shape[0] != spec.stacked_logical:
         raise ValueError(
-            f"per-client vector has {v.shape[0]} rows but the spec was "
-            f"built for n_clients={spec.n_clients}")
-    rpad = spec.n_padded - spec.n_clients
+            f"per-client vector has {v.shape[0]} rows but the spec stacks "
+            f"{spec.stacked_logical} ({spec.residency})")
+    rpad = spec.stacked_rows - spec.stacked_logical
     if not rpad:
         return v
     return jnp.concatenate([v, jnp.full((rpad,), fill, v.dtype)])
@@ -336,11 +386,11 @@ def stack_server_rows(spec: FlatSpec, server_bufs: Sequence, n: int) -> tuple:
     broadcast to n clients plus all-zero padded rows up to the spec's stored
     row count. Each result is a DISTINCT buffer (broadcasts are materialized)
     so a donating jit never sees the same buffer twice."""
-    if spec.n_clients is not None and n != spec.n_clients:
+    if spec.stacked_logical is not None and n != spec.stacked_logical:
         raise ValueError(
-            f"stacking {n} client rows but the spec was built for "
-            f"n_clients={spec.n_clients}")
-    rows = spec.n_padded or n
+            f"stacking {n} client rows but the spec stacks "
+            f"{spec.stacked_logical} ({spec.residency})")
+    rows = spec.stacked_rows or n
     out = []
     for b in server_bufs:
         buf = jnp.broadcast_to(b[None], (n,) + b.shape)
@@ -378,8 +428,22 @@ def engine_sharding(spec: FlatSpec, mesh):
                 for p in bucket_partition_specs(spec, stacked=False))
     stk = tuple(NamedSharding(mesh, p)
                 for p in bucket_partition_specs(spec, stacked=True))
+    hot_ids, cold = None, None
+    if spec.paged:
+        hot_ids = rep
+        # cold pools shard exactly like the dense stacked buckets (§6): the
+        # encoded lane axis (packed codes / per-shard scales) splits on the
+        # model axis, the client-id row axis replicates
+        cold = tuple(
+            jax.tree_util.tree_map(
+                lambda p: NamedSharding(mesh, p),
+                spec.cold_codec.partition_specs(
+                    spec.shards(b) > 1, spec.mesh_axis or "model"),
+                is_leaf=lambda x: isinstance(x, P))
+            for b in range(spec.n_buckets))
     return EngineState(server=srv, clients=stk, inits=stk,
-                       counters=rep, stale=rep, key=rep, t=rep)
+                       counters=rep, stale=rep, key=rep, t=rep,
+                       hot_ids=hot_ids, cold=cold)
 
 
 def _constrain_buckets(spec: FlatSpec, mesh, bufs, *, stacked: bool) -> tuple:
@@ -394,6 +458,27 @@ def _constrain_buckets(spec: FlatSpec, mesh, bufs, *, stacked: bool) -> tuple:
         x if x is None or spec.shards(b) <= 1
         else jax.lax.with_sharding_constraint(x, NamedSharding(mesh, specs[b]))
         for b, x in enumerate(bufs))
+
+
+def _constrain_cold(spec: FlatSpec, mesh, cold) -> tuple:
+    """Pin per-bucket encoded cold pools to the §6 layout (lane axis on the
+    model mesh axis for sharded buckets). Row-axis gathers/scatters and the
+    per-shard encode reductions are then provably shard-local — the paged
+    round adds no collectives over the dense engine's."""
+    if mesh is None:
+        return tuple(cold)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    out = []
+    for b in range(spec.n_buckets):
+        if spec.shards(b) <= 1:
+            out.append(cold[b])
+            continue
+        specs = spec.cold_codec.partition_specs(True, spec.mesh_axis or "model")
+        out.append(jax.tree_util.tree_map(
+            lambda p, x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, p)),
+            specs, cold[b], is_leaf=lambda t: isinstance(t, P)))
+    return tuple(out)
 
 
 def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
@@ -466,16 +551,20 @@ def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
 @dataclasses.dataclass
 class EngineState:
     server: tuple                  # per bucket (Dp_b,)
-    clients: tuple                 # per bucket (n, Dp_b)
-    inits: tuple                   # per bucket (n, Dp_b)
+    clients: tuple                 # per bucket (rows, Dp_b) — all n rows on a
+    #                                dense spec, the s_max hot rows on paged
+    inits: tuple                   # per bucket (rows, Dp_b)
     counters: jnp.ndarray          # (n,) int32 — q^i, local steps since reset
     stale: jnp.ndarray             # (n,) int32 — rounds since last selection
     key: jnp.ndarray
     t: jnp.ndarray                 # scalar int32
+    # paged residency only (None on dense states, docs/architecture.md §9):
+    hot_ids: Any = None            # (s_max,) int32 resident client ids, sorted
+    cold: Any = None               # per bucket codec-encoded pools, n rows
 
     def tree_flatten(self):
         return ((self.server, self.clients, self.inits, self.counters,
-                 self.stale, self.key, self.t), None)
+                 self.stale, self.key, self.t, self.hot_ids, self.cold), None)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -504,8 +593,37 @@ def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
     does both)."""
     n = cfg.n_clients
     server = flatten_tree(spec, params)
-    clients = stack_server_rows(spec, server, n)
-    inits = stack_server_rows(spec, server, n)
+    hot_ids, cold = None, None
+    if spec.paged:
+        if cfg.s_selected > spec.s_max:
+            raise ValueError(
+                f"s_selected={cfg.s_selected} exceeds the hot working set "
+                f"s_max={spec.s_max}: every selected client must fit hot")
+        # hot working set: everyone starts equally fresh (stale 0), so the
+        # staleness/id order picks the s_max lowest ids — at s_max == n this
+        # is arange(n), the dense layout
+        hot_ids = jnp.arange(spec.s_max, dtype=jnp.int32)
+        clients = stack_server_rows(spec, server, spec.s_max)
+        inits = stack_server_rows(spec, server, spec.s_max)
+        # cold pools: every client is the server row with zero progress, so
+        # ONE row is encoded per bucket and broadcast to all n ids (for the
+        # LUQ codec the progress codes are exactly zero; identical per-row
+        # uniforms are harmless since the rows are identical). fold_in keeps
+        # the state's key chain untouched — bit-identical to the dense init.
+        k_cold = jax.random.fold_in(key, 0x636f6c64)
+        cold = []
+        for b in range(spec.n_buckets):
+            row = server[b][None]
+            enc1 = spec.cold_codec.encode_pair(
+                row, row, jax.random.fold_in(k_cold, b),
+                shards=spec.shards(b))
+            cold.append(jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (n,) + a.shape[1:]).copy(),
+                enc1))
+        cold = tuple(cold)
+    else:
+        clients = stack_server_rows(spec, server, n)
+        inits = stack_server_rows(spec, server, n)
     # private copy of the key: the jitted round DONATES the state, and a
     # caller-owned key array shared between two states (or reused for a
     # second init) would be deleted by the first state's first dispatch
@@ -513,7 +631,8 @@ def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
         server=server, clients=clients, inits=inits,
         counters=jnp.zeros((n,), jnp.int32),
         stale=jnp.zeros((n,), jnp.int32),
-        key=jnp.array(key, copy=True), t=jnp.zeros((), jnp.int32))
+        key=jnp.array(key, copy=True), t=jnp.zeros((), jnp.int32),
+        hot_ids=hot_ids, cold=cold)
 
 
 # ---------------------------------------------------------------------------
@@ -551,10 +670,11 @@ def _local_training(loss_fn: Callable, cfg, clients_tree, counters,
     return jax.vmap(one_client)(clients_tree, batch, counters, new_counters)
 
 
-def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
+def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
                  loss_fn: Callable, lambdas,
                  det_alpha: Optional[jnp.ndarray] = None,
-                 use_kernel: Optional[bool] = None, mesh=None):
+                 use_kernel: Optional[bool] = None, mesh=None,
+                 corpus=None, batch_key=None):
     """One FAVAS server round on flat buffers. Pure; jit/pjit this.
 
     The hot path is: unflatten clients -> vmapped local SGD -> flatten ->
@@ -579,9 +699,26 @@ def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
         buckets then run their fused pass via :func:`fused_bucket_update`
         (shard_map on the kernel path, pjit constraints on the oracle path)
         so the round never gathers a full buffer onto one device.
+      corpus / batch_key: device data plane — instead of ``batch``, a
+        resident :class:`repro.data.device_corpus.DeviceCorpus` plus the
+        round's batch key; the round samples its own minibatches (and, on a
+        paged spec, gathers corpus rows for the hot working set only).
+
+    On a ``residency="paged"`` spec the round runs the hot/cold body
+    (:func:`_paged_round`): select -> promote/evict the hot working set ->
+    gather+dequant -> fused round over the s_max hot rows -> requant+
+    scatter-back. With the passthrough codec at ``s_max == n`` it is
+    bit-exact with this dense body (tests/test_paged_engine.py).
 
     Returns ``(new_state, metrics)`` where metrics holds the live-step-
     weighted ``loss``, ``mean_steps``, ``selected`` and ``stale_rounds``."""
+    if spec.paged:
+        return _paged_round(spec, state, batch, cfg=cfg, loss_fn=loss_fn,
+                            lambdas=lambdas, det_alpha=det_alpha,
+                            use_kernel=use_kernel, mesh=mesh,
+                            corpus=corpus, batch_key=batch_key)
+    if corpus is not None:
+        batch = corpus.sample_round_batch(batch_key, cfg.R)
     n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
     key, k_inc, k_sel, k_q = jax.random.split(state.key, 4)
 
@@ -654,6 +791,189 @@ def engine_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     return new_state, metrics
 
 
+def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
+                 loss_fn: Callable, lambdas,
+                 det_alpha: Optional[jnp.ndarray] = None,
+                 use_kernel: Optional[bool] = None, mesh=None,
+                 corpus=None, batch_key=None):
+    """One FAVAS round on a paged (hot/cold) spec — docs/architecture.md §9.
+
+    Control flow inverts relative to the dense body: Gumbel top-s selection
+    runs FIRST, then the hot working set is rebuilt (promote selected cold
+    clients by gather+dequant, evict the stalest hot rows by requant+
+    scatter-back), and only the ``s_max`` hot rows see local SGD and the
+    fused aggregation+reset. Cold clients are frozen — their parameters,
+    counters and progress do not move until promotion, which is exactly the
+    dense semantics for never-selected clients once ``s_max`` covers every
+    client touched between two selections of any given id.
+
+    RNG streams: the round draws ``key, k_inc, k_sel, k_q`` from the SAME
+    four-way split as the dense body — selection's key is merely consumed
+    earlier — and all codec randomness is folded off ``k_q``, never split
+    from the chain. With the passthrough codec at ``s_max == n`` (hot stacks
+    = all clients in id order, identical shapes, identical reduction trees)
+    the round is therefore bit-exact with the dense ``engine_round``."""
+    n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
+    s_hot = spec.s_max
+    codec = spec.cold_codec
+    key, k_inc, k_sel, k_q = jax.random.split(state.key, 4)
+
+    # 1. heterogeneous progress + SELECT-FIRST
+    d = sampler.sample_increments(k_inc, lambdas)               # (n,)
+    _, m = sampler.sample_selection_indices(k_sel, n, s)        # (n,) 0/1
+    stale_new = jnp.where(m > 0, 0, state.stale + 1).astype(jnp.int32)
+
+    # 2. new hot membership: the s_max most recently selected clients.
+    # Two-key lexsort (staleness, then id) instead of a composite score —
+    # stale * n + id overflows int32 at populations this layer targets.
+    # Membership stays ascending by id, so s_max == n degenerates to
+    # arange(n), the dense row layout. Selected clients (staleness 0)
+    # always fit: engine_init enforces s <= s_max.
+    order = jnp.lexsort((jnp.arange(n, dtype=jnp.int32), stale_new))
+    members = jnp.sort(order[:s_hot]).astype(jnp.int32)
+    old_ids = state.hot_ids
+    pos_in_old = jnp.clip(jnp.searchsorted(old_ids, members), 0, s_hot - 1)
+    was_hot = old_ids[pos_in_old] == members                    # (s_max,)
+    pos_in_new = jnp.clip(jnp.searchsorted(members, old_ids), 0, s_hot - 1)
+    evicted = members[pos_in_new] != old_ids                    # (s_max,)
+
+    # 3. evict: requant the rows leaving the hot set into the cold pools.
+    # Membership churn is bounded by s_selected — only a client selected
+    # THIS round can enter the hot set (staleness order among unselected
+    # clients is preserved round to round), and the hot set has fixed size,
+    # so at most s rows leave and at most s rows are promoted. The codec
+    # therefore touches s_churn = min(s, s_max) rows, not the whole working
+    # set. nonzero() pads the churn index vectors with out-of-range
+    # positions; pad entries are routed to a row that is NOT churning this
+    # round and write back its current value, so duplicate scatter indices
+    # always carry identical values — deterministic, and a bit-exact no-op
+    # in the s_max == n parity regime where nothing ever churns.
+    s_churn = min(s, s_hot)
+
+    def _churn_positions(flags):
+        pos = jnp.nonzero(flags, size=s_churn, fill_value=s_hot)[0]
+        valid = pos < s_hot
+        safe = jnp.argmin(flags).astype(pos.dtype)  # first non-churning row
+        return jnp.where(valid, jnp.minimum(pos, s_hot - 1), safe), valid
+
+    evict_pos, evict_valid = _churn_positions(evicted)
+    promo_pos, promo_valid = _churn_positions(~was_hot)
+
+    # Unique sorted scatter ids + donation => in-place read-modify-write;
+    # non-evicted clients' cold bytes are untouched. The encode key is
+    # FOLDED off k_q (not split), leaving the dense key chain intact.
+    k_evict = jax.random.fold_in(k_q, 1)
+    evict_ids = old_ids[evict_pos]
+    cold = []
+    for b in range(spec.n_buckets):
+        enc = codec.encode_pair(
+            state.clients[b][evict_pos], state.inits[b][evict_pos],
+            jax.random.fold_in(k_evict, b), shards=spec.shards(b))
+
+        def scatter(pool, e):
+            sel = evict_valid.reshape((-1,) + (1,) * (e.ndim - 1))
+            return pool.at[evict_ids].set(
+                jnp.where(sel, e.astype(pool.dtype), pool[evict_ids]))
+
+        cold.append(jax.tree_util.tree_map(scatter, state.cold[b], enc))
+    cold = _constrain_cold(spec, mesh, cold)
+
+    # 4. promote: gather + dequant ONLY the rows entering the hot set. Rows
+    # that never went cold keep their full-precision buffers — surviving
+    # hot clients pay NO requant round-trip.
+    rpad = spec.stacked_rows - s_hot
+    promo_ids = members[promo_pos]
+    clients_hot, inits_hot = [], []
+    for b in range(spec.n_buckets):
+        dt = jnp.dtype(spec.bucket_dtypes[b])
+        enc_rows = jax.tree_util.tree_map(lambda p: p[promo_ids], cold[b])
+        dec_cli, dec_ini = codec.decode_pair(enc_rows, dt,
+                                             shards=spec.shards(b))
+        base_cli = state.clients[b][pos_in_old]
+        base_ini = state.inits[b][pos_in_old]
+        sel = promo_valid[:, None]
+        cli = base_cli.at[promo_pos].set(
+            jnp.where(sel, dec_cli, base_cli[promo_pos]))
+        ini = base_ini.at[promo_pos].set(
+            jnp.where(sel, dec_ini, base_ini[promo_pos]))
+        if rpad:
+            cli = jnp.pad(cli, ((0, rpad), (0, 0)))
+            ini = jnp.pad(ini, ((0, rpad), (0, 0)))
+        clients_hot.append(cli)
+        inits_hot.append(ini)
+    clients_hot = _constrain_buckets(spec, mesh, clients_hot, stacked=True)
+    inits_hot = _constrain_buckets(spec, mesh, inits_hot, stacked=True)
+
+    # 5. hot-set bookkeeping + batch rows (the credit clock advances for
+    # hot clients only — cold clients are frozen, not merely unselected)
+    q0 = state.counters[members]
+    q1 = jnp.minimum(q0 + d[members], K)
+    m_hot = m[members]
+    if corpus is not None:
+        batch = corpus.sample_round_batch(batch_key, cfg.R, ids=members)
+    else:
+        batch = tree_map(lambda x: x[members], batch)
+
+    # 6. masked local SGD over the hot rows only
+    clients_tree = unflatten_stacked(spec, clients_hot)
+    trained_tree, loss_sum, live = _local_training(
+        loss_fn, cfg, clients_tree, q0, q1, batch)
+
+    # 7. eq. (3) coefficients + optional FAVAS[QNN] transmitted progress,
+    # all in hot space (at s_max == n these are the dense expressions,
+    # k_q included)
+    if cfg.reweight == "deterministic":
+        alpha = det_alpha[members]
+    else:
+        alpha = reweight.alpha_stochastic(q1, p_pos=1.0)
+    progress = (None,) * spec.n_buckets
+    if cfg.quant_bits > 0:
+        inits_tree = unflatten_stacked(spec, inits_hot)
+        prog = quantize_tree(tree_map(jnp.subtract, trained_tree, inits_tree),
+                             cfg.quant_bits, k_q)
+        progress = _constrain_buckets(spec, mesh, flatten_stacked(spec, prog),
+                                      stacked=True)
+    trained = _constrain_buckets(spec, mesh,
+                                 flatten_stacked(spec, trained_tree),
+                                 stacked=True)
+
+    # 8. fused aggregation + selected-client reset over the hot stacks
+    alpha_p = pad_client_vec(spec, alpha, 1.0)
+    m_p = pad_client_vec(spec, m_hot, 0.0)
+    server_new, clients_new, inits_new = [], [], []
+    for b in range(spec.n_buckets):
+        srv, cli, ini = fused_bucket_update(
+            spec, b, state.server[b], trained[b], inits_hot[b], alpha_p,
+            m_p, float(s), progress_b=progress[b], n_logical=s_hot,
+            mesh=mesh, use_kernel=use_kernel)
+        server_new.append(srv)
+        clients_new.append(cli)
+        inits_new.append(ini)
+
+    # 9. scatter the hot counter updates back into the full-n view
+    counters_new = state.counters.at[members].set(
+        jnp.where(m_hot > 0, 0, q1).astype(jnp.int32))
+
+    new_state = EngineState(server=tuple(server_new),
+                            clients=tuple(clients_new),
+                            inits=tuple(inits_new),
+                            counters=counters_new, stale=stale_new,
+                            key=key, t=state.t + 1,
+                            hot_ids=members, cold=cold)
+    total_live = jnp.sum(live)
+    metrics = {
+        # live-step-weighted over the SELECTED HOT SET only: frozen cold
+        # clients run zero live steps and contribute nothing — paging must
+        # not reintroduce the zero-live-step masking bug (ROADMAP notes;
+        # regression-pinned in tests/test_paged_engine.py)
+        "loss": jnp.sum(loss_sum) / jnp.maximum(total_live, 1.0),
+        "mean_steps": jnp.mean(q1.astype(jnp.float32)),
+        "selected": jnp.sum(m),
+        "stale_rounds": jnp.max(stale_new).astype(jnp.float32),
+    }
+    return new_state, metrics
+
+
 def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
                        cfg, loss_fn: Callable, lambdas,
                        det_alpha: Optional[jnp.ndarray] = None,
@@ -704,10 +1024,13 @@ def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
         def body_c(st, _):
             key, k_batch = jax.random.split(st.key)
             st = dataclasses.replace(st, key=key)
-            batch = corpus.sample_round_batch(k_batch, cfg.R)
-            return engine_round(spec, st, batch, cfg=cfg, loss_fn=loss_fn,
+            # sampling happens INSIDE engine_round (same key, same draws as
+            # sampling here): a paged spec must select its hot working set
+            # before it knows which corpus rows to gather
+            return engine_round(spec, st, None, cfg=cfg, loss_fn=loss_fn,
                                 lambdas=lambdas, det_alpha=det_alpha,
-                                use_kernel=use_kernel, mesh=mesh)
+                                use_kernel=use_kernel, mesh=mesh,
+                                corpus=corpus, batch_key=k_batch)
         return jax.lax.scan(body_c, state, None, length=n_rounds)
 
     def body(st, batch):
@@ -726,13 +1049,28 @@ def engine_variance(state: EngineState) -> jnp.ndarray:
     """sum_i ||w^i - w_t||^2 straight off the flat buffers. Padded lane
     tails are identical between clients and server (zero contribution);
     padded client ROWS are all-zero, not copies of the server, so they are
-    sliced off (the counters carry the logical n)."""
-    n = state.counters.shape[0]
+    sliced off (the counters carry the logical n).
+
+    On a paged state the sum runs over the HOT WORKING SET only — the rows
+    that actually trained. Decoding the cold pool here would charge frozen
+    clients' (possibly quantized) drift to a live-progress metric and
+    reintroduce the zero-live-step averaging bug at the variance level; at
+    ``s_max == n`` the hot set is everyone and this is the dense value."""
+    rows = (state.counters.shape[0] if state.hot_ids is None
+            else state.hot_ids.shape[0])
     tot = jnp.zeros((), jnp.float32)
     for srv, cli in zip(state.server, state.clients):
-        diff = cli[:n].astype(jnp.float32) - srv[None].astype(jnp.float32)
+        diff = cli[:rows].astype(jnp.float32) - srv[None].astype(jnp.float32)
         tot = tot + jnp.sum(jnp.square(diff))
     return tot
+
+
+def engine_resident_bytes(state: EngineState) -> int:
+    """Actual bytes of every array in the state (hot stacks + cold pools +
+    bookkeeping) — what the paged-vs-dense residency bench and the CI
+    resident-bytes gate measure. Host-side accounting; not jittable."""
+    return sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree_util.tree_leaves(state))
 
 
 # ---------------------------------------------------------------------------
@@ -751,12 +1089,17 @@ class RoundEngine:
 
     def __init__(self, params_template, cfg, loss_fn: Callable, *,
                  lambdas=None, det_alpha=None, use_kernel: Optional[bool] = None,
-                 client_tile: int = CLIENT_TILE, mesh=None):
+                 client_tile: int = CLIENT_TILE, mesh=None,
+                 residency: str = "dense", s_max: Optional[int] = None,
+                 cold_bits: int = 0):
         from repro.core.favas import client_lambdas  # cycle-free at call time
         self.cfg = cfg
         self.mesh = mesh
+        codec = make_codec(cold_bits) if residency == "paged" else None
         self.spec = make_flat_spec(params_template, n_clients=cfg.n_clients,
-                                   client_tile=client_tile, mesh=mesh)
+                                   client_tile=client_tile, mesh=mesh,
+                                   residency=residency, s_max=s_max,
+                                   cold_codec=codec)
         self.loss_fn = loss_fn
         self.lambdas = (jnp.asarray(lambdas) if lambdas is not None
                         else jnp.asarray(client_lambdas(cfg)))
@@ -832,3 +1175,6 @@ class RoundEngine:
 
     def variance(self, state: EngineState) -> jnp.ndarray:
         return engine_variance(state)
+
+    def resident_bytes(self, state: EngineState) -> int:
+        return engine_resident_bytes(state)

@@ -129,19 +129,30 @@ class DeviceCorpus:
         v = self.lengths if self.kind == "classification" else self.lo
         return v.shape[0]
 
-    def sample_round_batch(self, key, n_steps: int) -> Dict:
+    def sample_round_batch(self, key, n_steps: int, ids=None) -> Dict:
         """Draw one round's per-client microbatches ON DEVICE (jit/scan
         safe). Returns the same batch pytree the host plane ships:
         ``{"x": (n, R, B, d), "y": (n, R, B)}`` for classification,
-        ``{"tokens": (n, R, B, S)}`` for LM."""
+        ``{"tokens": (n, R, B, S)}`` for LM.
+
+        ``ids``: optional (s,) int32 client ids — return only those
+        clients' rows (leading axis s), for the paged engine's hot working
+        set. The index draw always covers ALL n clients so the PRNG stream
+        is identical to the dense call; only the corpus DATA gather is
+        restricted to ``ids`` (with ``ids == arange(n)`` the result is the
+        full batch, value-for-value)."""
         if self.kind == "classification":
             j = sample_partition_indices(key, self.lengths, n_steps,
                                          self.batch)
             n = self.lengths.shape[0]
-            rows = self.idx[jnp.arange(n)[:, None, None], j]
+            cids = jnp.arange(n) if ids is None else ids
+            rows = self.idx[cids[:, None, None], j[cids]]
             return {"x": self.x[rows], "y": self.y[rows]}
         u = jax.random.uniform(key, (self.lo.shape[0], n_steps, self.batch))
-        starts = self.lo[:, None, None] + uniform_to_indices(u, self.span)
+        lo, span = self.lo, self.span
+        if ids is not None:
+            u, lo, span = u[ids], lo[ids], span[ids]
+        starts = lo[:, None, None] + uniform_to_indices(u, span)
         return {"tokens": self.tokens[starts[..., None]
                                       + jnp.arange(self.seq)]}
 

@@ -94,6 +94,35 @@ def favas_aggregate_tree(server_tree, clients_tree, inits_tree, alpha, mask,
     return jax.tree_util.tree_map(one, server_tree, clients_tree, inits_tree)
 
 
+def cold_requant_rows(x, bits: int, key, *, shards: int = 1,
+                      use_kernel=None):
+    """Paged-engine EVICTION path: LUQ-encode (rows, D) hot rows into
+    bit-packed cold-pool codes + per-(row, shard) scales (see
+    ``core.paging.luq_encode_rows`` for the math — the same stochastic
+    prune/round as ``luq_pallas``/``luq_ref``, emitting codes instead of
+    dequantized floats).
+
+    ``use_kernel`` mirrors the fused-aggregation dispatch knob: the Pallas
+    LUQ kernel produces dequantized values, not packed codes, so BOTH
+    settings currently run the jnp expression — on the hot path it sits
+    directly before the cold-pool scatter and XLA fuses the pack into the
+    scatter's producer. A code-emitting Pallas kernel can slot in here
+    without touching the engine."""
+    del use_kernel
+    from repro.core.paging import luq_encode_rows   # lazy: no import cycle
+    return luq_encode_rows(x, bits, key, shards=shards)
+
+
+def cold_dequant_rows(enc, bits: int, dtype, *, shards: int = 1,
+                      use_kernel=None):
+    """Paged-engine PROMOTION path: decode cold-pool rows gathered for the
+    new hot working set back to (rows, D) in ``dtype``. Inverse of
+    :func:`cold_requant_rows`; fused by XLA into the gather's consumer."""
+    del use_kernel
+    from repro.core.paging import luq_decode_rows   # lazy: no import cycle
+    return luq_decode_rows(enc, bits, dtype, shards=shards)
+
+
 def luq_quantize(x, bits: int, key, *, use_kernel: bool = True):
     """LUQ quantization with explicit PRNG key (kernel or oracle path)."""
     # lazy: core.__init__ transitively imports this module

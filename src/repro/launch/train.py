@@ -34,7 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpointing import save_checkpoint, latest_checkpoint, load_checkpoint
+from repro.checkpointing import (save_engine_checkpoint, latest_checkpoint,
+                                 load_engine_checkpoint)
 from repro.configs import get_config, get_reduced_config
 from repro.core import FavasConfig, RoundEngine, client_lambdas
 from repro.data import make_lm_corpus
@@ -74,6 +75,24 @@ def build_cli():
                          "inside the on-device scan — zero host batch work "
                          "per round (docs/architecture.md §8; jax-PRNG "
                          "stream, statistically equivalent to host)")
+    ap.add_argument("--residency", default="dense",
+                    choices=["dense", "paged"],
+                    help="client-state residency (docs/architecture.md §9): "
+                         "dense keeps all n clients' full-precision (n, D) "
+                         "buffers resident; paged keeps a hot working set "
+                         "of --s-max rows plus a --cold-bits-encoded cold "
+                         "pool covering all n clients — resident bytes drop "
+                         "from O(n*D*4) to O(n*D*bits/8 + s_max*D*4)")
+    ap.add_argument("--s-max", type=int, default=None,
+                    help="hot working-set size for --residency paged "
+                         "(default: n-clients, which is bit-exact with "
+                         "dense when --cold-bits 0). Must be >= --s")
+    ap.add_argument("--cold-bits", type=int, default=0,
+                    choices=[0, 2, 4, 8],
+                    help="cold-pool LUQ width for --residency paged: 0 = "
+                         "passthrough (full precision, bit-exact parity "
+                         "tool), 2/4/8 = bit-packed LUQ codes + per-(row, "
+                         "shard) scales (kernels/luq.py math)")
     ap.add_argument("--use-kernel", default="auto",
                     choices=["auto", "on", "off"],
                     help="fused Pallas aggregation kernel: auto = TPU only "
@@ -120,7 +139,11 @@ def run(args):
               f"({model_axis_size(mesh)}-way model sharding of the engine)")
     engine = RoundEngine(params, fcfg, lfn, lambdas=lambdas,
                          det_alpha=det_alpha, use_kernel=use_kernel,
-                         mesh=mesh)
+                         mesh=mesh, residency=args.residency,
+                         s_max=args.s_max, cold_bits=args.cold_bits)
+    if args.residency == "paged":
+        print(f"residency: paged (s_max={engine.spec.s_max} hot rows, "
+              f"cold codec {engine.spec.cold_codec})")
     state = engine.init_state(params, key)
     del params  # the flat buffers are now the authoritative copy
 
@@ -129,7 +152,7 @@ def run(args):
         if ck:
             print(f"restoring {ck}")
             try:
-                state = load_checkpoint(ck, state)
+                state = load_engine_checkpoint(ck, state)
             except (KeyError, ValueError) as e:
                 raise SystemExit(
                     f"checkpoint {ck} does not match the flat-buffer "
@@ -234,7 +257,7 @@ def run(args):
                 # one snapshot per chunk (mid-chunk state never exists on
                 # the host); keep the cadence anchored to --ckpt-every
                 # multiples even when a chunk crosses several boundaries
-                save_checkpoint(args.ckpt_dir, rounds_done, state)
+                save_engine_checkpoint(args.ckpt_dir, rounds_done, state)
                 while next_ckpt <= rounds_done:
                     next_ckpt += args.ckpt_every
     finally:

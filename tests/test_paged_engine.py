@@ -1,0 +1,417 @@
+"""Paged client state: the hot/cold residency layer (docs/architecture.md §9).
+
+* **parity lattice** — with the passthrough codec at ``s_max == n`` the
+  paged engine is BIT-EXACT with the dense engine: same states, same
+  counters, same key chain, same (T,)-stacked metrics, across
+  n in {7, 257} x {fp32, bf16} x {plain, quant_bits=4}, on both data
+  planes (host batches and the resident device corpus). The paged body
+  consumes ``k_sel`` before the gather instead of after local SGD, but the
+  four-way split is unchanged, so the RNG streams coincide; at s_max == n
+  the hot stacks use the dense row layout and padded shape, so every fp32
+  reduction tree coincides too. (The forced-8-device mesh variant lives in
+  tests/test_sharded_engine.py.)
+* **residency invariants at s_max < n** — cold clients are FROZEN: their
+  counters and cold-pool bytes do not move until promotion; every selected
+  client is hot; hot_ids stay sorted/unique; evict -> promote under the
+  passthrough codec is the identity.
+* **metrics guard** — loss is live-step-weighted over the SELECTED HOT SET
+  only, and ``engine_variance`` sums over hot rows only: a client at the
+  counter cap contributes zero weight (not a dragged-down mean), and a
+  round where nobody steps yields 0.0, not NaN — the zero-live-step
+  masking regression.
+* **checkpointing** — ``save_engine_checkpoint`` / ``load_engine_checkpoint``
+  round-trip a paged EngineState (hot stacks, cold pools, hot_ids, rng key
+  chain) to bit-equality, and refuse dtype-mismatched restores.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import load_engine_checkpoint, save_engine_checkpoint
+from repro.core import round_engine
+from repro.core.favas import FavasConfig, client_lambdas
+from repro.data.device_corpus import make_classification_corpus
+from repro.models.classifier import classifier_loss, mlp_apply, mlp_init
+
+
+def _params(dtype):
+    """Tiny mixed-bucket pytree (one leaf stays f32 when dtype is bf16)."""
+    w = jnp.asarray(np.linspace(-1.0, 1.0, 48).reshape(8, 6), dtype)
+    b = jnp.asarray(np.linspace(0.5, 1.5, 5), jnp.float32)
+    return {"w": w, "b": b}
+
+
+def _loss(p, batch):
+    return sum(jnp.mean((l.astype(jnp.float32) - batch["t"]) ** 2)
+               for l in jax.tree_util.tree_leaves(p))
+
+
+def _batches(fcfg, T, seed=0):
+    vals = np.linspace(0.0, 1.0, T * fcfg.n_clients * fcfg.R) + 0.01 * seed
+    return {"t": jnp.asarray(vals.reshape(T, fcfg.n_clients, fcfg.R),
+                             jnp.float32)}
+
+
+def _engine(dtype, quant_bits=0, n=5, **paging):
+    params = _params(dtype)
+    fcfg = FavasConfig(n_clients=n, s_selected=2, local_steps=2, eta=0.1,
+                      quant_bits=quant_bits)
+    eng = round_engine.RoundEngine(
+        params, fcfg, _loss, lambdas=jnp.asarray(client_lambdas(fcfg)),
+        **paging)
+    return eng, fcfg, params
+
+
+def _assert_states_equal(a, b):
+    for x, y in zip(a.server + a.clients + a.inits,
+                    b.server + b.clients + b.inits):
+        assert x.dtype == y.dtype and x.shape == y.shape
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+    np.testing.assert_array_equal(np.asarray(a.counters), np.asarray(b.counters))
+    np.testing.assert_array_equal(np.asarray(a.stale), np.asarray(b.stale))
+    np.testing.assert_array_equal(np.asarray(a.key), np.asarray(b.key))
+    assert int(a.t) == int(b.t)
+
+
+# ---------------------------------------------------------------------------
+# Parity lattice: paged(passthrough, s_max == n) == dense, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["fp32", "bf16"])
+@pytest.mark.parametrize("n", [7, 257])
+def test_paged_passthrough_bit_exact_vs_dense(n, dtype):
+    T = 5 if n == 7 else 3
+    dense, fcfg, params = _engine(dtype, n=n)
+    paged, _, _ = _engine(dtype, n=n, residency="paged")   # s_max -> n
+    assert paged.spec.paged and paged.spec.s_max == n
+    key = jax.random.PRNGKey(3)
+    sd = dense.init_state(params, key)
+    sp = paged.init_state(params, key)
+    batches = _batches(fcfg, T)
+    sd, md = dense.run(sd, batches, n_rounds=T)
+    sp, mp = paged.run(sp, batches, n_rounds=T)
+    _assert_states_equal(sd, sp)
+    np.testing.assert_array_equal(np.asarray(sp.hot_ids), np.arange(n))
+    for k in ("loss", "mean_steps", "selected", "stale_rounds"):
+        np.testing.assert_array_equal(np.asarray(md[k]), np.asarray(mp[k]),
+                                      err_msg=k)
+    # variance agrees too: at s_max == n the hot set is everyone
+    np.testing.assert_array_equal(np.asarray(dense.variance(sd)),
+                                  np.asarray(paged.variance(sp)))
+
+
+def test_paged_quant4_bit_exact_vs_dense():
+    """FAVAS[QNN] transmitted-progress quantization composes with paging:
+    the hot-space k_q is the dense k_q (codec keys are FOLDED off it, never
+    split), so the quantized engines agree bit-for-bit as well."""
+    T = 7
+    dense, fcfg, params = _engine(jnp.float32, quant_bits=4, n=7)
+    paged, _, _ = _engine(jnp.float32, quant_bits=4, n=7, residency="paged")
+    key = jax.random.PRNGKey(5)
+    sd, md = dense.run(dense.init_state(params, key), _batches(fcfg, T))
+    sp, mp = paged.run(paged.init_state(params, key), _batches(fcfg, T))
+    _assert_states_equal(sd, sp)
+    np.testing.assert_array_equal(np.asarray(md["loss"]),
+                                  np.asarray(mp["loss"]))
+
+
+def test_paged_sequential_matches_superstep():
+    """The paged round scans: run(T) == T step() calls (the superstep
+    contract of §7 extends to the paged body — the carried hot_ids and cold
+    pools ride the scan carry)."""
+    T = 6
+    eng, fcfg, params = _engine(jnp.float32, n=5, residency="paged")
+    key = jax.random.PRNGKey(1)
+    s_seq = eng.init_state(params, key)
+    s_sup = eng.init_state(params, key)
+    batches = _batches(fcfg, T)
+    for t in range(T):
+        s_seq, _ = eng.step(
+            s_seq, jax.tree_util.tree_map(lambda x: x[t], batches))
+    s_sup, _ = eng.run(s_sup, batches)
+    _assert_states_equal(s_seq, s_sup)
+    np.testing.assert_array_equal(np.asarray(s_seq.hot_ids),
+                                  np.asarray(s_sup.hot_ids))
+    for a, b in zip(jax.tree_util.tree_leaves(s_seq.cold),
+                    jax.tree_util.tree_leaves(s_sup.cold)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_paged_device_plane_bit_exact_vs_dense():
+    """Device data plane: the paged scan body gathers corpus rows for the
+    hot working set only, but the index/uniform draws run at full n off the
+    same batch key — at s_max == n the gathered batch IS the dense batch."""
+    n, T = 6, 9
+    rng = np.random.default_rng(5)
+    x = rng.normal(0, 1, (120, 4)).astype(np.float32)
+    y = rng.integers(0, 3, 120).astype(np.int32)
+    parts = np.array_split(rng.permutation(120), n)
+    corpus = make_classification_corpus(x, y, parts, batch=3)
+    params = mlp_init(jax.random.PRNGKey(0), 4, 8, 3)
+    fcfg = FavasConfig(n_clients=n, s_selected=2, local_steps=2, eta=0.1)
+
+    def lfn(p, b):
+        return classifier_loss(p, mlp_apply, b["x"], b["y"], 3)
+
+    lam = jnp.asarray(client_lambdas(fcfg))
+    dense = round_engine.RoundEngine(params, fcfg, lfn, lambdas=lam)
+    paged = round_engine.RoundEngine(params, fcfg, lfn, lambdas=lam,
+                                     residency="paged")
+    key = jax.random.PRNGKey(7)
+    sd, md = dense.run_device(dense.init_state(params, key), corpus, T)
+    sp, mp = paged.run_device(paged.init_state(params, key), corpus, T)
+    _assert_states_equal(sd, sp)
+    np.testing.assert_array_equal(np.asarray(md["loss"]),
+                                  np.asarray(mp["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# Residency invariants at s_max < n
+# ---------------------------------------------------------------------------
+
+def test_paged_cold_clients_are_frozen():
+    """One step from init at s_max < n: every selected client is hot, cold
+    clients' counters do not move, and clients that have never been hot
+    still hold their initial cold encoding (the server row, verbatim under
+    the passthrough codec)."""
+    n, s_max = 11, 4
+    eng, fcfg, params = _engine(jnp.float32, n=n, residency="paged",
+                                s_max=s_max)
+    state = eng.init_state(params, jax.random.PRNGKey(2))
+    counters0 = np.asarray(state.counters).copy()
+    cold0 = jax.tree_util.tree_map(lambda x: np.asarray(x).copy(), state.cold)
+    batches = _batches(fcfg, 1)
+    state, m = eng.step(
+        state, jax.tree_util.tree_map(lambda x: x[0], batches))
+    hot = np.asarray(state.hot_ids)
+    assert hot.shape == (s_max,)
+    assert np.all(np.diff(hot) > 0), "hot_ids must stay sorted and unique"
+    # selected clients have staleness 0 -> they always make the working set
+    stale = np.asarray(state.stale)
+    selected = np.where(stale == 0)[0]
+    assert float(m["selected"]) == fcfg.s_selected
+    assert set(selected.tolist()) <= set(hot.tolist())
+    # frozen cold clients: counters untouched
+    cold_ids = np.setdiff1d(np.arange(n), hot)
+    np.testing.assert_array_equal(np.asarray(state.counters)[cold_ids],
+                                  counters0[cold_ids])
+    # never-hot clients (outside the initial working set AND the new one)
+    # still hold their init encoding, byte for byte
+    never_hot = np.setdiff1d(cold_ids, np.arange(s_max))
+    assert never_hot.size > 0
+    for b0, b1 in zip(jax.tree_util.tree_leaves(cold0),
+                      jax.tree_util.tree_leaves(state.cold)):
+        np.testing.assert_array_equal(np.asarray(b1)[never_hot],
+                                      b0[never_hot])
+
+
+def test_paged_evict_promote_roundtrip_is_identity():
+    """Under the passthrough codec the evict scatter parks a client's rows
+    byte-for-byte: whenever id 0 leaves the hot set, its cold-pool entry
+    equals the hot buffers it left with, and the entry does not move for
+    as long as it stays cold (promotion is a pure gather of those bytes —
+    the s_max == n parity lattice pins the gather side)."""
+    n, s_max, T = 9, 3, 30
+    eng, fcfg, params = _engine(jnp.float32, n=n, residency="paged",
+                                s_max=s_max)
+    state = eng.init_state(params, jax.random.PRNGKey(4))
+    batches = _batches(fcfg, T)
+    snapshot, was_member = None, True
+    seen_evict = seen_frozen = False
+    for t in range(T):
+        # copy BEFORE step: the jitted round donates the previous state
+        prev_hot = np.asarray(state.hot_ids).tolist()
+        prev_cli = [np.asarray(c).copy() for c in state.clients]
+        prev_ini = [np.asarray(c).copy() for c in state.inits]
+        state, _ = eng.step(
+            state, jax.tree_util.tree_map(lambda x: x[t], batches))
+        hot = np.asarray(state.hot_ids).tolist()
+        if was_member and 0 not in hot:
+            # id 0 was just evicted: the scatter wrote its round-start rows
+            pos = prev_hot.index(0)
+            snapshot = [(c[pos], i[pos]) for c, i in zip(prev_cli, prev_ini)]
+            seen_evict = True
+        if 0 not in hot and snapshot is not None:
+            # frozen while cold: the entry equals the eviction snapshot
+            for bucket, (cs, inis) in zip(state.cold, snapshot):
+                np.testing.assert_array_equal(np.asarray(bucket["cli"])[0], cs)
+                np.testing.assert_array_equal(np.asarray(bucket["init"])[0],
+                                              inis)
+            seen_frozen = True
+        if 0 in hot:
+            snapshot = None
+        was_member = 0 in hot
+    assert seen_evict and seen_frozen, (
+        "client 0 never went cold in 30 rounds (selection rng drifted? "
+        "lower s_max or raise T)")
+
+
+def test_paged_resident_bytes_below_dense():
+    """The point of the layer: at 4-bit cold pools the paged state is
+    strictly smaller than the dense state, even counting the hot stacks
+    and the bookkeeping vectors."""
+    n, s_max = 64, 8
+    dense, _, params = _engine(jnp.float32, n=n)
+    paged, _, _ = _engine(jnp.float32, n=n, residency="paged",
+                          s_max=s_max, cold_bits=4)
+    key = jax.random.PRNGKey(0)
+    db = dense.resident_bytes(dense.init_state(params, key))
+    pb = paged.resident_bytes(paged.init_state(params, key))
+    assert pb < db, f"paged {pb} B >= dense {db} B"
+
+
+def test_paged_runs_with_luq_cold_pool():
+    """s_max < n with a real LUQ cold codec: the engine runs end to end,
+    hot membership evolves, everything stays finite."""
+    n, s_max, T = 10, 4, 12
+    eng, fcfg, params = _engine(jnp.float32, n=n, residency="paged",
+                                s_max=s_max, cold_bits=4)
+    state = eng.init_state(params, jax.random.PRNGKey(6))
+    state, ms = eng.run(state, _batches(fcfg, T))
+    assert np.all(np.isfinite(np.asarray(ms["loss"])))
+    for c in state.clients:
+        assert np.all(np.isfinite(np.asarray(c, np.float32)))
+    assert state.cold[0]["init"]["codes"].dtype == jnp.uint8
+
+
+def test_paged_rejects_selection_larger_than_hot_set():
+    eng, fcfg, params = _engine(jnp.float32, n=8, residency="paged", s_max=1)
+    with pytest.raises(ValueError, match="s_max"):
+        eng.init_state(params, jax.random.PRNGKey(0))
+
+
+def test_paged_superstep_donates_state():
+    eng, fcfg, params = _engine(jnp.float32, n=5, residency="paged")
+    state = eng.init_state(params, jax.random.PRNGKey(0))
+    prev = state
+    state, m = eng.run(state, _batches(fcfg, 4))
+    del m
+    assert prev.server[0].is_deleted(), "paged superstep must donate"
+    assert prev.cold[0]["cli"].is_deleted(), "cold pools must be donated too"
+
+
+# ---------------------------------------------------------------------------
+# Metrics guard: live-step weighting over the selected hot set
+# ---------------------------------------------------------------------------
+
+def test_loss_is_live_step_weighted_over_hot_set():
+    """Regression for the zero-live-step masking bug, at the paging layer:
+    with a constant per-step loss of 1.0, the weighted metric must be
+    EXACTLY 1.0 whenever any hot client steps — an implementation that
+    averages over all hot clients (counting capped, zero-live clients)
+    would report < 1.0; one that divides by zero would report NaN."""
+    n = 5
+
+    def unit_loss(p, batch):
+        # constant loss with zero gradient: every live step contributes 1.0
+        del batch
+        return 1.0 + 0.0 * sum(jnp.sum(l.astype(jnp.float32))
+                               for l in jax.tree_util.tree_leaves(p))
+
+    params = _params(jnp.float32)
+    fcfg = FavasConfig(n_clients=n, s_selected=2, local_steps=3, eta=0.1)
+    eng = round_engine.RoundEngine(
+        params, fcfg, unit_loss,
+        lambdas=jnp.full((n,), 10.0, jnp.float32),   # everyone steps
+        residency="paged")
+    state = eng.init_state(params, jax.random.PRNGKey(0))
+    # cap one client's counter at K: it runs ZERO live steps this round
+    state = dataclasses.replace(
+        state, counters=state.counters.at[1].set(fcfg.local_steps))
+    batch = jax.tree_util.tree_map(lambda x: x[0], _batches(fcfg, 1))
+    state, m = eng.step(state, batch)
+    np.testing.assert_allclose(float(m["loss"]), 1.0, rtol=1e-6)
+    # everyone capped -> zero live steps in the whole round: 0.0, never NaN
+    state = dataclasses.replace(
+        state, counters=jnp.full((n,), fcfg.local_steps, jnp.int32))
+    state, m = eng.step(state, batch)
+    assert float(m["loss"]) == 0.0 and np.isfinite(float(m["loss"]))
+
+
+def test_engine_variance_sums_hot_rows_only():
+    """engine_variance on a paged state charges the HOT working set only;
+    decoding frozen cold clients into a live-progress metric would be the
+    variance-level version of the masking bug."""
+    n, s_max = 9, 3
+    eng, fcfg, params = _engine(jnp.float32, n=n, residency="paged",
+                                s_max=s_max)
+    state = eng.init_state(params, jax.random.PRNGKey(3))
+    state, _ = eng.run(state, _batches(fcfg, 6))
+    want = 0.0
+    for srv, cli in zip(state.server, state.clients):
+        diff = (np.asarray(cli, np.float32)[:s_max]
+                - np.asarray(srv, np.float32)[None])
+        want += float(np.sum(diff ** 2))
+    np.testing.assert_allclose(float(eng.variance(state)), want, rtol=1e-6)
+    # dense states still sum over the full logical population
+    dense, _, _ = _engine(jnp.float32, n=n)
+    sd = dense.init_state(params, jax.random.PRNGKey(3))
+    sd, _ = dense.run(sd, _batches(fcfg, 6))
+    wd = 0.0
+    for srv, cli in zip(sd.server, sd.clients):
+        diff = (np.asarray(cli, np.float32)[:n]
+                - np.asarray(srv, np.float32)[None])
+        wd += float(np.sum(diff ** 2))
+    np.testing.assert_allclose(float(dense.variance(sd)), wd, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing: EngineState round-trips to bit-equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cold_bits", [0, 4], ids=["passthrough", "luq4"])
+def test_engine_checkpoint_roundtrip_paged(tmp_path, cold_bits):
+    """save -> load restores EVERY leaf of a trained paged state to
+    bit-equality: hot stacks, counters, staleness, the rng key chain,
+    hot_ids, and the cold pools (packed uint8 codes + scales)."""
+    eng, fcfg, params = _engine(jnp.float32, n=7, residency="paged",
+                                s_max=3, cold_bits=cold_bits)
+    state = eng.init_state(params, jax.random.PRNGKey(9))
+    state, _ = eng.run(state, _batches(fcfg, 5))
+    path = save_engine_checkpoint(str(tmp_path), 5, state)
+    restored = load_engine_checkpoint(path, state)
+    la = jax.tree_util.tree_leaves(state)
+    lb = jax.tree_util.tree_leaves(restored)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    # the restored state is live: the engine keeps running from it
+    restored, ms = eng.run(restored, _batches(fcfg, 2, seed=1))
+    assert np.all(np.isfinite(np.asarray(ms["loss"])))
+
+
+def test_engine_checkpoint_roundtrip_dense_bf16(tmp_path):
+    """bf16 hot buffers widen losslessly to f32 on disk and narrow back on
+    restore (exact: widening bf16 -> f32 is injective)."""
+    eng, fcfg, params = _engine(jnp.bfloat16, n=5)
+    state = eng.init_state(params, jax.random.PRNGKey(1))
+    state, _ = eng.run(state, _batches(fcfg, 3))
+    path = save_engine_checkpoint(str(tmp_path), 3, state)
+    restored = load_engine_checkpoint(path, state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_engine_checkpoint_refuses_dtype_mismatch(tmp_path):
+    """Restoring into a template with a different leaf dtype raises instead
+    of silently casting (the recorded-dtype guard). Same tree STRUCTURE,
+    one leaf dtype changed — an engine-layout change, not a missing key."""
+    eng, fcfg, params = _engine(jnp.float32, n=5, residency="paged")
+    state = eng.init_state(params, jax.random.PRNGKey(0))
+    path = save_engine_checkpoint(str(tmp_path), 0, state)
+    template = dataclasses.replace(state,
+                                   stale=state.stale.astype(jnp.int16))
+    with pytest.raises(ValueError, match="dtype"):
+        load_engine_checkpoint(path, template)

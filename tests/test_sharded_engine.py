@@ -353,6 +353,96 @@ def test_device_corpus_gather_stays_shard_local():
         f"{gathers} >= {corpus_bytes}")
 
 
+@needs8
+@pytest.mark.parametrize("n", [7, 257])
+def test_sharded_paged_passthrough_bit_exact(n):
+    """Paged residency on the mesh (docs/architecture.md §9): with the
+    passthrough codec at s_max == n, the sharded paged superstep is
+    bit-exact against BOTH the sharded dense superstep and the
+    single-device paged superstep — the cold pools shard like the §6
+    buckets, and evict/promote adds no cross-shard reduction."""
+    (mesh, params, fcfg, lambdas, spec_s, spec_r,
+     st_s, st_r, batch, key) = _setup(n, jnp.float32)
+    spec_p = round_engine.make_flat_spec(params, n_clients=n, mesh=mesh,
+                                         residency="paged")
+    assert spec_p.paged and spec_p.s_max == n
+    st_p = jax.device_put(round_engine.engine_init(spec_p, params, fcfg, key),
+                          round_engine.engine_sharding(spec_p, mesh))
+    multi_p = jax.jit(functools.partial(
+        round_engine.engine_multi_round, spec_p, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, mesh=mesh, use_kernel=False))
+    multi_s = jax.jit(functools.partial(
+        round_engine.engine_multi_round, spec_s, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, mesh=mesh, use_kernel=False))
+    T = 4
+    batches = {"t": jnp.stack([batch["t"] * (1.0 + 0.1 * t)
+                               for t in range(T)])}
+    st_pp, m_p = multi_p(st_p, batches)
+    st_ss, m_s = multi_s(st_s, batches)
+    _trees_equal(round_engine.engine_server_params(spec_p, st_pp),
+                 round_engine.engine_server_params(spec_s, st_ss))
+    _trees_equal(round_engine.unflatten_stacked(spec_p, st_pp.clients),
+                 round_engine.unflatten_stacked(spec_s, st_ss.clients))
+    _trees_equal(round_engine.unflatten_stacked(spec_p, st_pp.inits),
+                 round_engine.unflatten_stacked(spec_s, st_ss.inits))
+    np.testing.assert_array_equal(np.asarray(st_pp.counters),
+                                  np.asarray(st_ss.counters))
+    np.testing.assert_array_equal(np.asarray(st_pp.key),
+                                  np.asarray(st_ss.key))
+    np.testing.assert_array_equal(np.asarray(m_p["loss"]),
+                                  np.asarray(m_s["loss"]))
+    # ... and against the single-device paged engine
+    spec_p1 = round_engine.make_flat_spec(params, n_clients=n,
+                                          residency="paged")
+    st_p1 = round_engine.engine_init(spec_p1, params, fcfg, key)
+    multi_p1 = jax.jit(functools.partial(
+        round_engine.engine_multi_round, spec_p1, cfg=fcfg,
+        loss_fn=quad_loss, lambdas=lambdas, use_kernel=False))
+    st_p1, _ = multi_p1(st_p1, batches)
+    _trees_equal(round_engine.unflatten_stacked(spec_p, st_pp.clients),
+                 round_engine.unflatten_stacked(spec_p1, st_p1.clients))
+    np.testing.assert_array_equal(np.asarray(st_pp.hot_ids),
+                                  np.asarray(st_p1.hot_ids))
+
+
+@needs8
+def test_sharded_paged_luq_cold_pool_no_full_gather():
+    """s_max < n with 4-bit cold pools on the mesh: the round runs, stays
+    finite, cold codes stay uint8, and the compiled paged superstep has no
+    all-gather at (or above) full-cold-pool size — evict (requant+scatter)
+    and promote (gather+dequant) are shard-local."""
+    from repro.core.paging import LuqCodec, encoded_nbytes
+    n, s_max = 40, 8
+    mesh = make_model_mesh(8)
+    params = make_params(jnp.float32)
+    fcfg = FavasConfig(n_clients=n, s_selected=3, local_steps=2, eta=0.1)
+    lambdas = jnp.asarray(client_lambdas(fcfg))
+    spec = round_engine.make_flat_spec(params, n_clients=n, mesh=mesh,
+                                       residency="paged", s_max=s_max,
+                                       cold_codec=LuqCodec(bits=4))
+    key = jax.random.PRNGKey(1)
+    st = jax.device_put(round_engine.engine_init(spec, params, fcfg, key),
+                        round_engine.engine_sharding(spec, mesh))
+    cold_bytes = min(encoded_nbytes(st.cold[b])
+                     for b in range(spec.n_buckets) if spec.shards(b) > 1)
+    multi = jax.jit(functools.partial(
+        round_engine.engine_multi_round, spec, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, mesh=mesh, use_kernel=False))
+    batch = {"t": jnp.linspace(0.0, 1.0, n * fcfg.R).reshape(n, fcfg.R)}
+    batches = {"t": jnp.stack([batch["t"]] * 6)}
+    lowered = multi.lower(st, batches)
+    st, ms = multi(st, batches)
+    assert np.all(np.isfinite(np.asarray(ms["loss"])))
+    assert st.cold[0]["init"]["codes"].dtype == jnp.uint8
+    assert np.asarray(st.hot_ids).shape == (s_max,)
+    from repro.launch.roofline import collective_ops
+    hlo = lowered.compile().as_text()
+    gathers = [b for kind, b in collective_ops(hlo) if kind == "all-gather"]
+    assert all(b < cold_bytes for b in gathers), (
+        f"cold-pool-sized all-gather in the paged superstep: "
+        f"{gathers} >= {cold_bytes}")
+
+
 def test_flat_spec_invariants_without_devices():
     """Sharding-aware layout metadata needs no devices: explicit shard_axes
     + model_shards give the same bucket structure tier-1 can verify."""
