@@ -42,6 +42,7 @@ import numpy as np
 
 from benchmarks.common import save_artifact
 from repro.core.favas import FavasConfig, client_lambdas
+from repro.core.paging import encoded_nbytes
 from repro.core.round_engine import RoundEngine
 from repro.data.device_corpus import make_classification_corpus
 from repro.models.classifier import classifier_loss, mlp_apply, mlp_init
@@ -81,6 +82,37 @@ def _resident_bytes(n_clients: int, *, paged: bool) -> int:
     jax.tree_util.tree_map(lambda x: x.delete(),
                            jax.tree_util.tree_leaves(state))
     return int(b)
+
+
+def _cold_accounting(n_clients: int) -> list:
+    """Predicted vs measured cold-pool bytes per client, per bucket.
+
+    ``LuqCodec.bytes_per_row`` is the ACCOUNTING used by the residency
+    story (docs/architecture.md §9/§10); ``encoded_nbytes`` measures the
+    live encoded arrays. The two must agree EXACTLY — the bytes_per_row
+    arithmetic used to hard-code a single ``+ 4`` scale regardless of the
+    shard count, so this assertion pins the fix."""
+    eng, fcfg, params, key = _make_engine(n_clients, paged=True)
+    spec = eng.spec
+    state = eng.init_state(params, key)
+    out = []
+    for b in range(spec.n_buckets):
+        pred = spec.cold_codec.bytes_per_row(
+            spec.bucket_padded[b], spec.bucket_dtypes[b],
+            shards=spec.shards(b))
+        got = encoded_nbytes(state.cold[b]) / n_clients
+        if got != pred:
+            raise SystemExit(
+                f"FAIL: cold-pool accounting drift in bucket {b}: "
+                f"bytes_per_row predicts {pred} B/client but the encoded "
+                f"pool measures {got} B/client")
+        out.append({"bucket": b, "dtype": str(spec.bucket_dtypes[b]),
+                    "shards": spec.shards(b),
+                    "predicted_bytes_per_row": int(pred),
+                    "measured_bytes_per_row": got})
+    jax.tree_util.tree_map(lambda x: x.delete(),
+                           jax.tree_util.tree_leaves(state))
+    return out
 
 
 def _fit_population(points: list, budget: int) -> dict:
@@ -135,8 +167,11 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
                        "cold_bits": COLD_BITS},
             "dense_bytes": dense_b, "paged_bytes": paged_b,
             "ratio": dense_b / paged_b,
+            "cold_accounting": _cold_accounting(n),
             "note": "CI smoke gate: paged EngineState must be strictly "
-                    "smaller than dense at n = 4096.",
+                    "smaller than dense at n = 4096, and the codec's "
+                    "bytes_per_row accounting must match the measured "
+                    "encoded pool exactly.",
         }
         save_artifact("paged_state_smoke", rows)
         return rows
@@ -168,6 +203,7 @@ def run(quick: bool = True, smoke: bool = False) -> dict:
                    "model": "classifier MLP under core.round_engine."
                             "RoundEngine (jnp oracle path, CPU)"},
         "residency_sweep": residency,
+        "cold_accounting_n1000": _cold_accounting(1_000),
         "max_population_at_fixed_memory": {
             "dense": dense_fit, "paged": paged_fit,
             "population_ratio_paged_vs_dense": pop_ratio,

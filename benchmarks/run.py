@@ -6,7 +6,8 @@ the roofline/kernel harnesses. ``--full`` runs paper-scale FL simulations
   PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only NAME]
 
 ``--smoke`` asks each benchmark that supports it (data_plane_bench,
-paged_state_bench) for its cheapest defensible check; smoke artifacts go
+paged_state_bench, quant_fused_bench) for its cheapest defensible check;
+smoke artifacts go
 to ``*_smoke.json`` and never overwrite the canonical files. Benchmarks
 without a smoke path just run their quick mode.
 """
@@ -29,7 +30,7 @@ def main() -> None:
     from benchmarks import (fl_paper, theory_table, kernel_bench,
                             roofline_table, ablation_reweight,
                             round_loop_bench, data_plane_bench,
-                            paged_state_bench)
+                            paged_state_bench, quant_fused_bench)
 
     suite = [
         ("table1_theory", lambda: theory_table.run(quick)),
@@ -38,6 +39,8 @@ def main() -> None:
         ("data_plane_bench", lambda: data_plane_bench.run(quick,
                                                           smoke=smoke)),
         ("paged_state_bench", lambda: paged_state_bench.run(quick,
+                                                            smoke=smoke)),
+        ("quant_fused_bench", lambda: quant_fused_bench.run(quick,
                                                             smoke=smoke)),
         ("roofline_table", lambda: roofline_table.run(quick)),
         ("fig1_table2_mnist", lambda: fl_paper.fig1_table2(quick)),
@@ -94,6 +97,12 @@ def _derive(name: str, out) -> str:
             t = out["throughput_n1024_chunk32"]
             return (f"pop=x{pop['population_ratio_paged_vs_dense']:.1f}"
                     f";rps=x{t['paged_over_dense']:.2f}")
+        if name == "quant_fused_bench":
+            r32 = out["sweep"][-1]
+            return (f"n{r32['n_clients']}_fused="
+                    f"{r32['fused']['rounds_per_sec']:.0f}r/s"
+                    f";x{r32['fused_over_unfused']:.2f}"
+                    f";bytes_x{r32['progress_bytes_ratio']:.1f}")
         if name == "ablation_reweight":
             return ";".join(
                 f"{k}={v['final_mean']:.3f}/rec{v['slow_class_recall']:.3f}"

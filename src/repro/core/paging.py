@@ -81,15 +81,17 @@ def luq_encode_rows(x, bits: int, key, *, shards: int = 1) -> Dict:
     zero, m -> exponent m - L) instead of the dequantized float. The scale
     is the guarded per-(row, shard) max |x| (``core.quant.luq_scale``
     semantics: all-zero segments map to scale 1.0, so decode is exact
-    zeros, the PR 2 all-zero regression)."""
+    zeros, the PR 2 all-zero regression; a NaN max PROPAGATES so a
+    poisoned segment decodes loudly non-finite instead of quantizing
+    against 1.0 — pinned by tests/test_quant_codec.py)."""
     levels = 2 ** (bits - 1) - 1
     rows, D = x.shape
     if D % shards:
         raise ValueError(f"D={D} does not divide into {shards} shards")
+    from repro.kernels.luq import guard_scale    # lazy: no import cycle
     xf = x.astype(jnp.float32)
     xs = xf.reshape(rows, shards, D // shards)
-    scale = jnp.max(jnp.abs(xs), axis=2)
-    scale = jnp.where(scale > 0, scale, 1.0)
+    scale = guard_scale(jnp.max(jnp.abs(xs), axis=2))
     m = jnp.abs(xs) / scale[..., None]
     min_level = 2.0 ** (-(levels - 1))
     k1, k2 = jax.random.split(key)
@@ -137,15 +139,18 @@ class PassthroughCodec:
     gather -> fused round -> scatter-back) can be proven BIT-EXACT against
     the dense engine, independently of any quantization effect."""
 
-    def encode_pair(self, cli, init, key, *, shards: int = 1) -> Dict:
-        del key, shards
+    def encode_pair(self, cli, init, key, *, shards: int = 1,
+                    use_kernel=None) -> Dict:
+        del key, shards, use_kernel
         return {"cli": cli, "init": init}
 
-    def decode_pair(self, enc: Dict, dtype, *, shards: int = 1):
-        del shards
+    def decode_pair(self, enc: Dict, dtype, *, shards: int = 1,
+                    use_kernel=None):
+        del shards, use_kernel
         return enc["cli"].astype(dtype), enc["init"].astype(dtype)
 
-    def bytes_per_row(self, d_padded: int, dtype) -> int:
+    def bytes_per_row(self, d_padded: int, dtype, *, shards: int = 1) -> int:
+        del shards                      # verbatim rows carry no scale
         return 2 * d_padded * jnp.dtype(dtype).itemsize
 
     def partition_specs(self, sharded: bool, axis: str = "model") -> Dict:
@@ -172,30 +177,40 @@ class LuqCodec:
             raise ValueError(f"LuqCodec bits must be 2, 4 or 8 "
                              f"(got {self.bits})")
 
-    def encode_pair(self, cli, init, key, *, shards: int = 1) -> Dict:
+    def encode_pair(self, cli, init, key, *, shards: int = 1,
+                    use_kernel=None) -> Dict:
         # route through kernels.ops so the requant dispatch point is shared
-        # with the rest of the kernel surface (a code-emitting Pallas kernel
-        # slots in there without touching the codec or the engine)
+        # with the rest of the kernel surface: ``use_kernel`` picks the
+        # code-emitting Pallas kernel exactly like the fused-round knob
+        # (None = TPU auto, True = kernel / interpret off-TPU, False = jnp
+        # oracle — the two are bit-identical under shared uniforms)
         from repro.kernels.ops import cold_dequant_rows, cold_requant_rows
         k_i, k_p = jax.random.split(key)
-        ie = cold_requant_rows(init, self.bits, k_i, shards=shards)
+        ie = cold_requant_rows(init, self.bits, k_i, shards=shards,
+                               use_kernel=use_kernel)
         init_dec = cold_dequant_rows(ie, self.bits, jnp.float32,
-                                     shards=shards)
+                                     shards=shards, use_kernel=use_kernel)
         prog = cli.astype(jnp.float32) - init_dec
-        pe = cold_requant_rows(prog, self.bits, k_p, shards=shards)
+        pe = cold_requant_rows(prog, self.bits, k_p, shards=shards,
+                               use_kernel=use_kernel)
         return {"init": ie, "prog": pe}
 
-    def decode_pair(self, enc: Dict, dtype, *, shards: int = 1):
+    def decode_pair(self, enc: Dict, dtype, *, shards: int = 1,
+                    use_kernel=None):
         from repro.kernels.ops import cold_dequant_rows
         init = cold_dequant_rows(enc["init"], self.bits, jnp.float32,
-                                 shards=shards)
+                                 shards=shards, use_kernel=use_kernel)
         cli = init + cold_dequant_rows(enc["prog"], self.bits, jnp.float32,
-                                       shards=shards)
+                                       shards=shards, use_kernel=use_kernel)
         return cli.astype(dtype), init.astype(dtype)
 
-    def bytes_per_row(self, d_padded: int, dtype) -> int:
+    def bytes_per_row(self, d_padded: int, dtype, *, shards: int = 1) -> int:
         del dtype
-        return 2 * (d_padded * self.bits // 8 + 4)
+        # two pools (init + progress), each d_padded*bits/8 code bytes plus
+        # ONE f32 scale per (row, shard) — on a §6 mesh the scale is
+        # per-shard so encode/decode stay shard-local, and the cost scales
+        # with the shard count (previously hard-coded to a single + 4)
+        return 2 * (d_padded * self.bits // 8 + 4 * shards)
 
     def partition_specs(self, sharded: bool, axis: str = "model") -> Dict:
         from jax.sharding import PartitionSpec as P

@@ -24,9 +24,15 @@ def luq_scale(x):
     module's simulation path, ``kernels.ops.luq_quantize``'s oracle path,
     and ``kernels.luq.luq_pallas``'s scale reduction). ``ref.luq_ref`` and
     the kernel body take scale as an explicit operand and keep their own
-    idempotent zero-guard, since callers there may pass a raw max."""
-    scale = jnp.max(jnp.abs(x.astype(jnp.float32)))
-    return jnp.where(scale > 0, scale, 1.0)
+    idempotent guard, since callers there may pass a raw max.
+
+    Guard semantics (pinned by tests/test_quant_codec.py): zero -> 1.0,
+    positive and +Inf pass through, and a NaN max PROPAGATES — an input
+    poisoned with NaN must quantize to something loudly non-finite, never
+    silently against scale 1.0 (``NaN > 0`` is False, so the plain
+    zero-guard used to do exactly that)."""
+    from repro.kernels.luq import guard_scale    # lazy: no import cycle
+    return guard_scale(jnp.max(jnp.abs(x.astype(jnp.float32))))
 
 
 def luq_quantize(x, bits: int, key):

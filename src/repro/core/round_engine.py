@@ -483,6 +483,7 @@ def _constrain_cold(spec: FlatSpec, mesh, cold) -> tuple:
 
 def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
                         alpha_p, mask_p, s: float, *, progress_b=None,
+                        progress_codes_b=None, progress_bits: int = 0,
                         n_logical: Optional[int] = None, mesh=None,
                         use_kernel: Optional[bool] = None):
     """One bucket's fused aggregation + selected-client reset, mesh-aware.
@@ -500,11 +501,25 @@ def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
       output ``PartitionSpec`` constraints; GSPMD partitions the elementwise
       lanes and the (unsharded) client-axis reduction locally.
 
+    ``progress_codes_b`` (mutually exclusive with ``progress_b``): the
+    transmitted progress as a ``{"codes", "scale"}`` encoding from
+    ``kernels.ops.cold_requant_rows`` at ``progress_bits``, encoded with
+    ``shards=spec.shards(b)``. The per-shard scale layout makes the codes-in
+    shard_map body exactly per-device: each device's codes slice is a
+    standalone shards=1 encoding of its own lane segment, so the kernel
+    dequantizes shard-locally with no collectives.
+
     Returns (server_new, clients_new, inits_new) with the inputs' shardings.
     """
+    if progress_b is not None and progress_codes_b is not None:
+        raise ValueError("progress_b and progress_codes_b are mutually "
+                         "exclusive")
     if mesh is None or spec.shards(b) <= 1:
         return favas_fused_flat(server_b, trained_b, inits_b, alpha_p, mask_p,
                                 float(s), progress=progress_b,
+                                progress_codes=progress_codes_b,
+                                progress_bits=progress_bits,
+                                progress_shards=max(1, spec.shards(b)),
                                 client_tile=spec.client_tile,
                                 n_logical=n_logical, use_kernel=use_kernel)
     kernel_active = (use_kernel if use_kernel is not None
@@ -515,13 +530,21 @@ def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
         from jax.experimental.shard_map import shard_map
 
         def body(*ops):
-            if progress_b is None:
-                srv, cli, ini, al, mk = ops
-                pr = None
-            else:
+            pr = pc = None
+            if progress_b is not None:
                 srv, cli, ini, pr, al, mk = ops
+            elif progress_codes_b is not None:
+                srv, cli, ini, cd, sc, al, mk = ops
+                pc = {"codes": cd, "scale": sc}
+            else:
+                srv, cli, ini, al, mk = ops
+            # per-device view: the local codes slice is one shard segment
+            # with its own (rows, 1) scale column -> progress_shards=1
             return favas_fused_flat(srv, cli, ini, al, mk, float(s),
-                                    progress=pr, client_tile=spec.client_tile,
+                                    progress=pr, progress_codes=pc,
+                                    progress_bits=progress_bits,
+                                    progress_shards=1,
+                                    client_tile=spec.client_tile,
                                     n_logical=n_logical, use_kernel=True)
 
         operands = [server_b, trained_b, inits_b]
@@ -529,6 +552,11 @@ def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
         if progress_b is not None:
             operands.append(progress_b)
             in_specs.append(row)
+        elif progress_codes_b is not None:
+            # codes split on the lane axis like the row buffers; the
+            # (rows, S) scale splits its shard column onto its shard
+            operands += [progress_codes_b["codes"], progress_codes_b["scale"]]
+            in_specs += [row, row]
         operands += [alpha_p, mask_p]
         in_specs += [vec, vec]
         return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
@@ -537,10 +565,42 @@ def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
     from jax.sharding import NamedSharding
     out = favas_fused_flat(server_b, trained_b, inits_b, alpha_p, mask_p,
                            float(s), progress=progress_b,
+                           progress_codes=progress_codes_b,
+                           progress_bits=progress_bits,
+                           progress_shards=spec.shards(b),
                            client_tile=spec.client_tile,
                            n_logical=n_logical, use_kernel=False)
     return tuple(jax.lax.with_sharding_constraint(o, NamedSharding(mesh, p))
                  for o, p in zip(out, (lane, row, row)))
+
+
+def _encode_progress(spec: FlatSpec, trained, inits, k_q, bits: int, *,
+                     mesh=None, use_kernel: Optional[bool] = None) -> tuple:
+    """Per-bucket LUQ encode of the transmitted progress (``quant_fused``
+    transport): ``trained[b] - inits[b]`` in f32 -> packed codes +
+    per-(row, shard) scales via ``kernels.ops.cold_requant_rows``. Padded
+    client rows and lane tails are zero in both operands, so their delta is
+    exactly zero, the guarded scale is 1.0 and the codes decode to exact
+    zeros — padding stays a no-op through the codec. Keys: ``fold_in(k_q,
+    0x7166)`` ('qf') then per-bucket fold — a stream disjoint from both the
+    per-leaf ``quantize_tree`` split and the paged eviction fold."""
+    from repro.kernels.ops import cold_requant_rows   # lazy: no import cycle
+    k_qf = jax.random.fold_in(k_q, 0x7166)
+    codes = []
+    for b in range(spec.n_buckets):
+        delta = (trained[b].astype(jnp.float32)
+                 - inits[b].astype(jnp.float32))
+        codes.append(cold_requant_rows(
+            delta, bits, jax.random.fold_in(k_qf, b),
+            shards=max(1, spec.shards(b)), use_kernel=use_kernel))
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        lane = P(None, spec.mesh_axis or "model")
+        codes = [pc if spec.shards(b) <= 1 else jax.tree_util.tree_map(
+                     lambda x: jax.lax.with_sharding_constraint(
+                         x, NamedSharding(mesh, lane)), pc)
+                 for b, pc in enumerate(codes)]
+    return tuple(codes)
 
 
 # ---------------------------------------------------------------------------
@@ -571,7 +631,8 @@ class EngineState:
         return cls(*children)
 
 
-def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
+def engine_init(spec: FlatSpec, params, cfg, key, *,
+                use_kernel: Optional[bool] = None) -> EngineState:
     """Build the initial :class:`EngineState` from a parameter pytree.
 
     All clients start from the server model (Algorithm 1 line 16): the
@@ -587,6 +648,10 @@ def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
       params: parameter pytree matching ``spec.treedef``.
       cfg: :class:`repro.core.favas.FavasConfig` (reads ``n_clients``).
       key: PRNG key stored in the state and split every round.
+      use_kernel: cold-pool codec dispatch for the paged seeding encode —
+        same contract as the round's (None = TPU auto); the kernel and
+        oracle paths are bit-identical under shared uniforms so the choice
+        never changes the seeded state's values.
 
     Returns an :class:`EngineState` on the default device; on a mesh,
     ``jax.device_put`` it with :func:`engine_sharding` (``RoundEngine``
@@ -616,7 +681,7 @@ def engine_init(spec: FlatSpec, params, cfg, key) -> EngineState:
             row = server[b][None]
             enc1 = spec.cold_codec.encode_pair(
                 row, row, jax.random.fold_in(k_cold, b),
-                shards=spec.shards(b))
+                shards=spec.shards(b), use_kernel=use_kernel)
             cold.append(jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a, (n,) + a.shape[1:]).copy(),
                 enc1))
@@ -674,7 +739,7 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
                  loss_fn: Callable, lambdas,
                  det_alpha: Optional[jnp.ndarray] = None,
                  use_kernel: Optional[bool] = None, mesh=None,
-                 corpus=None, batch_key=None):
+                 quant_fused: bool = False, corpus=None, batch_key=None):
     """One FAVAS server round on flat buffers. Pure; jit/pjit this.
 
     The hot path is: unflatten clients -> vmapped local SGD -> flatten ->
@@ -695,6 +760,16 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
         ``cfg.reweight == "deterministic"``).
       use_kernel: None -> Pallas kernel on TPU / jnp oracle elsewhere;
         True/False force the choice (True runs interpret mode off-TPU).
+      quant_fused: FAVAS[QNN] transport format. False (default, the seed
+        semantics) quantizes the transmitted progress in tree space with
+        per-leaf scales and hands the fused pass a dense dequantized
+        (n, Dp) buffer. True encodes the progress per BUCKET as bit-packed
+        LUQ codes + per-(row, shard) scales (``kernels.ops.
+        cold_requant_rows``) and hands the fused pass the CODES — the
+        kernel dequantizes per VMEM tile, so no full-precision (n, Dp)
+        progress buffer ever materializes (different per-row-vs-per-leaf
+        scale granularity and key stream, so an opt-in knob, not a drop-in
+        replacement for the seed path).
       mesh: optional device mesh matching a sharding-aware ``spec``. Sharded
         buckets then run their fused pass via :func:`fused_bucket_update`
         (shard_map on the kernel path, pjit constraints on the oracle path)
@@ -716,6 +791,7 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
         return _paged_round(spec, state, batch, cfg=cfg, loss_fn=loss_fn,
                             lambdas=lambdas, det_alpha=det_alpha,
                             use_kernel=use_kernel, mesh=mesh,
+                            quant_fused=quant_fused,
                             corpus=corpus, batch_key=batch_key)
     if corpus is not None:
         batch = corpus.sample_round_batch(batch_key, cfg.R)
@@ -737,8 +813,22 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
     else:
         alpha = reweight.alpha_stochastic(new_counters, p_pos=1.0)
 
+    trained = _constrain_buckets(spec, mesh, flatten_stacked(spec, trained_tree),
+                                 stacked=True)
+
     progress = (None,) * spec.n_buckets
-    if cfg.quant_bits > 0:
+    progress_codes = (None,) * spec.n_buckets
+    if cfg.quant_bits > 0 and quant_fused:
+        # FAVAS[QNN], codes-in transport: LUQ-encode the transmitted
+        # progress per BUCKET on the flat buffers (per-(row, shard) scales)
+        # and keep it as packed codes all the way into the fused pass — the
+        # dense (n, Dp) dequantized progress never materializes. Keys fold
+        # off k_q under a dedicated tag so the stream can never collide
+        # with the paged path's eviction fold (fold_in(k_q, 1)).
+        progress_codes = _encode_progress(spec, trained, state.inits, k_q,
+                                          cfg.quant_bits, mesh=mesh,
+                                          use_kernel=use_kernel)
+    elif cfg.quant_bits > 0:
         # FAVAS[QNN]: quantize the TRANSMITTED progress in tree space
         # (per-leaf LUQ scale, same per-leaf keys as the seed
         # implementation). Quantization is communication-only (Remark 1):
@@ -749,9 +839,6 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
                              cfg.quant_bits, k_q)
         progress = _constrain_buckets(spec, mesh, flatten_stacked(spec, prog),
                                       stacked=True)
-
-    trained = _constrain_buckets(spec, mesh, flatten_stacked(spec, trained_tree),
-                                 stacked=True)
 
     # 4+5. fused aggregation + selected-client reset: one pass per bucket.
     # alpha/mask ride to the kernel padded alongside the buffers' client
@@ -764,7 +851,9 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
     for b in range(spec.n_buckets):
         srv, cli, ini = fused_bucket_update(
             spec, b, state.server[b], trained[b], state.inits[b], alpha_p,
-            m_p, float(s), progress_b=progress[b], n_logical=n, mesh=mesh,
+            m_p, float(s), progress_b=progress[b],
+            progress_codes_b=progress_codes[b],
+            progress_bits=cfg.quant_bits, n_logical=n, mesh=mesh,
             use_kernel=use_kernel)
         server_new.append(srv)
         clients_new.append(cli)
@@ -795,7 +884,7 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
                  loss_fn: Callable, lambdas,
                  det_alpha: Optional[jnp.ndarray] = None,
                  use_kernel: Optional[bool] = None, mesh=None,
-                 corpus=None, batch_key=None):
+                 quant_fused: bool = False, corpus=None, batch_key=None):
     """One FAVAS round on a paged (hot/cold) spec — docs/architecture.md §9.
 
     Control flow inverts relative to the dense body: Gumbel top-s selection
@@ -868,7 +957,8 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     for b in range(spec.n_buckets):
         enc = codec.encode_pair(
             state.clients[b][evict_pos], state.inits[b][evict_pos],
-            jax.random.fold_in(k_evict, b), shards=spec.shards(b))
+            jax.random.fold_in(k_evict, b), shards=spec.shards(b),
+            use_kernel=use_kernel)
 
         def scatter(pool, e):
             sel = evict_valid.reshape((-1,) + (1,) * (e.ndim - 1))
@@ -888,7 +978,8 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
         dt = jnp.dtype(spec.bucket_dtypes[b])
         enc_rows = jax.tree_util.tree_map(lambda p: p[promo_ids], cold[b])
         dec_cli, dec_ini = codec.decode_pair(enc_rows, dt,
-                                             shards=spec.shards(b))
+                                             shards=spec.shards(b),
+                                             use_kernel=use_kernel)
         base_cli = state.clients[b][pos_in_old]
         base_ini = state.inits[b][pos_in_old]
         sel = promo_valid[:, None]
@@ -926,16 +1017,23 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
         alpha = det_alpha[members]
     else:
         alpha = reweight.alpha_stochastic(q1, p_pos=1.0)
+    trained = _constrain_buckets(spec, mesh,
+                                 flatten_stacked(spec, trained_tree),
+                                 stacked=True)
     progress = (None,) * spec.n_buckets
-    if cfg.quant_bits > 0:
+    progress_codes = (None,) * spec.n_buckets
+    if cfg.quant_bits > 0 and quant_fused:
+        # codes-in transport over the HOT stacks (see engine_round): the
+        # 0x7166 tag keeps the fold stream disjoint from k_evict above
+        progress_codes = _encode_progress(spec, trained, inits_hot, k_q,
+                                          cfg.quant_bits, mesh=mesh,
+                                          use_kernel=use_kernel)
+    elif cfg.quant_bits > 0:
         inits_tree = unflatten_stacked(spec, inits_hot)
         prog = quantize_tree(tree_map(jnp.subtract, trained_tree, inits_tree),
                              cfg.quant_bits, k_q)
         progress = _constrain_buckets(spec, mesh, flatten_stacked(spec, prog),
                                       stacked=True)
-    trained = _constrain_buckets(spec, mesh,
-                                 flatten_stacked(spec, trained_tree),
-                                 stacked=True)
 
     # 8. fused aggregation + selected-client reset over the hot stacks
     alpha_p = pad_client_vec(spec, alpha, 1.0)
@@ -944,7 +1042,9 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     for b in range(spec.n_buckets):
         srv, cli, ini = fused_bucket_update(
             spec, b, state.server[b], trained[b], inits_hot[b], alpha_p,
-            m_p, float(s), progress_b=progress[b], n_logical=s_hot,
+            m_p, float(s), progress_b=progress[b],
+            progress_codes_b=progress_codes[b],
+            progress_bits=cfg.quant_bits, n_logical=s_hot,
             mesh=mesh, use_kernel=use_kernel)
         server_new.append(srv)
         clients_new.append(cli)
@@ -978,6 +1078,7 @@ def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
                        cfg, loss_fn: Callable, lambdas,
                        det_alpha: Optional[jnp.ndarray] = None,
                        use_kernel: Optional[bool] = None, mesh=None,
+                       quant_fused: bool = False,
                        corpus=None, n_rounds: Optional[int] = None):
     """A whole chunk of FAVAS rounds as ONE ``jax.lax.scan`` — the
     "superstep" (docs/architecture.md §7). Pure; jit/pjit this and donate
@@ -1030,13 +1131,15 @@ def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
             return engine_round(spec, st, None, cfg=cfg, loss_fn=loss_fn,
                                 lambdas=lambdas, det_alpha=det_alpha,
                                 use_kernel=use_kernel, mesh=mesh,
+                                quant_fused=quant_fused,
                                 corpus=corpus, batch_key=k_batch)
         return jax.lax.scan(body_c, state, None, length=n_rounds)
 
     def body(st, batch):
         return engine_round(spec, st, batch, cfg=cfg, loss_fn=loss_fn,
                             lambdas=lambdas, det_alpha=det_alpha,
-                            use_kernel=use_kernel, mesh=mesh)
+                            use_kernel=use_kernel, mesh=mesh,
+                            quant_fused=quant_fused)
     return jax.lax.scan(body, state, batches)
 
 
@@ -1091,7 +1194,7 @@ class RoundEngine:
                  lambdas=None, det_alpha=None, use_kernel: Optional[bool] = None,
                  client_tile: int = CLIENT_TILE, mesh=None,
                  residency: str = "dense", s_max: Optional[int] = None,
-                 cold_bits: int = 0):
+                 cold_bits: int = 0, quant_fused: bool = False):
         from repro.core.favas import client_lambdas  # cycle-free at call time
         self.cfg = cfg
         self.mesh = mesh
@@ -1105,17 +1208,20 @@ class RoundEngine:
                         else jnp.asarray(client_lambdas(cfg)))
         self.det_alpha = None if det_alpha is None else jnp.asarray(det_alpha)
         self.use_kernel = use_kernel
+        self.quant_fused = quant_fused
         self._round = jax.jit(
             functools.partial(engine_round, self.spec, cfg=self.cfg,
                               loss_fn=self.loss_fn, lambdas=self.lambdas,
                               det_alpha=self.det_alpha,
-                              use_kernel=self.use_kernel, mesh=self.mesh),
+                              use_kernel=self.use_kernel, mesh=self.mesh,
+                              quant_fused=self.quant_fused),
             donate_argnums=(0,))
         self._multi = jax.jit(
             functools.partial(engine_multi_round, self.spec, cfg=self.cfg,
                               loss_fn=self.loss_fn, lambdas=self.lambdas,
                               det_alpha=self.det_alpha,
-                              use_kernel=self.use_kernel, mesh=self.mesh),
+                              use_kernel=self.use_kernel, mesh=self.mesh,
+                              quant_fused=self.quant_fused),
             donate_argnums=(0,))
         # device data plane: the corpus rides as a pytree ARGUMENT (not a
         # closure) so its buffers are shared inputs, never baked into the
@@ -1124,14 +1230,16 @@ class RoundEngine:
             functools.partial(engine_multi_round, self.spec, cfg=self.cfg,
                               loss_fn=self.loss_fn, lambdas=self.lambdas,
                               det_alpha=self.det_alpha,
-                              use_kernel=self.use_kernel, mesh=self.mesh),
+                              use_kernel=self.use_kernel, mesh=self.mesh,
+                              quant_fused=self.quant_fused),
             static_argnames=("n_rounds",), donate_argnums=(0,))
         # dispatches into the jitted round/superstep — the regression guard
         # tests/test_superstep.py uses to pin "one chunk = one dispatch"
         self.dispatch_count = 0
 
     def init_state(self, params, key) -> EngineState:
-        state = engine_init(self.spec, params, self.cfg, key)
+        state = engine_init(self.spec, params, self.cfg, key,
+                            use_kernel=self.use_kernel)
         if self.mesh is not None:
             state = jax.device_put(state, engine_sharding(self.spec, self.mesh))
         return state

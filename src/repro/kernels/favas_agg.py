@@ -70,6 +70,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.luq import dequant_block
+
 TILE = 2048        # lane-dim tile; multiple of 128
 CLIENT_TILE = 32   # sublane-dim tile over client rows; multiple of 8
 
@@ -87,12 +89,21 @@ def _pad_clients(n: int, client_tile: int, arrays, alpha, mask):
 
 
 def fused_block_vmem_bytes(n: int, dtype, *, progress: bool = False,
-                           tile: int = TILE,
+                           codec_bits: int = 0, tile: int = TILE,
                            client_tile: int = CLIENT_TILE) -> int:
     """Per-grid-step VMEM footprint of ``favas_fused_pallas`` computed from
     the declared BlockSpec shapes (inputs + outputs + scratch). For the
     tiled path (n > client_tile) this is independent of both n and D —
-    the property that lets the engine scale to thousands of clients."""
+    the property that lets the engine scale to thousands of clients.
+
+    ``codec_bits`` > 0 accounts the CODES-IN progress operand instead of a
+    dense row block: a bit-packed (rows, tile*bits/8) uint8 codes block
+    plus a (rows, 1) f32 scale block — the codec term of docs/
+    architecture.md §10. At n=1024/fp32/bits=8 the total stays ~1.1 MiB
+    (vs 1.29 MiB for the dense-progress operand), pinned < 2 MiB by
+    tests/test_quant_fused.py."""
+    if progress and codec_bits:
+        raise ValueError("progress and codec_bits are mutually exclusive")
     itemsize = jnp.dtype(dtype).itemsize
     rows = min(n, client_tile)
     row_block = rows * tile * itemsize          # clients / inits / progress
@@ -101,6 +112,9 @@ def fused_block_vmem_bytes(n: int, dtype, *, progress: bool = False,
     n_row_in = 3 if progress else 2
     total = (srv_block + n_row_in * row_block + 2 * scalar_block  # inputs
              + srv_block + 2 * row_block)                         # outputs
+    if codec_bits:
+        total += rows * tile * codec_bits // 8  # packed progress codes
+        total += rows * 4                       # (rows, 1) f32 scale block
     if n > client_tile:
         total += 2 * tile * 4                   # f32 acc + new-server scratch
     return total
@@ -267,13 +281,39 @@ def _fused_kernel_prog(server_ref, clients_ref, inits_ref, prog_ref, alpha_ref,
     ini_out_ref[...] = (m * s_new + (1.0 - m) * i).astype(ini_out_ref.dtype)
 
 
+def _fused_kernel_codes(server_ref, clients_ref, inits_ref, codes_ref,
+                        pscale_ref, alpha_ref, mask_ref, srv_out_ref,
+                        cli_out_ref, ini_out_ref, *, s1: float, bits: int):
+    """CODES-IN FAVAS[QNN] variant: the transmitted progress arrives as a
+    bit-packed (n, T*bits/8) uint8 block + (n, 1) f32 scales and is
+    dequantized HERE, inside the VMEM pass — ``msg_i = init_i +
+    dequant(code_i) / alpha_i`` — so the dense (n, D) f32 progress buffer
+    never exists. Resets keep the client's own full-precision state
+    (quantization is communication-only, paper Remark 1)."""
+    c = clients_ref[...].astype(jnp.float32)          # (n, T)
+    i = inits_ref[...].astype(jnp.float32)            # (n, T)
+    a = alpha_ref[...].astype(jnp.float32)            # (n, 1)
+    m = mask_ref[...].astype(jnp.float32)             # (n, 1)
+    p = dequant_block(codes_ref[...],
+                      pscale_ref[...].astype(jnp.float32), bits)
+    msg = i + p / a
+    total = jnp.sum(m * msg, axis=0, keepdims=True)   # (1, T)
+    s_new = (server_ref[...].astype(jnp.float32) + total) / s1
+    srv_out_ref[...] = s_new.astype(srv_out_ref.dtype)
+    cli_out_ref[...] = (m * s_new + (1.0 - m) * c).astype(cli_out_ref.dtype)
+    ini_out_ref[...] = (m * s_new + (1.0 - m) * i).astype(ini_out_ref.dtype)
+
+
 def _fused_kernel_tiled(server_ref, clients_ref, inits_ref, alpha_ref,
                         mask_ref, srv_out_ref, cli_out_ref, ini_out_ref,
                         acc_ref, snew_ref, *, s1: float, n_blocks: int,
-                        has_progress: bool, prog_ref=None):
+                        has_progress: bool, prog_ref=None,
+                        codes_ref=None, pscale_ref=None, bits: int = 0):
     """Two-phase sweep over (CLIENT_TILE, TILE) client blocks — see the
-    module docstring for the schedule. ``prog_ref`` is bound (via
-    functools.partial from the dispatcher) only for the FAVAS[QNN] variant."""
+    module docstring for the schedule. ``prog_ref`` is bound (via the
+    dispatcher's wrapper kernel) only for the dense FAVAS[QNN] variant;
+    ``codes_ref``/``pscale_ref`` only for the codes-in variant, which
+    dequantizes the packed progress block in-VMEM during phase 0."""
     j = pl.program_id(1)
     c = clients_ref[...].astype(jnp.float32)          # (CT, T)
     i = inits_ref[...].astype(jnp.float32)            # (CT, T)
@@ -282,7 +322,13 @@ def _fused_kernel_tiled(server_ref, clients_ref, inits_ref, alpha_ref,
     @pl.when(j < n_blocks)
     def _accumulate():
         a = alpha_ref[...].astype(jnp.float32)        # (CT, 1)
-        p = (prog_ref[...].astype(jnp.float32) if has_progress else c - i)
+        if has_progress:
+            p = prog_ref[...].astype(jnp.float32)
+        elif codes_ref is not None:
+            p = dequant_block(codes_ref[...],
+                              pscale_ref[...].astype(jnp.float32), bits)
+        else:
+            p = c - i
         msg = i + p / a
         part = jnp.sum(m * msg, axis=0, keepdims=True)
 
@@ -313,28 +359,59 @@ def _fused_kernel_tiled(server_ref, clients_ref, inits_ref, alpha_ref,
 
 
 def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
-                       *, progress=None, client_tile: int | None = None,
+                       *, progress=None, progress_codes=None,
+                       progress_bits: int = 0, progress_shards: int = 1,
+                       client_tile: int | None = None,
                        interpret: bool = True):
     """Fused aggregation + selected-client reset over flat buffers.
 
     server: (D,) f32/bf16; clients/inits: (n, D); alpha/mask: (n,).
     ``progress``: optional (n, D) explicit transmitted progress (e.g. LUQ-
     quantized client deltas); None means progress = clients - inits,
-    computed in-kernel. Client resets always use ``clients`` (full
-    precision) — ``progress`` affects only the transmitted message.
+    computed in-kernel. ``progress_codes`` (mutually exclusive): the
+    transmitted progress as ``{"codes": (n, D*bits/8) uint8, "scale":
+    (n, shards) f32}`` — dequantized INSIDE the per-tile VMEM pass, so the
+    dense (n, D) f32 progress never materializes; ``progress_bits`` is the
+    LUQ width, ``progress_shards`` the per-row scale count (shard segments
+    must be TILE-aligned when > 1 — guaranteed on the engine path by the
+    per-shard lane padding). Client resets always use ``clients`` (full
+    precision) — both progress forms affect only the transmitted message.
     ``client_tile``: sublane rows per client block (default CLIENT_TILE);
     n <= client_tile keeps the whole client axis resident in one block.
     Returns (server_new (D,), clients_new (n, D), inits_new (n, D))."""
     n, D = clients.shape
     ct = client_tile or CLIENT_TILE
     pad = (-D) % TILE
+    codes = pscale = None
+    bits = progress_bits
+    if progress_codes is not None:
+        if progress is not None:
+            raise ValueError("progress and progress_codes are mutually "
+                             "exclusive")
+        if bits not in (2, 4, 8):
+            raise ValueError(f"progress_bits must be 2, 4 or 8 (got {bits})")
+        if D % progress_shards:
+            raise ValueError(f"D={D} does not divide into "
+                             f"{progress_shards} shards")
+        if progress_shards > 1 and (D // progress_shards) % TILE:
+            raise ValueError(
+                f"codes-in progress needs TILE-aligned shard segments "
+                f"(D={D}, shards={progress_shards}, tile={TILE})")
+        codes, pscale = progress_codes["codes"], progress_codes["scale"]
     if pad:
         server = jnp.pad(server, (0, pad))
         clients = jnp.pad(clients, ((0, 0), (0, pad)))
         inits = jnp.pad(inits, ((0, 0), (0, pad)))
         if progress is not None:
             progress = jnp.pad(progress, ((0, 0), (0, pad)))
+        if codes is not None:
+            # zero codes decode to exact zeros — the padded lanes transmit
+            # nothing, matching the zero-padded dense operands
+            codes = jnp.pad(codes, ((0, 0), (0, pad * bits // 8)))
     Dp = D + pad
+    # lane tiles per shard segment: the (rows, 1) scale block for lane tile
+    # i sits at column i // seg_tiles (shards == 1 makes this column 0)
+    seg_tiles = (Dp // progress_shards) // TILE if codes is not None else 1
 
     if n <= ct:                                   # whole client axis resident
         alphac = jnp.maximum(alpha.astype(jnp.float32), 1e-9).reshape(n, 1)
@@ -342,7 +419,18 @@ def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
         row_spec = pl.BlockSpec((n, TILE), lambda i: (0, i))
         scalar_spec = pl.BlockSpec((n, 1), lambda i: (0, 0))
         srv_spec = pl.BlockSpec((1, TILE), lambda i: (0, i))
-        if progress is None:
+        if codes is not None:
+            kernel = functools.partial(_fused_kernel_codes,
+                                       s1=float(s) + 1.0, bits=bits)
+            in_specs = [srv_spec, row_spec, row_spec,
+                        pl.BlockSpec((n, TILE * bits // 8),
+                                     lambda i: (0, i)),
+                        pl.BlockSpec((n, 1),
+                                     lambda i: (0, i // seg_tiles)),
+                        scalar_spec, scalar_spec]
+            operands = (server.reshape(1, Dp), clients, inits, codes,
+                        pscale, alphac, maskc)
+        elif progress is None:
             kernel = functools.partial(_fused_kernel, s1=float(s) + 1.0)
             in_specs = [srv_spec, row_spec, row_spec, scalar_spec, scalar_spec]
             operands = (server.reshape(1, Dp), clients, inits, alphac, maskc)
@@ -366,8 +454,9 @@ def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
         )(*operands)
         return srv.reshape(Dp)[:D], cli[:, :D], ini[:, :D]
 
-    npad, (clients, inits, progress), alpha, mask = _pad_clients(
-        n, ct, (clients, inits, progress), alpha, mask)
+    npad, (clients, inits, progress, codes, pscale), alpha, mask = \
+        _pad_clients(n, ct, (clients, inits, progress, codes, pscale),
+                     alpha, mask)
     nb = npad // ct
     alphac = jnp.maximum(alpha.astype(jnp.float32), 1e-9).reshape(npad, 1)
     maskc = mask.astype(jnp.float32).reshape(npad, 1)
@@ -375,7 +464,29 @@ def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
     row_spec = pl.BlockSpec((ct, TILE), lambda i, j: (j % nb, i))
     scalar_spec = pl.BlockSpec((ct, 1), lambda i, j: (j % nb, 0))
     srv_spec = pl.BlockSpec((1, TILE), lambda i, j: (0, i))
-    if progress is None:
+    if codes is not None:
+        # bind codes/scale as trailing positional refs via a wrapper (same
+        # pattern as the dense-progress variant below)
+        def kernel(server_ref, clients_ref, inits_ref, codes_ref, pscale_ref,
+                   alpha_ref, mask_ref, srv_out_ref, cli_out_ref, ini_out_ref,
+                   acc_ref, snew_ref):
+            return _fused_kernel_tiled(
+                server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
+                srv_out_ref, cli_out_ref, ini_out_ref, acc_ref, snew_ref,
+                s1=float(s) + 1.0, n_blocks=nb, has_progress=False,
+                codes_ref=codes_ref, pscale_ref=pscale_ref, bits=bits)
+        # codes are only read in phase 0 — clamp the block index at the last
+        # phase-0 block so phase 1 never re-fetches them (see prog_spec)
+        codes_spec = pl.BlockSpec(
+            (ct, TILE * bits // 8),
+            lambda i, j: (jnp.minimum(j, nb - 1), i))
+        pscale_spec = pl.BlockSpec(
+            (ct, 1), lambda i, j: (jnp.minimum(j, nb - 1), i // seg_tiles))
+        in_specs = [srv_spec, row_spec, row_spec, codes_spec, pscale_spec,
+                    scalar_spec, scalar_spec]
+        operands = (server.reshape(1, Dp), clients, inits, codes, pscale,
+                    alphac, maskc)
+    elif progress is None:
         kernel = functools.partial(_fused_kernel_tiled, s1=float(s) + 1.0,
                                    n_blocks=nb, has_progress=False)
         in_specs = [srv_spec, row_spec, row_spec, scalar_spec, scalar_spec]

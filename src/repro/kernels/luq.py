@@ -1,12 +1,26 @@
-"""Pallas TPU kernel: LUQ logarithmic unbiased quantization (FAVAS[QNN],
+"""Pallas TPU kernels: LUQ logarithmic unbiased quantization (FAVAS[QNN],
 paper Remark 1 / Chmiel et al. 2021).
 
-Fuses threshold + stochastic prune + log2 + stochastic exponent rounding +
-dequant in one VMEM pass over (8*R, 128*C)-aligned tiles. The global scale
-(max |x|) is a cheap separate reduction; the uniform random fields are
-passed in as inputs so CPU interpret-mode tests are bit-identical to the
-jnp oracle (a production TPU build would draw them on-chip with
-``pltpu.prng_random_bits`` — noted in DESIGN.md §7).
+Three kernels share the LUQ math (threshold + stochastic prune + log2 +
+stochastic exponent rounding) in one VMEM pass over (8, 128)-aligned tiles:
+
+* ``luq_pallas`` — the original dequantized-value variant (x -> Q(x)),
+  used by ``ops.luq_quantize`` for the transmitted-progress path.
+* ``luq_encode_pallas`` — code-EMITTING variant: x + uniforms -> bit-packed
+  uint8 codes + per-(row, shard) f32 scales, bit-identical to
+  ``core.paging.luq_encode_rows`` under the same uniforms. The pack runs
+  in-kernel (strided lane slices + shifts) so the stored representation
+  never leaves VMEM wider than ``bits/8`` bytes per element.
+* ``luq_decode_pallas`` — code-CONSUMING inverse, bit-identical to
+  ``core.paging.luq_decode_rows``.
+
+Scales are cheap separate reductions; the uniform random fields are passed
+in as inputs so CPU interpret-mode tests are bit-identical to the jnp
+oracle (a production TPU build would draw them on-chip with
+``pltpu.prng_random_bits`` — noted in DESIGN.md §7). The scale guard is
+shared with ``core.quant.luq_scale``: all-zero segments map to 1.0, a NaN
+max PROPAGATES (decode of such a row is loudly non-finite, never silently
+finite — pinned by tests/test_quant_codec.py).
 """
 from __future__ import annotations
 
@@ -17,14 +31,62 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 ROWS, COLS = 256, 1024  # (sublane, lane) tile — multiples of (8, 128)
+ENC_ROWS = 8            # codec kernels: sublane rows per block
+ENC_TILE = 512          # codec kernels: lane tile; 512*bits/8 >= 128 packed
+
+
+def guard_scale(scale):
+    """Shared LUQ scale guard: zero -> 1.0 (exact-zero segments decode to
+    exact zeros), positive/Inf pass through, NaN PROPAGATES (a poisoned
+    segment must decode loudly non-finite, not quantize against 1.0)."""
+    return jnp.where(jnp.isnan(scale), scale,
+                     jnp.where(scale > 0, scale, 1.0))
+
+
+def pack_block(codes, bits: int):
+    """In-kernel bit pack: (R, C) int32 codes < 2**bits -> (R, C*bits/8)
+    uint8, LSB-first — the layout of ``core.paging.pack_codes``. Strided
+    lane slices + shifts only; C must divide by 8//bits."""
+    k = 8 // bits
+    if k == 1:
+        return codes.astype(jnp.uint8)
+    packed = codes[:, 0::k]
+    for i in range(1, k):
+        packed = packed | (codes[:, i::k] << (i * bits))
+    return packed.astype(jnp.uint8)
+
+
+def unpack_block(packed, bits: int):
+    """In-kernel inverse of :func:`pack_block`: (R, P) uint8 -> (R, P*8/
+    bits) int32 codes, via a k-fold lane repeat + per-lane shift (iota)."""
+    k = 8 // bits
+    c = packed.astype(jnp.int32)
+    if k == 1:
+        return c
+    rep = jnp.repeat(c, k, axis=1)
+    sub = jax.lax.broadcasted_iota(jnp.int32, rep.shape, 1) % k
+    return (rep >> (sub * bits)) & ((1 << bits) - 1)
+
+
+def dequant_block(packed, scale, bits: int):
+    """In-kernel LUQ dequant of a packed uint8 block against (R, 1) f32
+    scales -> (R, P*8/bits) f32 values. The same expressions (and float-op
+    order) as ``core.paging.luq_decode_rows``, so interpret-mode output is
+    bit-identical to the jnp oracle."""
+    levels = 2 ** (bits - 1) - 1
+    codes = unpack_block(packed, bits)
+    midx = codes & ((1 << (bits - 1)) - 1)
+    sign = (codes >> (bits - 1)).astype(jnp.float32)
+    q = jnp.where(midx == 0, 0.0,
+                  jnp.exp2(midx.astype(jnp.float32) - levels))
+    return ((1.0 - 2.0 * sign) * q) * scale
 
 
 def _luq_kernel(x_ref, up_ref, ur_ref, scale_ref, out_ref, *, levels: int):
     x = x_ref[...].astype(jnp.float32)
     up = up_ref[...].astype(jnp.float32)
     ur = ur_ref[...].astype(jnp.float32)
-    scale = scale_ref[0, 0].astype(jnp.float32)
-    scale = jnp.where(scale > 0, scale, 1.0)
+    scale = guard_scale(scale_ref[0, 0].astype(jnp.float32))
     sign = jnp.sign(x)
     m = jnp.abs(x) / scale
     min_level = 2.0 ** (-(levels - 1))
@@ -77,3 +139,129 @@ def luq_pallas(x, u_prune, u_round, bits: int, *, interpret: bool = True):
         interpret=interpret,
     )(x2, up2, ur2, scale)
     return out.reshape(-1)[:D].reshape(orig_shape)
+
+
+# ---------------------------------------------------------------------------
+# Code-emitting / code-consuming codec kernels (paged cold path + the
+# codes-in fused round). Math mirrors core.paging.luq_encode_rows /
+# luq_decode_rows expression-for-expression: under shared uniforms the
+# interpret-mode output is BIT-IDENTICAL to the jnp oracle (pinned by
+# tests/test_quant_codec.py / tests/test_quant_fused.py).
+# ---------------------------------------------------------------------------
+
+def _codec_tile(seg: int, k: int):
+    """Lane tile for the codec grid: ``ENC_TILE`` when the per-shard
+    segment is tile-aligned (always true on the engine path, where shard
+    segments are multiples of the 2048-lane kernel tile), else the whole
+    segment — an interpret-mode validation shape, not a TPU layout."""
+    if seg % k:
+        raise ValueError(f"segment width {seg} does not divide into "
+                         f"{8 // k}-bit groups of {k}")
+    return ENC_TILE if seg % ENC_TILE == 0 else seg
+
+
+def _luq_encode_kernel(x_ref, up_ref, ur_ref, scale_ref, out_ref,
+                       *, levels: int, bits: int):
+    x = x_ref[...].astype(jnp.float32)
+    up = up_ref[...].astype(jnp.float32)
+    ur = ur_ref[...].astype(jnp.float32)
+    scale = scale_ref[...].astype(jnp.float32)        # (R, 1), pre-guarded
+    m = jnp.abs(x) / scale
+    min_level = 2.0 ** (-(levels - 1))
+    below = m < min_level
+    keep = up < (m / min_level)
+    m_pruned = jnp.where(below, jnp.where(keep, min_level, 0.0), m)
+    e = jnp.floor(jnp.log2(jnp.maximum(m_pruned, min_level)))
+    f = m_pruned / jnp.exp2(e)
+    e_hat = jnp.clip(e + (ur < (f - 1.0)).astype(jnp.float32),
+                     -(levels - 1), 0.0)
+    midx = jnp.where(m_pruned == 0.0, 0, (e_hat + levels).astype(jnp.int32))
+    sign = (x < 0).astype(jnp.int32)
+    out_ref[...] = pack_block((sign << (bits - 1)) | midx, bits)
+
+
+def _luq_decode_kernel(codes_ref, scale_ref, out_ref, *, bits: int):
+    scale = scale_ref[...].astype(jnp.float32)        # (R, 1)
+    v = dequant_block(codes_ref[...], scale, bits)
+    out_ref[...] = v.astype(out_ref.dtype)
+
+
+def luq_encode_pallas(x, u_prune, u_round, bits: int, *, shards: int = 1,
+                      interpret: bool = True):
+    """LUQ-encode (rows, D) to bit-packed codes + per-(row, shard) scales.
+
+    The kernel-path twin of ``core.paging.luq_encode_rows``: given the SAME
+    (rows, D) uniform fields it emits bit-identical packed codes and
+    scales. The per-(row, shard) max-|x| scale is a cheap jnp reduction
+    (identical to the oracle's); all elementwise math and the bit pack run
+    in one VMEM pass per (8, tile) block, with the scale riding a (8, 1)
+    block indexed by ``lane_tile // tiles_per_shard``."""
+    levels = 2 ** (bits - 1) - 1
+    rows, D = x.shape
+    if D % shards:
+        raise ValueError(f"D={D} does not divide into {shards} shards")
+    seg = D // shards
+    tile = _codec_tile(seg, 8 // bits)
+    seg_tiles = seg // tile
+    xf = x.astype(jnp.float32)
+    scale = guard_scale(jnp.max(jnp.abs(xf.reshape(rows, shards, seg)),
+                                axis=2))
+    rpad = (-rows) % ENC_ROWS
+    up = u_prune.astype(jnp.float32)
+    ur = u_round.astype(jnp.float32)
+    scale_p = scale
+    if rpad:
+        xf = jnp.pad(xf, ((0, rpad), (0, 0)))
+        up = jnp.pad(up, ((0, rpad), (0, 0)))
+        ur = jnp.pad(ur, ((0, rpad), (0, 0)))
+        scale_p = jnp.pad(scale, ((0, rpad), (0, 0)), constant_values=1.0)
+    rp = rows + rpad
+    packed = pl.pallas_call(
+        functools.partial(_luq_encode_kernel, levels=levels, bits=bits),
+        grid=(rp // ENC_ROWS, D // tile),
+        in_specs=[
+            pl.BlockSpec((ENC_ROWS, tile), lambda i, c: (i, c)),
+            pl.BlockSpec((ENC_ROWS, tile), lambda i, c: (i, c)),
+            pl.BlockSpec((ENC_ROWS, tile), lambda i, c: (i, c)),
+            pl.BlockSpec((ENC_ROWS, 1), lambda i, c: (i, c // seg_tiles)),
+        ],
+        out_specs=pl.BlockSpec((ENC_ROWS, tile * bits // 8),
+                               lambda i, c: (i, c)),
+        out_shape=jax.ShapeDtypeStruct((rp, D * bits // 8), jnp.uint8),
+        interpret=interpret,
+    )(xf, up, ur, scale_p)
+    return {"codes": packed[:rows], "scale": scale}
+
+
+def luq_decode_pallas(enc, bits: int, dtype, *, shards: int = 1,
+                      interpret: bool = True):
+    """Inverse of :func:`luq_encode_pallas` -> (rows, D) in ``dtype``;
+    bit-identical to ``core.paging.luq_decode_rows`` on the same encoding.
+    The unpack + dequant run in one VMEM pass per packed block."""
+    codes, scale = enc["codes"], enc["scale"]
+    rows, W = codes.shape
+    k = 8 // bits
+    D = W * k
+    if D % shards:
+        raise ValueError(f"D={D} does not divide into {shards} shards")
+    seg = D // shards
+    tile = _codec_tile(seg, k)
+    seg_tiles = seg // tile
+    rpad = (-rows) % ENC_ROWS
+    scale_p = scale
+    if rpad:
+        codes = jnp.pad(codes, ((0, rpad), (0, 0)))
+        scale_p = jnp.pad(scale, ((0, rpad), (0, 0)), constant_values=1.0)
+    rp = rows + rpad
+    out = pl.pallas_call(
+        functools.partial(_luq_decode_kernel, bits=bits),
+        grid=(rp // ENC_ROWS, D // tile),
+        in_specs=[
+            pl.BlockSpec((ENC_ROWS, tile * bits // 8), lambda i, c: (i, c)),
+            pl.BlockSpec((ENC_ROWS, 1), lambda i, c: (i, c // seg_tiles)),
+        ],
+        out_specs=pl.BlockSpec((ENC_ROWS, tile), lambda i, c: (i, c)),
+        out_shape=jax.ShapeDtypeStruct((rp, D), jnp.dtype(dtype)),
+        interpret=interpret,
+    )(codes, scale_p)
+    return out[:rows]

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.favas_agg import favas_agg_pallas, favas_fused_pallas
-from repro.kernels.luq import luq_pallas
+from repro.kernels.luq import (luq_decode_pallas, luq_encode_pallas,
+                               luq_pallas)
 
 
 def _is_tpu() -> bool:
@@ -21,8 +22,9 @@ def _is_tpu() -> bool:
 
 
 def favas_fused_flat(server, clients, inits, alpha, mask, s: float,
-                     *, progress=None, client_tile=None, n_logical=None,
-                     use_kernel=None):
+                     *, progress=None, progress_codes=None,
+                     progress_bits: int = 0, progress_shards: int = 1,
+                     client_tile=None, n_logical=None, use_kernel=None):
     """Fused full-round aggregation + reset over flat buffers; see
     kernels/favas_agg.py. Returns (server_new, clients_new, inits_new).
 
@@ -36,6 +38,15 @@ def favas_fused_flat(server, clients, inits, alpha, mask, s: float,
         LUQ-quantized client deltas); None means ``clients - inits``,
         computed inside. Resets always use full-precision ``clients`` —
         quantization is communication-only (paper Remark 1).
+      progress_codes: the CODES-IN variant of ``progress`` (mutually
+        exclusive with it): a ``{"codes": (n, D*bits/8) uint8, "scale":
+        (n, shards) f32}`` encoding from ``cold_requant_rows``. The kernel
+        path dequantizes per VMEM tile (``msg_i = init_i + dequant(code_i)
+        / alpha_i``) so the dense (n, D) f32 progress never materializes;
+        the oracle path decodes with ``core.paging.luq_decode_rows`` and
+        runs the dense reference — element-identical by construction.
+      progress_bits / progress_shards: LUQ width and per-row scale count
+        of ``progress_codes``.
       client_tile: client-axis tile for the kernel path (the jnp oracle is
         shape-agnostic and ignores it).
       n_logical: real client rows when the buffers carry client-tile
@@ -52,12 +63,25 @@ def favas_fused_flat(server, clients, inits, alpha, mask, s: float,
     ``core.round_engine.fused_bucket_update`` — it wraps the kernel path in
     ``shard_map`` over per-shard flat slices and pins the oracle path's
     output shardings, so sharded buckets never gather."""
+    if progress is not None and progress_codes is not None:
+        raise ValueError("progress and progress_codes are mutually exclusive")
     if use_kernel is None:
         use_kernel = _is_tpu()
     if use_kernel:
         return favas_fused_pallas(server, clients, inits, alpha, mask, s,
-                                  progress=progress, client_tile=client_tile,
+                                  progress=progress,
+                                  progress_codes=progress_codes,
+                                  progress_bits=progress_bits,
+                                  progress_shards=progress_shards,
+                                  client_tile=client_tile,
                                   interpret=not _is_tpu())
+    if progress_codes is not None:
+        # oracle: decode to dense f32 and run the reference — decode is
+        # row-elementwise, so slice-then-decode == decode-then-slice and
+        # the n_logical handling below stays exact
+        from repro.core.paging import luq_decode_rows   # lazy: no cycle
+        progress = luq_decode_rows(progress_codes, progress_bits,
+                                   jnp.float32, shards=progress_shards)
     rows = clients.shape[0]
     nl = rows if n_logical is None else n_logical
     if nl < rows:
@@ -102,13 +126,22 @@ def cold_requant_rows(x, bits: int, key, *, shards: int = 1,
     prune/round as ``luq_pallas``/``luq_ref``, emitting codes instead of
     dequantized floats).
 
-    ``use_kernel`` mirrors the fused-aggregation dispatch knob: the Pallas
-    LUQ kernel produces dequantized values, not packed codes, so BOTH
-    settings currently run the jnp expression — on the hot path it sits
-    directly before the cold-pool scatter and XLA fuses the pack into the
-    scatter's producer. A code-emitting Pallas kernel can slot in here
-    without touching the engine."""
-    del use_kernel
+    ``use_kernel`` follows the ``favas_fused_flat`` dispatch contract:
+    None picks the code-emitting Pallas kernel (``kernels.luq.
+    luq_encode_pallas``) on TPU and the jnp oracle elsewhere; True forces
+    the kernel (interpret mode off-TPU — a validation tool, not a fast
+    path); False forces the oracle. Both paths draw the SAME (rows, D)
+    uniform fields from ``key`` and are bit-identical (pinned by
+    tests/test_quant_fused.py — this dispatch used to be a silent no-op)."""
+    if use_kernel is None:
+        use_kernel = _is_tpu()
+    if use_kernel:
+        k1, k2 = jax.random.split(key)
+        rows, D = x.shape
+        up = jax.random.uniform(k1, (rows, D))
+        ur = jax.random.uniform(k2, (rows, D))
+        return luq_encode_pallas(x, up, ur, bits, shards=shards,
+                                 interpret=not _is_tpu())
     from repro.core.paging import luq_encode_rows   # lazy: no import cycle
     return luq_encode_rows(x, bits, key, shards=shards)
 
@@ -117,8 +150,13 @@ def cold_dequant_rows(enc, bits: int, dtype, *, shards: int = 1,
                       use_kernel=None):
     """Paged-engine PROMOTION path: decode cold-pool rows gathered for the
     new hot working set back to (rows, D) in ``dtype``. Inverse of
-    :func:`cold_requant_rows`; fused by XLA into the gather's consumer."""
-    del use_kernel
+    :func:`cold_requant_rows`, same ``use_kernel`` contract (the Pallas
+    path is ``kernels.luq.luq_decode_pallas``)."""
+    if use_kernel is None:
+        use_kernel = _is_tpu()
+    if use_kernel:
+        return luq_decode_pallas(enc, bits, dtype, shards=shards,
+                                 interpret=not _is_tpu())
     from repro.core.paging import luq_decode_rows   # lazy: no import cycle
     return luq_decode_rows(enc, bits, dtype, shards=shards)
 

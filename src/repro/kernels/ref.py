@@ -52,7 +52,10 @@ def luq_ref(x, u_prune, u_round, scale, bits: int):
     xf = x.astype(jnp.float32)
     sign = jnp.sign(xf)
     mag = jnp.abs(xf)
-    scale = jnp.where(scale > 0, scale, 1.0).astype(jnp.float32)
+    # shared guard (core.quant.luq_scale semantics): zero -> 1.0, NaN
+    # propagates — see kernels/luq.py::guard_scale
+    from repro.kernels.luq import guard_scale
+    scale = guard_scale(scale).astype(jnp.float32)
     m = mag / scale
     min_level = 2.0 ** (-(levels - 1))
     below = m < min_level

@@ -112,6 +112,36 @@ def collective_ops(hlo_text: str) -> List[Tuple[str, int]]:
     return out
 
 
+def dense_materializations(hlo_text: str, *, rows: int, min_cols: int = 128,
+                           dtypes: Tuple[str, ...] = ("f32", "bf16")
+                           ) -> List[Tuple[str, str, Tuple[int, ...]]]:
+    """Census of full-precision (rows, >=min_cols, ...) arrays DEFINED
+    anywhere in an HLO text — the quantized-transport acceptance gate
+    (docs/architecture.md §10, tests/test_quant_fused.py).
+
+    A compiled codes-in round must never materialize the transmitted
+    progress (or a cold pool) as a dense float array over the full client
+    population: every op whose output is ``f32/bf16[rows, C>=min_cols,
+    ...]`` is returned as ``(op_name, dtype, dims)``. ``rows`` is the
+    population being gated (n for the whole round, s_max for the isolated
+    cold promote/evict cycle); ``min_cols`` filters out (rows,)-shaped
+    bookkeeping vectors and (rows, 1) scale columns, which are legitimate
+    full-precision residents. uint8 code buffers at any shape pass — they
+    ARE the storage format."""
+    out = []
+    for ln in hlo_text.splitlines():
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        name, dtype, dims = m.groups()
+        if dtype not in dtypes or not dims.strip():
+            continue
+        d = tuple(int(x) for x in dims.split(","))
+        if len(d) >= 2 and d[0] == rows and max(d[1:]) >= min_cols:
+            out.append((name, dtype, d))
+    return out
+
+
 def parse_hlo_collectives(hlo_text: str, *, bf16_dot_comms: bool = False) -> Dict:
     """Trip-count-aware collective byte accounting (per-device program).
 

@@ -60,6 +60,14 @@ def build_cli():
     ap.add_argument("--reweight", default="stochastic",
                     choices=["stochastic", "deterministic"])
     ap.add_argument("--quant-bits", type=int, default=0)
+    ap.add_argument("--quant-fused", action="store_true",
+                    help="with --quant-bits > 0: transport the FAVAS[QNN] "
+                         "progress as bit-packed LUQ codes + per-(row, "
+                         "shard) scales all the way into the fused round "
+                         "(dequantized per VMEM tile, no dense (n, D) f32 "
+                         "progress buffer — docs/architecture.md §10); "
+                         "default quantizes per leaf and hands the kernel "
+                         "a dense dequantized buffer")
     ap.add_argument("--rounds-per-step", type=int, default=1,
                     help="rounds per superstep dispatch: T > 1 scans T "
                          "server rounds on-device in ONE jitted call "
@@ -140,7 +148,8 @@ def run(args):
     engine = RoundEngine(params, fcfg, lfn, lambdas=lambdas,
                          det_alpha=det_alpha, use_kernel=use_kernel,
                          mesh=mesh, residency=args.residency,
-                         s_max=args.s_max, cold_bits=args.cold_bits)
+                         s_max=args.s_max, cold_bits=args.cold_bits,
+                         quant_fused=args.quant_fused)
     if args.residency == "paged":
         print(f"residency: paged (s_max={engine.spec.s_max} hot rows, "
               f"cold codec {engine.spec.cold_codec})")

@@ -16,7 +16,13 @@ LUQ codes; this file pins the codec down:
 * the grid is unbiased in expectation (stochastic prune + stochastic
   exponent rounding), the property FAVAS[QNN]'s analysis needs (Remark 1);
 * per-(row, shard) scales are shard-local maxima, and the pair codec
-  (init + progress-vs-decoded-init) reconstructs within the composed bound.
+  (init + progress-vs-decoded-init) reconstructs within the composed bound;
+* the shared scale guard (``kernels.luq.guard_scale``) maps zero to 1.0,
+  passes positive/+Inf through, and PROPAGATES NaN — a poisoned row decodes
+  loudly non-finite while its per-row scale isolates the finite neighbours;
+* the code-emitting Pallas kernels (``kernels.luq``) are a bijection
+  through the in-kernel pack/unpack and bit-identical to this oracle for
+  bits x shards, including the {1, 8}-shard scale layouts.
 """
 import jax
 import jax.numpy as jnp
@@ -215,6 +221,106 @@ def test_luq_codec_validates_bits():
         LuqCodec(bits=3)
     assert paging.make_codec(0) == PassthroughCodec()
     assert paging.make_codec(4) == LuqCodec(bits=4)
+
+
+# ---------------------------------------------------------------------------
+# The shared scale guard: zero -> 1.0, Inf passes, NaN propagates
+# ---------------------------------------------------------------------------
+
+def test_guard_scale_pins():
+    from repro.kernels.luq import guard_scale
+    s = np.asarray(guard_scale(jnp.asarray(
+        [0.0, -0.0, 2.5, np.inf, np.nan], jnp.float32)))
+    assert s[0] == 1.0 and s[1] == 1.0        # zero segments -> unit scale
+    assert s[2] == 2.5                        # positive passes through
+    assert np.isposinf(s[3])                  # +Inf passes through
+    assert np.isnan(s[4])                     # NaN PROPAGATES, never 1.0
+
+
+def test_nan_row_decodes_nonfinite_and_isolates_neighbours():
+    """A row whose max is NaN must decode loudly non-finite (never silently
+    quantize against scale 1.0), and the per-row scales must keep the
+    finite rows bit-identical to an encoding without the poisoned row."""
+    key = jax.random.PRNGKey(21)
+    x = np.asarray(_rows("normal", rows=5, seed=20))
+    xp = x.copy()
+    xp[2, 7] = np.nan
+    enc = luq_encode_rows(jnp.asarray(xp), 4, key)
+    assert np.isnan(np.asarray(enc["scale"])[2, 0])
+    dec = np.asarray(luq_decode_rows(enc, 4, jnp.float32))
+    assert not np.any(np.isfinite(dec[2])), \
+        "poisoned row decoded (partly) finite"
+    # same uniforms, same finite rows: codes and decodes coincide
+    enc_ok = luq_encode_rows(jnp.asarray(x), 4, key)
+    dec_ok = np.asarray(luq_decode_rows(enc_ok, 4, jnp.float32))
+    keep = [0, 1, 3, 4]
+    np.testing.assert_array_equal(np.asarray(enc["codes"])[keep],
+                                  np.asarray(enc_ok["codes"])[keep])
+    np.testing.assert_array_equal(dec[keep], dec_ok[keep])
+
+
+def test_inf_row_scale_passes_through():
+    """An Inf max passes the guard unchanged: the row's decode is driven by
+    the Inf scale (non-finite where codes are non-zero), and the finite
+    rows again stay isolated by their own scales."""
+    key = jax.random.PRNGKey(22)
+    x = np.asarray(_rows("normal", rows=4, seed=23))
+    xp = x.copy()
+    xp[1, 0] = np.inf
+    enc = luq_encode_rows(jnp.asarray(xp), 4, key)
+    assert np.isposinf(np.asarray(enc["scale"])[1, 0])
+    dec = np.asarray(luq_decode_rows(enc, 4, jnp.float32))
+    assert not np.all(np.isfinite(dec[1]))
+    enc_ok = luq_encode_rows(jnp.asarray(x), 4, key)
+    keep = [0, 2, 3]
+    np.testing.assert_array_equal(np.asarray(enc["codes"])[keep],
+                                  np.asarray(enc_ok["codes"])[keep])
+
+
+# ---------------------------------------------------------------------------
+# Kernel-path codec: in-kernel pack/unpack bijection + oracle parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", BITS)
+def test_kernel_pack_unpack_bijection(bits):
+    from repro.kernels.luq import pack_block, unpack_block
+    rng = np.random.default_rng(31 + bits)
+    codes = jnp.asarray(rng.integers(0, 2 ** bits, size=(8, 512)), jnp.int32)
+    packed = pack_block(codes, bits)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (8, 512 * bits // 8)
+    np.testing.assert_array_equal(np.asarray(unpack_block(packed, bits)),
+                                  np.asarray(codes))
+    # and the in-kernel layout IS the storage layout (core.paging)
+    np.testing.assert_array_equal(
+        np.asarray(packed),
+        np.asarray(pack_codes(codes.astype(jnp.uint8), bits)))
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("shards", [1, 8])
+def test_kernel_codec_bit_identical_to_oracle(bits, shards):
+    """``luq_encode_pallas``/``luq_decode_pallas`` (interpret mode) against
+    the jnp oracle under shared uniforms: identical packed codes, identical
+    per-(row, shard) scales, identical decodes — at rows=11 the kernel's
+    ENC_ROWS padding must not leak either."""
+    from repro.kernels.luq import luq_decode_pallas, luq_encode_pallas
+    rows, D = 11, 4096
+    x = _rows("normal", rows=rows, D=D, seed=40 + bits)
+    key = jax.random.PRNGKey(50 + bits + shards)
+    k1, k2 = jax.random.split(key)
+    up = jax.random.uniform(k1, (rows, D))
+    ur = jax.random.uniform(k2, (rows, D))
+    enc_k = luq_encode_pallas(x, up, ur, bits, shards=shards, interpret=True)
+    enc_o = luq_encode_rows(x, bits, key, shards=shards)
+    np.testing.assert_array_equal(np.asarray(enc_k["codes"]),
+                                  np.asarray(enc_o["codes"]))
+    np.testing.assert_array_equal(np.asarray(enc_k["scale"]),
+                                  np.asarray(enc_o["scale"]))
+    dec_k = luq_decode_pallas(enc_k, bits, jnp.float32, shards=shards,
+                              interpret=True)
+    dec_o = luq_decode_rows(enc_o, bits, jnp.float32, shards=shards)
+    np.testing.assert_array_equal(np.asarray(dec_k), np.asarray(dec_o))
 
 
 def test_ops_wrappers_are_the_codec_entry_points():

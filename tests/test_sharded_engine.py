@@ -443,6 +443,108 @@ def test_sharded_paged_luq_cold_pool_no_full_gather():
         f"{gathers} >= {cold_bytes}")
 
 
+@needs8
+def test_sharded_codes_in_progress_parity():
+    """Codes-in transport on the mesh (docs/architecture.md §10): the
+    transmitted progress reaches ``fused_bucket_update`` as packed LUQ
+    codes + per-(row, shard) scales. The oracle branch is element-EXACT vs
+    the ``luq_decode_rows`` -> ``favas_fused_ref`` composition (it IS that
+    composition, with output shardings pinned), and the shard_map +
+    interpret-Pallas codes-in branch — each device dequantizing its own
+    lane segment against its own scale column, no collectives — matches
+    within 2 fp32 ULPs of the per-lane accumulator magnitude (the
+    tests/test_quant_fused.py budget: in-VMEM dequant contraction plus the
+    client-reduction order)."""
+    from repro.core.paging import luq_decode_rows
+    from repro.kernels import ref
+    from repro.kernels.ops import cold_requant_rows
+    n, bits = 7, 4
+    mesh = make_model_mesh(8)
+    params = make_params(jnp.float32)
+    fcfg = FavasConfig(n_clients=n, s_selected=3, local_steps=1, eta=0.1,
+                       quant_bits=bits)
+    spec = round_engine.make_flat_spec(params, n_clients=n, mesh=mesh)
+    b = next(i for i in range(spec.n_buckets) if spec.shards(i) == 8)
+    key = jax.random.PRNGKey(0)
+    st = jax.device_put(round_engine.engine_init(spec, params, fcfg, key),
+                        round_engine.engine_sharding(spec, mesh))
+    rows, Dp = st.clients[b].shape
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    trained = st.clients[b] + 0.1 * jax.random.normal(ks[0], (rows, Dp))
+    alpha = jax.random.uniform(ks[1], (rows,), minval=1.0, maxval=8.0)
+    mask = jnp.where(jnp.arange(rows) < n,
+                     (jax.random.uniform(ks[2], (rows,)) > 0.5)
+                     .astype(jnp.float32), 0.0)
+    s = float(mask.sum())
+    delta = trained.astype(jnp.float32) - st.inits[b].astype(jnp.float32)
+    enc = cold_requant_rows(delta, bits, jax.random.PRNGKey(2),
+                            shards=8, use_kernel=False)
+    prog = luq_decode_rows(enc, bits, jnp.float32, shards=8)
+    want = ref.favas_fused_ref(st.server[b], trained, st.inits[b],
+                               alpha, mask, s, progress=prog)
+    got_o = round_engine.fused_bucket_update(
+        spec, b, st.server[b], trained, st.inits[b], alpha, mask, s,
+        progress_codes_b=enc, progress_bits=bits, mesh=mesh,
+        use_kernel=False)
+    for name, g, w in zip(("server", "clients", "inits"), got_o, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+    got_k = round_engine.fused_bucket_update(
+        spec, b, st.server[b], trained, st.inits[b], alpha, mask, s,
+        progress_codes_b=enc, progress_bits=bits, mesh=mesh,
+        use_kernel=True)
+    msg = (np.asarray(st.inits[b], np.float64)
+           + np.asarray(prog, np.float64)
+           / np.asarray(alpha, np.float64)[:, None])
+    acc = (np.abs(np.asarray(st.server[b], np.float64))
+           + np.sum(np.abs(np.asarray(mask, np.float64)[:, None] * msg),
+                    axis=0))
+    ulp = 2.0 * np.spacing(acc.astype(np.float32)) / (s + 1.0)
+    d = np.abs(np.asarray(got_k[0], np.float64)
+               - np.asarray(want[0], np.float64))
+    assert np.all(d <= ulp), float((d / ulp).max())
+    for g, w in zip(got_k[1:], want[1:]):
+        d = np.abs(np.asarray(g, np.float64) - np.asarray(w, np.float64))
+        assert np.all(d <= ulp[None, :]), float((d / ulp[None, :]).max())
+
+
+@needs8
+def test_sharded_engine_quant_fused_round():
+    """The full quant_fused round on the mesh: the per-bucket encodes use
+    shards=spec.shards(b) so both dispatch paths consume the SAME codes;
+    kernel vs oracle states agree to kernel-ULP level after two rounds,
+    and the compiled codes-in round still has no full-flat-buffer
+    all-gather — the codes and their scale columns stay shard-local."""
+    (mesh, params, fcfg, lambdas, spec_s, _spec_r,
+     st_o, _st_r, batch, key) = _setup(7, jnp.float32, quant_bits=4)
+    st_k = jax.device_put(round_engine.engine_init(spec_s, params, fcfg, key),
+                          round_engine.engine_sharding(spec_s, mesh))
+    step_o = jax.jit(functools.partial(
+        round_engine.engine_round, spec_s, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, mesh=mesh, use_kernel=False, quant_fused=True))
+    step_k = jax.jit(functools.partial(
+        round_engine.engine_round, spec_s, cfg=fcfg, loss_fn=quad_loss,
+        lambdas=lambdas, mesh=mesh, use_kernel=True, quant_fused=True))
+    for _ in range(2):
+        st_o, m_o = step_o(st_o, batch)
+        st_k, m_k = step_k(st_k, batch)
+    assert np.all(np.isfinite(np.asarray(m_o["loss"])))
+    for a, b in zip(st_o.server + st_o.clients, st_k.server + st_k.clients):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=1e-5, atol=1e-6)
+    from repro.launch.roofline import collective_ops
+    hlo = step_o.lower(st_o, batch).compile().as_text()
+    full_bytes = min(
+        p * jnp.dtype(dt).itemsize
+        for p, dt, S in zip(spec_s.bucket_padded, spec_s.bucket_dtypes,
+                            spec_s.bucket_shards) if S > 1)
+    gathers = [b for kind, b in collective_ops(hlo) if kind == "all-gather"]
+    assert all(b < full_bytes for b in gathers), (
+        f"full-buffer all-gather in the codes-in round: "
+        f"{gathers} >= {full_bytes}")
+
+
 def test_flat_spec_invariants_without_devices():
     """Sharding-aware layout metadata needs no devices: explicit shard_axes
     + model_shards give the same bucket structure tier-1 can verify."""
