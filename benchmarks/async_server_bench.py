@@ -1,0 +1,133 @@
+"""Async-server benchmark: the real ProcTransport deployment under
+injected latencies vs the deterministic simulated baseline
+(docs/architecture.md §11).
+
+Two runs of the SAME deployment config and fault plan:
+
+* **simulated** — :func:`repro.launch.cluster.run_inproc` on the
+  virtual-clock transport (the fl_sim-equivalent substrate). Its wall time
+  is pure compute: virtual rounds cost no wall-clock waiting, so its
+  rounds/sec is the ceiling the real deployment is paying scheduling +
+  IPC + injected latency against.
+* **real** — :func:`repro.launch.cluster.run_proc`: one OS process per
+  client over pipes, wall-clock round cadence ``round_dur``, the same
+  injected latency plan.
+
+Recorded per run: rounds/sec, the STALENESS DISTRIBUTION (the local-step
+count q of every admitted update — the eq. 3 alpha numerators), admitted /
+short-poll counts, and (real) per-child exit codes. The key
+sanity row: the two selection streams are identical (shared key chain) and
+the staleness distributions are close — real asynchrony reproduces the
+simulated clock's client-progress profile, not just its convergence.
+
+Results go to ``experiments/bench/async_server.json`` AND the repo-root
+``BENCH_async_server.json`` (the perf-trajectory file).
+
+  PYTHONPATH=src:. python benchmarks/async_server_bench.py [--full|--smoke]
+
+``--smoke`` (the CI ``async`` job) runs a 2-client 20-round deployment and
+exits non-zero unless every round completed, updates were admitted, and
+every child exited cleanly; smoke artifacts go to
+``async_server_smoke.json`` and never overwrite the canonical files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import save_artifact
+from repro.comms import FaultPlan
+from repro.launch.cluster import _smoke_data, run_inproc, run_proc
+from repro.launch.server import AsyncConfig
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _staleness_summary(staleness) -> dict:
+    q = np.asarray(staleness, np.float64)
+    if q.size == 0:
+        return {"count": 0}
+    return {"count": int(q.size), "mean": float(q.mean()),
+            "p50": float(np.percentile(q, 50)),
+            "p90": float(np.percentile(q, 90)),
+            "max": float(q.max()),
+            "hist": {str(int(v)): int(c) for v, c in
+                     zip(*np.unique(q.astype(np.int64),
+                                    return_counts=True))}}
+
+
+def _row(tag: str, result: dict, wall: float) -> dict:
+    res = result["server"]
+    return {"mode": tag,
+            "rounds": res["rounds"],
+            "wall_s": wall,
+            "rounds_per_sec": res["rounds"] / max(wall, 1e-9),
+            "admitted": res["stats"]["admitted"],
+            "short_polls": res["stats"]["short_polls"],
+            "late": res["stats"]["late"],
+            "final_accuracy": res["final_accuracy"],
+            "staleness": _staleness_summary(res["staleness"]),
+            "transport": result["transport"]}
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        clients, rounds, round_dur = 2, 20, 0.4
+    elif quick:
+        clients, rounds, round_dur = 3, 30, 0.4
+    else:
+        clients, rounds, round_dur = 4, 80, 0.5
+    s = max(1, clients // 2)
+    K = 4
+    cfg = AsyncConfig(n_clients=clients, s_selected=s, K=K, batch_size=16,
+                      rounds=rounds, round_dur=round_dur,
+                      fast_step_time=round_dur / K,
+                      slow_step_time=round_dur / 2.0, seed=0)
+    plan = FaultPlan(latency=0.02, jitter=0.01)
+    data = _smoke_data(clients, 0)
+
+    t0 = time.monotonic()
+    sim = run_inproc(cfg, data, d_hidden=16, plan=plan, seed=0)
+    sim_wall = time.monotonic() - t0
+    real = run_proc(cfg, data, d_hidden=16, plan=plan, seed=0)
+
+    out = {
+        "config": {"clients": clients, "selected": s, "K": K,
+                   "rounds": rounds, "round_dur": round_dur,
+                   "latency": plan.latency, "jitter": plan.jitter},
+        "simulated": _row("inproc", sim, sim_wall),
+        "real": _row("proc", real, real["wall_time"]),
+        "selection_identical": (sim["server"]["selection"]
+                                == real["server"]["selection"]),
+        "exitcodes": real["exitcodes"],
+        "clean": real["clean"],
+    }
+    name = "async_server_smoke" if smoke else "async_server"
+    save_artifact(name, out)
+    if not smoke:
+        with open(os.path.join(ROOT, "BENCH_async_server.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    smoke = "--smoke" in (argv or sys.argv[1:])
+    quick = "--full" not in (argv or sys.argv[1:])
+    out = run(quick, smoke=smoke)
+    print(json.dumps(out, indent=2, default=float))
+    if smoke:
+        ok = (out["clean"] and out["real"]["rounds"] >= out["config"]["rounds"]
+              and out["real"]["admitted"] > 0)
+        if not ok:
+            print("SMOKE GATE FAILED: real deployment did not complete "
+                  "cleanly", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -30,7 +30,8 @@ def main() -> None:
     from benchmarks import (fl_paper, theory_table, kernel_bench,
                             roofline_table, ablation_reweight,
                             round_loop_bench, data_plane_bench,
-                            paged_state_bench, quant_fused_bench)
+                            paged_state_bench, quant_fused_bench,
+                            async_server_bench)
 
     suite = [
         ("table1_theory", lambda: theory_table.run(quick)),
@@ -42,6 +43,8 @@ def main() -> None:
                                                             smoke=smoke)),
         ("quant_fused_bench", lambda: quant_fused_bench.run(quick,
                                                             smoke=smoke)),
+        ("async_server_bench", lambda: async_server_bench.run(quick,
+                                                              smoke=smoke)),
         ("roofline_table", lambda: roofline_table.run(quick)),
         ("fig1_table2_mnist", lambda: fl_paper.fig1_table2(quick)),
         ("fig2_stragglers_1of9fast", lambda: fl_paper.fig2_stragglers(quick)),
@@ -107,6 +110,11 @@ def _derive(name: str, out) -> str:
             return ";".join(
                 f"{k}={v['final_mean']:.3f}/rec{v['slow_class_recall']:.3f}"
                 for k, v in out.items())
+        if name == "async_server_bench":
+            return (f"real={out['real']['rounds_per_sec']:.1f}r/s"
+                    f";sim={out['simulated']['rounds_per_sec']:.1f}r/s"
+                    f";sel_eq={out['selection_identical']}"
+                    f";clean={out['clean']}")
         if name == "roofline_table":
             ok = sum(1 for r in out if r["status"] == "ok")
             sk = sum(1 for r in out if r["status"] == "skipped")

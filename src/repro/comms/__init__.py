@@ -1,0 +1,14 @@
+"""Async transport substrate: the actor contract, the deterministic
+virtual-clock transport, the real multi-process endpoint, fault injection,
+and the client-push retry policy (docs/architecture.md §11)."""
+from repro.comms.faults import (Decision, FaultPlan, UPDATE_KINDS,
+                                symmetric_latency_table)
+from repro.comms.retry import BackoffPolicy
+from repro.comms.transport import (Actor, InProcTransport, ProcEndpoint,
+                                   TransportAPI)
+
+__all__ = [
+    "Actor", "BackoffPolicy", "Decision", "FaultPlan", "InProcTransport",
+    "ProcEndpoint", "TransportAPI", "UPDATE_KINDS",
+    "symmetric_latency_table",
+]

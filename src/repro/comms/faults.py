@@ -1,0 +1,140 @@
+"""Fault-injection layer for the async transports (docs/architecture.md
+§11).
+
+A :class:`FaultPlan` is a *declarative* description of everything hostile
+the network may do to a FAVAS deployment:
+
+* **latency** — a base one-way latency, an optional per-``(src, dst)``
+  latency table, and a seeded uniform jitter, applied to EVERY message;
+* **stragglers** — per-node multipliers on every message the node sends or
+  receives (a ×10 straggler's poll responses arrive an order of magnitude
+  late — the heterogeneous-client regime of arxiv 2402.11198);
+* **drop / duplicate / reorder** — applied to *update-class* messages only
+  (the client→server push path, per the fault model of ISSUE 8): control
+  messages (tick/poll/reset) ride a reliable channel, data pushes do not,
+  which is exactly what the client-side retry/backoff path exists to
+  survive;
+* **crash-and-rejoin** — per-node outage windows ``[t_down, t_up)``: the
+  transport blackholes every message to or from the node inside the window
+  and delivers ``on_crash`` / ``on_rejoin`` control events at the
+  boundaries (InProc transport; real processes crash for real).
+
+Every stochastic decision is drawn from an ``np.random.Generator`` owned by
+the transport, consumed in deterministic event order — under
+``InProcTransport`` the same (plan, seed) always yields the same run, which
+is what makes the fault suite assertable in tier-1 CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Tuple
+
+import numpy as np
+
+#: message kinds subject to drop/duplicate/reorder (the unreliable
+#: data-plane classes; everything else is control-plane and only sees
+#: latency/straggler/crash effects)
+UPDATE_KINDS = ("update",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """Outcome of the fault layer for ONE send."""
+    latencies: Tuple[float, ...]   # one entry per delivered copy ((),) = drop
+    fifo: bool = True              # clamp behind earlier traffic on the pair?
+
+    @property
+    def dropped(self) -> bool:
+        return len(self.latencies) == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative network-fault description (see module docstring).
+
+    ``latency_table`` maps ``(src, dst)`` node-id pairs to a one-way
+    latency, overriding ``latency``; ``straggler`` maps a node id to a
+    multiplier applied to every message it sends OR receives (multipliers
+    compose). ``drop`` / ``duplicate`` / ``reorder`` are probabilities per
+    update-class message; a reordered copy gets ``reorder_delay`` extra
+    latency AND is exempted from the per-pair FIFO clamp, so it genuinely
+    overtakes later traffic. ``crash`` maps a node id to its
+    ``(t_down, t_up)`` outage window in transport time."""
+    latency: float = 0.0
+    latency_table: Optional[Mapping] = None       # (src, dst) -> latency
+    jitter: float = 0.0                           # uniform [0, jitter)
+    straggler: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    drop: float = 0.0
+    duplicate: float = 0.0
+    reorder: float = 0.0
+    reorder_delay: float = 0.0
+    crash: Mapping[str, Tuple[float, float]] = dataclasses.field(
+        default_factory=dict)
+
+    def __post_init__(self):
+        for name in ("drop", "duplicate", "reorder"):
+            p = getattr(self, name)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{name} must be a probability, got {p}")
+        for node, (t0, t1) in dict(self.crash).items():
+            if t1 < t0:
+                raise ValueError(
+                    f"crash window for {node!r} is reversed: ({t0}, {t1})")
+
+    # -- helpers ------------------------------------------------------------
+
+    def one_way(self, src: str, dst: str) -> float:
+        """Deterministic part of the src->dst latency (no jitter draw)."""
+        base = self.latency
+        if self.latency_table is not None:
+            base = self.latency_table.get((src, dst), base)
+        return (base * float(self.straggler.get(src, 1.0))
+                * float(self.straggler.get(dst, 1.0)))
+
+    def is_down(self, node: str, t: float) -> bool:
+        win = self.crash.get(node)
+        return win is not None and win[0] <= t < win[1]
+
+    def decide(self, src: str, dst: str, kind: str,
+               rng: np.random.Generator) -> Decision:
+        """Fault decision for one send. ALWAYS consumes the same number of
+        rng draws for a given message class, so a fault taken on one
+        message never perturbs the stream another message sees — runs stay
+        comparable across plans that differ only in probabilities."""
+        lat = self.one_way(src, dst)
+        if self.jitter > 0.0:
+            lat += float(rng.uniform(0.0, self.jitter))
+        if kind not in UPDATE_KINDS:
+            return Decision(latencies=(lat,))
+        # one draw each for drop/dup/reorder, unconditionally (see above)
+        u_drop, u_dup, u_reord = rng.uniform(size=3)
+        if u_drop < self.drop:
+            return Decision(latencies=())
+        lats = [lat]
+        if u_dup < self.duplicate:
+            lats.append(lat + max(self.jitter, 1e-3))
+        if u_reord < self.reorder:
+            return Decision(latencies=tuple(x + self.reorder_delay
+                                            for x in lats), fifo=False)
+        return Decision(latencies=tuple(lats))
+
+
+class _SymmetricTable(dict):
+    """Per-node latency table: ``get((src, dst))`` resolves to either
+    endpoint's entry. Module-level (not a closure) so a FaultPlan carrying
+    one pickles across multiprocessing spawn boundaries."""
+
+    def get(self, key, default=0.0):
+        src, dst = key
+        if str(src) in self:
+            return self[str(src)]
+        return super().get(str(dst), default)
+
+
+def symmetric_latency_table(node_ids, latencies) -> dict:
+    """Build a ``latency_table`` giving node ``i`` the one-way latency
+    ``latencies[i]`` on BOTH directions of its server link (the per-client
+    latency-table idiom of the gaia-style sender queues). ``node_ids`` are
+    the client ids; the server side is implicit (any peer)."""
+    return _SymmetricTable({str(n): float(l)
+                            for n, l in zip(node_ids, latencies)})

@@ -1,0 +1,40 @@
+"""Retry/timeout/exponential-backoff policy for the client push path.
+
+The update push (client -> server) is the one unreliable message class in
+the fault model (see :mod:`repro.comms.faults`): it can be dropped or
+duplicated. The client therefore keeps every un-ACKed update and re-sends
+it on a backoff schedule until the server acknowledges (possibly as
+*stale*, when the round already closed) or the attempt budget runs out.
+Timers come from the transport, so the same policy is exact under the
+virtual clock and approximate under the wall clock.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BackoffPolicy:
+    """Exponential backoff with a cap: attempt ``k`` (0-based) waits
+    ``min(base * factor**k, max_delay)`` before re-sending, up to
+    ``max_attempts`` total sends. No jitter here — retry determinism is
+    part of the InProcTransport equivalence contract; wall-clock jitter is
+    injected by the fault layer instead."""
+    base: float = 0.5
+    factor: float = 2.0
+    max_delay: float = 8.0
+    max_attempts: int = 6
+
+    def __post_init__(self):
+        if self.base <= 0 or self.factor < 1.0 or self.max_attempts < 1:
+            raise ValueError(f"invalid backoff policy {self}")
+
+    def delay(self, attempt: int) -> float:
+        """Wait before send ``attempt + 1`` (attempt is the 0-based index
+        of the send that just happened)."""
+        return min(self.base * self.factor ** attempt, self.max_delay)
+
+    def exhausted(self, attempt: int) -> bool:
+        """True once ``attempt`` sends have been made and no more are
+        allowed."""
+        return attempt >= self.max_attempts

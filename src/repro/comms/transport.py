@@ -1,0 +1,395 @@
+"""Transport substrate for the real-asynchrony FAVAS deployment
+(docs/architecture.md §11).
+
+Two implementations of one actor contract:
+
+* :class:`InProcTransport` — a single-threaded discrete-event simulator
+  with a **virtual clock**: every latency, fault decision, and delivery
+  order is derived from one seeded generator consumed in event order, so a
+  run is a pure function of ``(actors, FaultPlan, seed)``. This is the
+  *test substrate*: the async server running on it is deterministic enough
+  to assert exact selection/credit bookkeeping against the simulated-clock
+  ``fl_sim`` reference, fault class by fault class.
+* :class:`ProcEndpoint` — the same contract over real OS processes and
+  ``multiprocessing`` pipes with **wall-clock** time. Injected latencies
+  ride in the message envelope (``deliver_at`` stamped by the sender, held
+  back by the receiver), so the fault model is shared with the virtual
+  transport; only the clock differs.
+
+The actor contract (:class:`Actor`): nodes never block — they react to
+``on_message`` / ``on_timer`` callbacks and talk through a
+:class:`TransportAPI` (``send`` / ``set_timer`` / ``now``). The same
+server and client objects (``launch/server.py``, ``launch/client.py``)
+therefore run unmodified on either transport — which is the determinism
+contract the equivalence tests lean on.
+
+Delivery guarantees: per ``(src, dst)`` pair, delivery is FIFO (delivery
+times are clamped monotone) unless the fault layer explicitly reorders a
+message; update-class messages may be dropped or duplicated per the
+:class:`repro.comms.faults.FaultPlan`; control messages are never dropped
+(only delayed). A crashed node (InProc) receives nothing inside its outage
+window and gets ``on_crash`` / ``on_rejoin`` control callbacks at the
+boundaries.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+import zlib
+from typing import Any, Callable, Dict, Optional
+
+import numpy as np
+
+from repro.comms.faults import FaultPlan
+
+#: minimum spacing enforced between FIFO deliveries on one (src, dst) pair
+_FIFO_EPS = 1e-9
+
+
+class Actor:
+    """Base class for transport nodes. Handlers MUST NOT block: all waiting
+    is expressed as timers, all communication as sends."""
+
+    node_id: str = "?"
+
+    def on_start(self, api: "TransportAPI") -> None:  # pragma: no cover
+        pass
+
+    def on_message(self, src: str, msg: Any,
+                   api: "TransportAPI") -> None:  # pragma: no cover
+        pass
+
+    def on_timer(self, name: str,
+                 api: "TransportAPI") -> None:  # pragma: no cover
+        pass
+
+    def on_crash(self, api: "TransportAPI") -> None:  # pragma: no cover
+        pass
+
+    def on_rejoin(self, api: "TransportAPI") -> None:  # pragma: no cover
+        pass
+
+
+class TransportAPI:
+    """What an actor sees of its transport (one per node)."""
+
+    node_id: str
+
+    def now(self) -> float:
+        raise NotImplementedError
+
+    def send(self, dst: str, msg: Any) -> None:
+        raise NotImplementedError
+
+    def set_timer(self, name: str, delay: float) -> None:
+        raise NotImplementedError
+
+    def cancel_timer(self, name: str) -> None:
+        raise NotImplementedError
+
+    def stop(self) -> None:
+        raise NotImplementedError
+
+
+def _msg_kind(msg: Any) -> str:
+    return msg.get("kind", "?") if isinstance(msg, dict) else "?"
+
+
+# ---------------------------------------------------------------------------
+# InProcTransport: deterministic virtual-clock event loop
+# ---------------------------------------------------------------------------
+
+class _InProcAPI(TransportAPI):
+    def __init__(self, transport: "InProcTransport", node_id: str):
+        self._t = transport
+        self.node_id = node_id
+
+    def now(self) -> float:
+        return self._t._now
+
+    def send(self, dst: str, msg: Any) -> None:
+        self._t._send(self.node_id, dst, msg)
+
+    def set_timer(self, name: str, delay: float) -> None:
+        self._t._set_timer(self.node_id, name, delay)
+
+    def cancel_timer(self, name: str) -> None:
+        self._t._cancel_timer(self.node_id, name)
+
+    def stop(self) -> None:
+        self._t._stopped.add(self.node_id)
+
+
+class InProcTransport:
+    """Deterministic single-threaded discrete-event transport.
+
+    Determinism contract (asserted by tests/test_async_server.py): with the
+    same registered actors, :class:`FaultPlan` and ``seed``, two runs
+    produce identical event sequences — every latency/fault draw comes from
+    ONE generator consumed in event order, the event heap breaks time ties
+    by insertion sequence, and nothing touches wall-clock time. ``stats``
+    counts delivered/dropped/duplicated/blackholed messages so tests can
+    assert the faults actually fired.
+    """
+
+    def __init__(self, plan: Optional[FaultPlan] = None, seed: int = 0):
+        self.plan = plan or FaultPlan()
+        self._rng = np.random.default_rng(seed)
+        self._heap: list = []           # (time, seq, kind, payload...)
+        self._seq = 0
+        self._now = 0.0
+        self._actors: Dict[str, Actor] = {}
+        self._apis: Dict[str, _InProcAPI] = {}
+        self._timer_tok: Dict[tuple, int] = {}
+        self._fifo_last: Dict[tuple, float] = {}
+        self._stopped: set = set()
+        self.stats = {"delivered": 0, "dropped": 0, "duplicated": 0,
+                      "blackholed": 0, "events": 0}
+
+    # -- wiring -------------------------------------------------------------
+
+    def add_actor(self, actor: Actor) -> None:
+        if actor.node_id in self._actors:
+            raise ValueError(f"duplicate node id {actor.node_id!r}")
+        self._actors[actor.node_id] = actor
+        self._apis[actor.node_id] = _InProcAPI(self, actor.node_id)
+
+    def _push(self, t: float, kind: str, *payload) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    # -- API plumbing -------------------------------------------------------
+
+    def _send(self, src: str, dst: str, msg: Any) -> None:
+        if dst not in self._actors:
+            raise KeyError(f"send to unknown node {dst!r}")
+        decision = self.plan.decide(src, dst, _msg_kind(msg), self._rng)
+        if decision.dropped:
+            self.stats["dropped"] += 1
+            return
+        if len(decision.latencies) > 1:
+            self.stats["duplicated"] += 1
+        for lat in decision.latencies:
+            at = self._now + max(float(lat), 0.0)
+            if decision.fifo:
+                last = self._fifo_last.get((src, dst), -np.inf)
+                at = max(at, last + _FIFO_EPS)
+                self._fifo_last[(src, dst)] = at
+            self._push(at, "msg", src, dst, msg)
+
+    def _set_timer(self, node: str, name: str, delay: float) -> None:
+        tok = self._timer_tok.get((node, name), 0) + 1
+        self._timer_tok[(node, name)] = tok
+        self._push(self._now + max(float(delay), 0.0), "timer",
+                   node, name, tok)
+
+    def _cancel_timer(self, node: str, name: str) -> None:
+        # bump the token: any in-heap firing with an older token is stale
+        self._timer_tok[(node, name)] = \
+            self._timer_tok.get((node, name), 0) + 1
+
+    # -- the event loop -----------------------------------------------------
+
+    def run(self, until: Optional[float] = None,
+            max_events: int = 2_000_000) -> None:
+        """Drive the simulation until the heap drains, every actor stopped,
+        virtual time passes ``until``, or ``max_events`` dispatches — the
+        last is the anti-wedge guard: a protocol bug that ping-pongs
+        forever raises instead of hanging the test runner."""
+        for node, (t0, t1) in dict(self.plan.crash).items():
+            self._push(float(t0), "crash", node)
+            self._push(float(t1), "rejoin", node)
+        for node, actor in self._actors.items():
+            actor.on_start(self._apis[node])
+        n_events = 0
+        while self._heap:
+            if len(self._stopped) == len(self._actors):
+                break
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if until is not None and t > until:
+                break
+            n_events += 1
+            if n_events > max_events:
+                raise RuntimeError(
+                    f"InProcTransport exceeded {max_events} events at "
+                    f"virtual time {t:.3f} — wedged protocol?")
+            self._now = max(self._now, t)
+            self.stats["events"] = n_events
+            if kind == "msg":
+                src, dst, msg = payload
+                if dst in self._stopped:
+                    continue
+                if (self.plan.is_down(dst, self._now)
+                        or self.plan.is_down(src, self._now)):
+                    self.stats["blackholed"] += 1
+                    continue
+                self.stats["delivered"] += 1
+                self._actors[dst].on_message(src, msg, self._apis[dst])
+            elif kind == "timer":
+                node, name, tok = payload
+                if (node in self._stopped
+                        or self._timer_tok.get((node, name)) != tok
+                        or self.plan.is_down(node, self._now)):
+                    continue   # cancelled / superseded / node is down
+                self._actors[node].on_timer(name, self._apis[node])
+            elif kind == "crash":
+                (node,) = payload
+                if node not in self._stopped:
+                    self._actors[node].on_crash(self._apis[node])
+            elif kind == "rejoin":
+                (node,) = payload
+                if node not in self._stopped:
+                    self._actors[node].on_rejoin(self._apis[node])
+
+
+# ---------------------------------------------------------------------------
+# ProcEndpoint: the same contract over real processes + pipes, wall clock
+# ---------------------------------------------------------------------------
+
+def _node_seed(seed: int, node_id: str) -> int:
+    return (int(seed) * 0x9E3779B1 + zlib.crc32(node_id.encode())) % (2**32)
+
+
+class ProcEndpoint(TransportAPI):
+    """One node's endpoint of the real multi-process transport.
+
+    ``conns`` maps peer node ids to ``multiprocessing.Connection`` objects
+    (duplex pipes — cluster.py wires a star topology around the server).
+    Injected latency is decided at SEND time from a per-node seeded
+    generator and shipped in the envelope as an absolute ``deliver_at``
+    deadline (``time.monotonic`` is boot-anchored and shared across
+    processes on Linux); the receiver parks early arrivals in a local heap
+    until they are due, so wall-clock latency injection composes with real
+    scheduling noise instead of replacing it. Drops and duplicates follow
+    the same :class:`FaultPlan` contract as the virtual transport;
+    crash windows are an InProc-only feature (real processes die for
+    real — ``launch/cluster.py`` kills and respawns instead).
+    """
+
+    def __init__(self, node_id: str, conns: Dict[str, Any],
+                 plan: Optional[FaultPlan] = None, seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.node_id = node_id
+        self.plan = plan or FaultPlan()
+        self._conns = dict(conns)
+        self._clock = clock
+        self._rng = np.random.default_rng(_node_seed(seed, node_id))
+        self._inbox: list = []          # (deliver_at, seq, src, msg)
+        self._timers: list = []         # (deadline, seq, name, tok)
+        self._timer_tok: Dict[str, int] = {}
+        self._fifo_last: Dict[str, float] = {}
+        self._seq = 0
+        self._stop = False
+        self.stats = {"delivered": 0, "dropped": 0, "duplicated": 0,
+                      "sent": 0, "peer_gone": 0}
+
+    # -- TransportAPI -------------------------------------------------------
+
+    def now(self) -> float:
+        return self._clock()
+
+    def send(self, dst: str, msg: Any) -> None:
+        conn = self._conns.get(dst)
+        if conn is None:
+            self.stats["peer_gone"] += 1
+            return
+        decision = self.plan.decide(self.node_id, dst, _msg_kind(msg),
+                                    self._rng)
+        if decision.dropped:
+            self.stats["dropped"] += 1
+            return
+        if len(decision.latencies) > 1:
+            self.stats["duplicated"] += 1
+        now = self.now()
+        for lat in decision.latencies:
+            at = now + max(float(lat), 0.0)
+            if decision.fifo:
+                at = max(at, self._fifo_last.get(dst, -np.inf) + _FIFO_EPS)
+                self._fifo_last[dst] = at
+            try:
+                conn.send((self.node_id, at, msg))
+                self.stats["sent"] += 1
+            except (BrokenPipeError, OSError):
+                self.stats["peer_gone"] += 1
+                self._conns.pop(dst, None)
+                return
+
+    def set_timer(self, name: str, delay: float) -> None:
+        tok = self._timer_tok.get(name, 0) + 1
+        self._timer_tok[name] = tok
+        heapq.heappush(self._timers,
+                       (self.now() + max(float(delay), 0.0), self._seq,
+                        name, tok))
+        self._seq += 1
+
+    def cancel_timer(self, name: str) -> None:
+        self._timer_tok[name] = self._timer_tok.get(name, 0) + 1
+
+    def stop(self) -> None:
+        self._stop = True
+
+    # -- the pump -----------------------------------------------------------
+
+    def _drain_conns(self, timeout: float) -> None:
+        from multiprocessing import connection as mpc
+        conns = list(self._conns.values())
+        if not conns:
+            time.sleep(min(timeout, 0.05))
+            return
+        try:
+            ready = mpc.wait(conns, timeout=max(timeout, 0.0))
+        except OSError:
+            ready = []
+        for conn in ready:
+            try:
+                while conn.poll():
+                    src, at, msg = conn.recv()
+                    heapq.heappush(self._inbox, (at, self._seq, src, msg))
+                    self._seq += 1
+            except (EOFError, OSError):
+                for k, v in list(self._conns.items()):
+                    if v is conn:
+                        self._conns.pop(k)
+
+    def run(self, actor: Actor, until: Optional[float] = None) -> None:
+        """Pump loop: wait on the pipes with a timeout equal to the next
+        timer/delivery deadline, then fire everything due in time order.
+        ``until`` is a wall-clock **duration** bound (seconds from entry) —
+        the anti-wedge guard for smoke tests."""
+        deadline_abs = None if until is None else self.now() + until
+        actor.on_start(self)
+        while not self._stop:
+            now = self.now()
+            if deadline_abs is not None and now >= deadline_abs:
+                break
+            # fire everything due, interleaved in time order
+            while not self._stop:
+                t_timer = self._timers[0][0] if self._timers else np.inf
+                t_msg = self._inbox[0][0] if self._inbox else np.inf
+                if min(t_timer, t_msg) > now:
+                    break
+                if t_timer <= t_msg:
+                    _, _, name, tok = heapq.heappop(self._timers)
+                    if self._timer_tok.get(name) == tok:
+                        actor.on_timer(name, self)
+                else:
+                    _, _, src, msg = heapq.heappop(self._inbox)
+                    self.stats["delivered"] += 1
+                    actor.on_message(src, msg, self)
+            if self._stop:
+                break
+            t_next = min(self._timers[0][0] if self._timers else np.inf,
+                         self._inbox[0][0] if self._inbox else np.inf)
+            if deadline_abs is not None:
+                t_next = min(t_next, deadline_abs)
+            timeout = 0.1 if np.isinf(t_next) \
+                else min(max(t_next - self.now(), 0.0), 0.1)
+            self._drain_conns(timeout)
+
+    def close(self) -> None:
+        for conn in self._conns.values():
+            try:
+                conn.close()
+            except OSError:
+                pass
+        self._conns.clear()

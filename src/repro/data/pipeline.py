@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
+import warnings
 from typing import Any, Callable, Optional
 
 import numpy as np
@@ -250,32 +252,48 @@ class BatchPrefetcher:
             except StopIteration:
                 return
 
-    def close(self):
-        """Stop the producer and drop buffered chunks.
+    def close(self, timeout: float = 30.0) -> bool:
+        """Stop the producer and drop buffered chunks. Returns True once
+        the producer thread has actually exited.
 
         Deadlock-safe even when the producer is blocked on a FULL queue:
         the stop flag is set first (the producer's ``put`` polls it every
         0.1 s), then drain-and-join repeats until the thread exits — a
         single drain could race a producer that was mid-``put`` and leave
-        it parked behind a re-filled queue. A pending producer error is
-        NOT cleared here; :meth:`__exit__` re-raises it so failures can't
-        vanish when the consumer stops early."""
+        it parked behind a re-filled queue. The deadline is measured on
+        ``time.monotonic`` (NOT join-call counts, which under-measure when
+        a drain or a slow ``device_put`` eats wall time between joins); on
+        expiry a ``RuntimeWarning`` is emitted and False returned, so a
+        leaked producer is observable instead of silently orphaned
+        (tests/test_async_server.py asserts the no-leak contract). A
+        pending producer error is NOT cleared here; :meth:`__exit__`
+        re-raises it so failures can't vanish when the consumer stops
+        early."""
         self._stop.set()
-        deadline = 30.0
-        while self._thread.is_alive() and deadline > 0:
+        deadline = time.monotonic() + timeout
+        while self._thread.is_alive():
             while True:
                 try:
                     self._q.get_nowait()
                 except queue.Empty:
                     break
-            self._thread.join(timeout=0.25)
-            deadline -= 0.25
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            self._thread.join(timeout=min(0.25, remaining))
         # drop anything the producer managed to enqueue while exiting
         while True:
             try:
                 self._q.get_nowait()
             except queue.Empty:
                 break
+        if self._thread.is_alive():
+            warnings.warn(
+                f"BatchPrefetcher.close(): producer thread still alive "
+                f"after {timeout:.1f}s (slow make_batch/device_put?)",
+                RuntimeWarning, stacklevel=2)
+            return False
+        return True
 
     def __enter__(self):
         return self

@@ -1,0 +1,191 @@
+"""LocalSGDClient: the FAVAS local-SGD worker as a transport actor
+(docs/architecture.md §11).
+
+The client owns THREE pieces of state the simulator kept server-side:
+
+* the **credit clock** — pure Python integers on the exact tick grid of
+  ``sampler.time_ticks`` (credit += round_ticks; whole ``step_ticks``
+  quanta become available steps; run ``min(available, K - q)``; the
+  sub-step remainder persists across resets, excess whole steps above
+  ``K - q`` are discarded). Because the arithmetic is integral, the
+  per-round step stream is BIT-IDENTICAL to the simulator's on-device
+  ``sampler.credit_steps`` — the "credit stream exact" half of the
+  equivalence contract (tests/test_async_server.py replays both).
+* its **parameters** — trained by a jitted scan over this round's
+  minibatches, drawn from the client's own seeded numpy stream (losses are
+  therefore statistically comparable to fl_sim, not bit-equal: the
+  simulator consumes one global batcher).
+* the **push ledger** — every polled update is retried on the
+  :class:`repro.comms.retry.BackoffPolicy` schedule until the server acks
+  it (``stale`` acks stop the retries too: the round closed without us,
+  our progress simply keeps accumulating like an unselected client's).
+
+Crash-and-rejoin: the transport blackholes a crashed client and fires
+``on_rejoin``; the client then sends ``join`` and resynchronizes from the
+server's ``sync`` reply (params adopted, q -> 0), rejoining the population
+exactly like a fresh reset.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms.retry import BackoffPolicy
+from repro.comms.transport import Actor, TransportAPI
+from repro.core import round_engine
+from repro.models.classifier import classifier_loss, mlp_apply
+from repro.utils.tree import tree_map
+
+SERVER = "server"
+
+
+def _sgd_runner(loss_fn, eta):
+    """Jitted ``params, xs (T,B,d), ys (T,B) -> params`` scan. Retraces per
+    distinct T, which is bounded by K+1 values."""
+    @jax.jit
+    def run(params, xs, ys):
+        def step(p, inp):
+            x, y = inp
+            g = jax.grad(loss_fn)(p, x, y)
+            return tree_map(lambda pp, gg: pp - eta * gg, p, g), None
+        p, _ = jax.lax.scan(step, params, (xs, ys))
+        return p
+    return run
+
+
+class LocalSGDClient(Actor):
+    """One worker. ``step_ticks`` / ``round_ticks`` come from
+    ``sampler.time_ticks`` on the deployment's step-time vector; ``x, y``
+    is this client's data shard; ``n_clients`` sizes the shared FlatSpec so
+    pushed buckets match the server's row layout."""
+
+    def __init__(self, node_id: str, params0, x, y, *, n_clients: int,
+                 batch_size: int, eta: float, K: int, step_ticks: int,
+                 round_ticks: int, n_classes: int, seed: int = 0,
+                 backoff: Optional[BackoffPolicy] = None):
+        self.node_id = node_id
+        self.spec = round_engine.make_flat_spec(params0, n_clients=n_clients)
+        self.params = params0
+        self.x = np.asarray(x)
+        self.y = np.asarray(y)
+        self.batch_size = int(batch_size)
+        self.K = int(K)
+        self.step_ticks = int(step_ticks)
+        self.round_ticks = int(round_ticks)
+        self.q = 0
+        self.credit = 0
+        self._rng = np.random.default_rng(seed)
+        self._sgd = _sgd_runner(
+            lambda p, bx, by: classifier_loss(p, mlp_apply, bx, by,
+                                              n_classes), eta)
+        self.backoff = backoff or BackoffPolicy()
+        self._inflight = {}             # round -> {"msg", "attempt"}
+        self.log: List[dict] = []       # per-round credit/step records
+        self.stats = {"rounds": 0, "pushes": 0, "retries": 0, "gave_up": 0,
+                      "stale_acks": 0, "resets": 0, "rejoins": 0}
+
+    # -- local compute -------------------------------------------------------
+
+    def _credit_clock(self) -> int:
+        """One round of the integer credit clock (sampler.credit_steps on
+        host ints)."""
+        self.credit += self.round_ticks
+        avail = self.credit // self.step_ticks
+        self.credit -= avail * self.step_ticks
+        return min(avail, self.K - self.q)
+
+    def _train(self, steps: int) -> None:
+        if steps <= 0:
+            return
+        B = self.batch_size
+        ix = self._rng.integers(0, len(self.x), size=(steps, B))
+        self.params = self._sgd(self.params,
+                                jnp.asarray(self.x[ix]),
+                                jnp.asarray(self.y[ix]))
+
+    def warmup(self, steps=(1,)) -> None:
+        """Pre-trace the jitted SGD scan for the given step counts — on the
+        wall-clock transport the first-use compile would otherwise land
+        inside round 0's harvest window and turn it into a spurious
+        straggler round. State is untouched (the traced result is
+        discarded)."""
+        B = self.batch_size
+        feat = tuple(self.x.shape[1:])
+        for t in sorted({int(t) for t in steps if int(t) > 0}):
+            xs = jnp.zeros((t, B) + feat, self.x.dtype)
+            ys = jnp.zeros((t, B), self.y.dtype)
+            jax.block_until_ready(self._sgd(self.params, xs, ys))
+
+    # -- actor contract ------------------------------------------------------
+
+    def on_start(self, api: TransportAPI) -> None:
+        api.send(SERVER, {"kind": "hello"})
+
+    def on_message(self, src: str, msg, api: TransportAPI) -> None:
+        kind = msg.get("kind")
+        if kind == "tick":
+            self._on_tick(msg, api)
+        elif kind == "ack":
+            self._on_ack(msg, api)
+        elif kind in ("reset", "sync"):
+            bufs = [jnp.asarray(b) for b in msg["params"]]
+            self.params = round_engine.unflatten_tree(self.spec, bufs)
+            self.q = 0
+            self.stats["resets" if kind == "reset" else "rejoins"] += 1
+        elif kind == "stop":
+            api.send(SERVER, {"kind": "bye", "log": list(self.log)})
+            api.stop()
+
+    def on_rejoin(self, api: TransportAPI) -> None:
+        # drop any pre-crash push state and ask the server to resync us
+        for r in list(self._inflight):
+            api.cancel_timer(f"push:{r}")
+        self._inflight = {}
+        api.send(SERVER, {"kind": "join"})
+
+    # -- push path -----------------------------------------------------------
+
+    def _on_tick(self, msg, api: TransportAPI) -> None:
+        r = msg["round"]
+        do = self._credit_clock()
+        self._train(do)
+        self.q += do
+        self.stats["rounds"] += 1
+        self.log.append({"round": r, "do": do, "q": self.q,
+                         "polled": bool(msg.get("polled"))})
+        if msg.get("polled"):
+            bufs = [np.asarray(b) for b in
+                    round_engine.flatten_tree(self.spec, self.params)]
+            push = {"kind": "update", "round": r, "client": self.node_id,
+                    "q": self.q, "params": bufs}
+            self._inflight[r] = {"msg": push, "attempt": 0}
+            api.send(SERVER, push)
+            self.stats["pushes"] += 1
+            api.set_timer(f"push:{r}", self.backoff.delay(0))
+
+    def _on_ack(self, msg, api: TransportAPI) -> None:
+        r = msg.get("round")
+        if r in self._inflight:
+            api.cancel_timer(f"push:{r}")
+            del self._inflight[r]
+        if msg.get("stale"):
+            self.stats["stale_acks"] += 1
+
+    def on_timer(self, name: str, api: TransportAPI) -> None:
+        if not name.startswith("push:"):
+            return
+        r = int(name.split(":", 1)[1])
+        ent = self._inflight.get(r)
+        if ent is None:
+            return
+        ent["attempt"] += 1
+        if self.backoff.exhausted(ent["attempt"]):
+            del self._inflight[r]
+            self.stats["gave_up"] += 1
+            return
+        api.send(SERVER, ent["msg"])
+        self.stats["retries"] += 1
+        api.set_timer(name, self.backoff.delay(ent["attempt"]))

@@ -1,0 +1,291 @@
+"""Cluster orchestrator for the async FAVAS deployment (ROADMAP open
+item 2's deliverable; docs/architecture.md §11).
+
+Two runners over the SAME server/client actors:
+
+* :func:`run_inproc` — everything on one :class:`InProcTransport` event
+  loop: virtual clock, seeded faults, fully deterministic. The test
+  substrate (tests/test_async_server.py) and the simulated baseline of the
+  async benchmark.
+* :func:`run_proc` — the server in THIS process, each client a real
+  spawned OS process, wired in a star of duplex pipes with
+  :class:`ProcEndpoint` pumps on both ends. Wall-clock latencies are
+  injected by the shared :class:`FaultPlan`; teardown is
+  stop-broadcast -> bye harvest -> join-with-deadline -> terminate
+  stragglers, and the result reports per-child exit codes so CI can gate
+  on a clean shutdown.
+
+CLI (the CI 2-client smoke and the bench's workhorse)::
+
+  PYTHONPATH=src python -m repro.launch.cluster --transport proc \
+      --clients 2 --rounds 20 --latency 0.02 --out cluster_summary.json
+
+exits non-zero unless every round completed and every child exited 0.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comms import BackoffPolicy, FaultPlan, InProcTransport, ProcEndpoint
+from repro.core import sampler
+from repro.launch.client import LocalSGDClient
+from repro.launch.server import SERVER_ID, AsyncConfig, FavasAsyncServer
+from repro.models.classifier import accuracy, mlp_apply, mlp_init
+
+
+def default_backoff(cfg: AsyncConfig) -> BackoffPolicy:
+    """Push-retry schedule scaled to the round: first retry at
+    round_dur/4 (comfortably above a sane RTT, so an in-flight ack usually
+    cancels it), doubling, capped at one round — several attempts still fit
+    inside the harvest window on either clock."""
+    return BackoffPolicy(base=max(cfg.round_dur / 4.0, 1e-3),
+                         factor=2.0, max_delay=cfg.round_dur,
+                         max_attempts=6)
+
+
+def _client_seed(cfg: AsyncConfig, i: int) -> int:
+    # distinct per-client batch streams, disjoint from the server chain
+    return (cfg.seed * 1009 + 17 * i + 13) % (2 ** 31)
+
+
+def build_deployment(cfg: AsyncConfig, data, *, d_hidden: int = 32,
+                     backoff: Optional[BackoffPolicy] = None):
+    """Shared setup for both runners: the model init and server rng ride
+    the exact fl_sim chain (``PRNGKey(cfg.seed)`` for both), the step-time
+    vector is fl_sim's ``_step_times`` draw, and the integer tick grid
+    comes from ``sampler.time_ticks`` — the preconditions of the
+    equivalence contract. Returns ``(server, clients)``."""
+    xtr, ytr, xte, yte, parts = data
+    n_classes = int(ytr.max()) + 1
+    params0 = mlp_init(jax.random.PRNGKey(cfg.seed), xtr.shape[1],
+                       d_hidden, n_classes)
+    step_time = cfg.step_times()
+    step_ticks, round_ticks = sampler.time_ticks(step_time, cfg.round_dur)
+    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
+    eval_fn = jax.jit(lambda p: accuracy(p, mlp_apply, xte_j, yte_j))
+    server = FavasAsyncServer(cfg, params0, eval_fn=eval_fn)
+    backoff = backoff or default_backoff(cfg)
+    clients = [
+        LocalSGDClient(server.client_ids[i], params0,
+                       xtr[parts[i]], ytr[parts[i]],
+                       n_clients=cfg.n_clients, batch_size=cfg.batch_size,
+                       eta=cfg.eta, K=cfg.K,
+                       step_ticks=int(step_ticks[i]),
+                       round_ticks=round_ticks, n_classes=n_classes,
+                       seed=_client_seed(cfg, i), backoff=backoff)
+        for i in range(cfg.n_clients)]
+    return server, clients
+
+
+# ---------------------------------------------------------------------------
+# deterministic in-process runner
+# ---------------------------------------------------------------------------
+
+def run_inproc(cfg: AsyncConfig, data, *, d_hidden: int = 32,
+               plan: Optional[FaultPlan] = None, seed: int = 0,
+               max_events: int = 2_000_000) -> dict:
+    """One deterministic virtual-clock run. Returns the server result plus
+    per-client logs/stats and the transport counters; ``virtual_time`` is
+    where the clock stopped."""
+    server, clients = build_deployment(cfg, data, d_hidden=d_hidden)
+    t = InProcTransport(plan, seed=seed)
+    t.add_actor(server)
+    for c in clients:
+        t.add_actor(c)
+    t.run(max_events=max_events)
+    return {"server": server.result(),
+            "client_logs": {c.node_id: list(c.log) for c in clients},
+            "client_stats": {c.node_id: dict(c.stats) for c in clients},
+            "transport": dict(t.stats),
+            "virtual_time": t._now,
+            "server_actor": server}
+
+
+# ---------------------------------------------------------------------------
+# real multi-process runner
+# ---------------------------------------------------------------------------
+
+def _client_main(conn, payload, plan, seed, until):
+    """Spawned-child entry: rebuild the worker from the picklable payload
+    (the model init is re-derived from the seed, not shipped) and pump its
+    endpoint until stop/timeout."""
+    cfg = payload["cfg"]
+    params0 = mlp_init(jax.random.PRNGKey(cfg.seed), payload["d_in"],
+                       payload["d_hidden"], payload["n_classes"])
+    client = LocalSGDClient(payload["node_id"], params0,
+                            payload["x"], payload["y"],
+                            n_clients=cfg.n_clients,
+                            batch_size=cfg.batch_size, eta=cfg.eta,
+                            K=cfg.K, step_ticks=payload["step_ticks"],
+                            round_ticks=payload["round_ticks"],
+                            n_classes=payload["n_classes"],
+                            seed=payload["seed"],
+                            backoff=payload["backoff"])
+    client.warmup(range(1, cfg.K + 1))
+    ep = ProcEndpoint(payload["node_id"], {SERVER_ID: conn}, plan=plan,
+                      seed=seed)
+    try:
+        ep.run(client, until=until)
+    finally:
+        ep.close()
+
+
+def run_proc(cfg: AsyncConfig, data, *, d_hidden: int = 32,
+             plan: Optional[FaultPlan] = None, seed: int = 0,
+             timeout: Optional[float] = None) -> dict:
+    """Spawn ``cfg.n_clients`` worker processes, run the server endpoint in
+    this process, harvest, and tear down. ``timeout`` bounds the server
+    pump (default: the nominal schedule plus generous slack) so a wedged
+    transport fails fast instead of hanging the caller."""
+    xtr, ytr, _, _, parts = data
+    n_classes = int(ytr.max()) + 1
+    step_time = cfg.step_times()
+    step_ticks, round_ticks = sampler.time_ticks(step_time, cfg.round_dur)
+    backoff = default_backoff(cfg)
+    if timeout is None:
+        timeout = cfg.rounds * cfg.round_dur + 60.0
+    server, _ = build_deployment(cfg, data, d_hidden=d_hidden)
+
+    ctx = mp.get_context("spawn")    # fork is unsafe once jax is live
+    conns, procs = {}, {}
+    for i, cid in enumerate(server.client_ids):
+        parent_c, child_c = ctx.Pipe(duplex=True)
+        payload = {"cfg": cfg, "node_id": cid, "d_in": xtr.shape[1],
+                   "d_hidden": d_hidden, "n_classes": n_classes,
+                   "x": np.asarray(xtr[parts[i]]),
+                   "y": np.asarray(ytr[parts[i]]),
+                   "step_ticks": int(step_ticks[i]),
+                   "round_ticks": round_ticks,
+                   "seed": _client_seed(cfg, i), "backoff": backoff}
+        p = ctx.Process(target=_client_main,
+                        args=(child_c, payload, plan, seed, timeout + 30.0),
+                        daemon=True)
+        p.start()
+        child_c.close()
+        conns[cid], procs[cid] = parent_c, p
+
+    ep = ProcEndpoint(SERVER_ID, conns, plan=plan, seed=seed)
+    t0 = time.monotonic()
+    try:
+        ep.run(server, until=timeout)
+    finally:
+        wall = time.monotonic() - t0
+        ep.close()
+    exitcodes = {}
+    deadline = time.monotonic() + 15.0
+    for cid, p in procs.items():
+        p.join(timeout=max(deadline - time.monotonic(), 0.1))
+        if p.is_alive():
+            p.terminate()
+            p.join(timeout=5.0)
+        exitcodes[cid] = p.exitcode
+    res = server.result()
+    return {"server": res,
+            "client_logs": dict(server.client_logs),
+            "transport": dict(ep.stats),
+            "wall_time": wall,
+            "rounds_per_sec": res["rounds"] / max(wall, 1e-9),
+            "exitcodes": exitcodes,
+            "clean": all(ec == 0 for ec in exitcodes.values()),
+            "server_actor": server}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _smoke_data(n_clients: int, seed: int, n_train: int = 400,
+                n_test: int = 200):
+    from repro.data.partition import partition_iid
+    from repro.data.synthetic import make_classification
+    x, y, xt, yt = make_classification("mnist-like", n_train=n_train,
+                                       n_test=n_test, seed=seed)
+    parts = partition_iid(len(y), n_clients, seed=seed)
+    return x, y, xt, yt, parts
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--transport", choices=("inproc", "proc"),
+                    default="proc")
+    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--selected", type=int, default=0,
+                    help="s per round (default: ceil(clients/2))")
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--round-dur", type=float, default=0.5,
+                    help="round cadence (wall s for proc, virtual for "
+                         "inproc)")
+    ap.add_argument("--latency", type=float, default=0.02,
+                    help="injected base one-way latency")
+    ap.add_argument("--jitter", type=float, default=0.0)
+    ap.add_argument("--drop", type=float, default=0.0)
+    ap.add_argument("--straggler", type=float, default=1.0,
+                    help="latency multiplier for client0")
+    ap.add_argument("--k-steps", type=int, default=4)
+    ap.add_argument("--d-hidden", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--timeout", type=float, default=0.0,
+                    help="server pump bound in s (0: auto)")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    s = args.selected or max(1, (args.clients + 1) // 2)
+    cfg = AsyncConfig(n_clients=args.clients, s_selected=s, K=args.k_steps,
+                      batch_size=args.batch, rounds=args.rounds,
+                      round_dur=args.round_dur,
+                      fast_step_time=args.round_dur / max(args.k_steps, 1),
+                      slow_step_time=args.round_dur / 2.0,
+                      seed=args.seed)
+    plan = FaultPlan(latency=args.latency, jitter=args.jitter,
+                     drop=args.drop,
+                     straggler=({"client0": args.straggler}
+                                if args.straggler != 1.0 else {}))
+    data = _smoke_data(args.clients, args.seed)
+    if args.transport == "proc":
+        out = run_proc(cfg, data, d_hidden=args.d_hidden, plan=plan,
+                       seed=args.seed,
+                       timeout=args.timeout or None)
+    else:
+        out = run_inproc(cfg, data, d_hidden=args.d_hidden, plan=plan,
+                         seed=args.seed)
+        out["clean"] = True
+    res = out["server"]
+    summary = {
+        "transport": args.transport,
+        "config": {"clients": args.clients, "selected": s,
+                   "rounds": args.rounds, "round_dur": args.round_dur,
+                   "latency": args.latency, "drop": args.drop,
+                   "straggler": args.straggler, "seed": args.seed},
+        "rounds_completed": res["rounds"],
+        "final_accuracy": res["final_accuracy"],
+        "staleness": res["staleness"],
+        "server_stats": res["stats"],
+        "transport_stats": out["transport"],
+        "wall_time": out.get("wall_time"),
+        "rounds_per_sec": out.get("rounds_per_sec"),
+        "exitcodes": out.get("exitcodes"),
+        "clean": out["clean"],
+    }
+    line = json.dumps(summary, indent=2, default=float)
+    print(line)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write(line + "\n")
+    ok = out["clean"] and res["rounds"] >= args.rounds
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,523 @@
+"""The real-asynchrony test story (ISSUE 8; docs/architecture.md §11).
+
+Because InProcTransport is a deterministic virtual-clock event loop, the
+whole async stack is tier-1-testable:
+
+* **equivalence** — the async server under a seeded latency table
+  reproduces the simulated-clock ``fl_sim`` baseline: the selection stream
+  and every client's credit-tick step stream are EXACT (replayed here from
+  the shared key chain / integer tick grid), and the final accuracy is
+  within tolerance (batch streams differ by construction).
+* **fault classes** — straggler x10, 20% update drops (retry/backoff
+  recovers them), duplicate+reorder (dedup holds), and a mid-run
+  crash-and-rejoin all complete the run with graceful degradation instead
+  of wedging a round.
+* **determinism** — two runs of the same (actors, plan, seed) are
+  bit-identical, transport counters included.
+* **checkpointing** — the server's restartable state (flat buckets, rng
+  key chain, PENDING admitted updates — LUQ codes + scales when
+  quant_bits > 0) round-trips through ckpt.save/load_engine_checkpoint
+  bit-exactly for bits in {0, 4} (the PR 7 checkpointing gap).
+
+A SIGALRM per-test guard fails a wedged transport fast instead of hanging
+the runner. The 2-client ProcTransport smoke is slow-marked here (CI runs
+it tier-1 through the cluster CLI with artifact upload).
+"""
+import signal
+
+import jax
+import numpy as np
+import pytest
+
+from repro.comms import (BackoffPolicy, FaultPlan, InProcTransport,
+                         symmetric_latency_table)
+from repro.comms.transport import Actor
+from repro.core import sampler
+from repro.launch.cluster import _smoke_data, run_inproc, run_proc
+from repro.launch.server import AsyncConfig, FavasAsyncServer
+
+# -- per-test wedge guard ----------------------------------------------------
+
+TEST_TIMEOUT_S = 300
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout():
+    """Fail fast instead of hanging the runner if a transport wedges."""
+    if not hasattr(signal, "SIGALRM"):     # non-POSIX: no guard
+        yield
+        return
+
+    def _alarm(signum, frame):
+        raise RuntimeError(
+            f"test exceeded the {TEST_TIMEOUT_S}s wedge guard")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+# -- shared deployment -------------------------------------------------------
+
+N, S, K, ROUNDS = 6, 2, 5, 20
+ROUND_DUR = 7.0          # fl_sim SERVER_WAIT + SERVER_INTERACT
+
+
+def _cfg(rounds=ROUNDS, **kw):
+    base = dict(n_clients=N, s_selected=S, K=K, eta=0.2, batch_size=16,
+                rounds=rounds, round_dur=ROUND_DUR, seed=0)
+    base.update(kw)
+    return AsyncConfig(**base)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _smoke_data(N, 0)
+
+
+@pytest.fixture(scope="module")
+def base_run(data):
+    """One latency-injected deterministic run, shared by several tests."""
+    return run_inproc(_cfg(), data, d_hidden=16,
+                      plan=FaultPlan(latency=0.5), seed=0)
+
+
+def _replay_selection(seed, n, s, rounds):
+    """fl_sim's exact per-round key chain (fl_sim.py one_round)."""
+    rkey = jax.random.PRNGKey(seed)
+    out = []
+    for _ in range(rounds):
+        rkey, k_sel, _k_q = jax.random.split(rkey, 3)
+        idx, _ = sampler.sample_selection_indices(k_sel, n, s)
+        out.append(tuple(sorted(int(i) for i in np.asarray(idx))))
+    return out
+
+
+def _replay_credit(cfg, client_log, step_ticks, round_ticks, selected_rounds):
+    """Host-integer replay of sampler.credit_steps + the q reset rule."""
+    q = credit = 0
+    for rec in client_log:
+        credit += round_ticks
+        avail = credit // step_ticks
+        credit -= avail * step_ticks
+        do = min(avail, cfg.K - q)
+        if do != rec["do"]:
+            return False
+        q += do
+        if rec["round"] in selected_rounds:
+            q = 0
+    return True
+
+
+# -- the equivalence contract ------------------------------------------------
+
+def test_async_matches_simulated_clock(data):
+    """Headline: async server under a seeded latency table vs fl_sim —
+    selection stream exact, credit streams exact, final accuracy within
+    tolerance."""
+    from repro.core.fl_sim import SimConfig, run_simulation
+    rounds = 40
+    cfg = _cfg(rounds=rounds)
+    out = run_inproc(cfg, data, d_hidden=16, plan=FaultPlan(latency=0.5),
+                     seed=0)
+    res = out["server"]
+    assert res["rounds"] == rounds
+    assert res["stats"]["short_polls"] == 0       # every poll delivered
+
+    # 1) selection stream: bit-identical to the fl_sim key chain
+    assert res["selection"] == _replay_selection(0, N, S, rounds)
+
+    # 2) credit streams: bit-identical to the integer tick clock
+    step_time = cfg.step_times()
+    step_ticks, round_ticks = sampler.time_ticks(step_time, ROUND_DUR)
+    for i in range(N):
+        sel_rounds = {r for r, sel in enumerate(res["selection"])
+                      if i in sel}
+        assert _replay_credit(cfg, out["client_logs"][f"client{i}"],
+                              int(step_ticks[i]), round_ticks, sel_rounds), \
+            f"client{i} credit stream diverged"
+
+    # 3) alphas are the eq. 3 stochastic reweight of the pushed q's
+    for rec in res["alpha"]:
+        for a in rec.values():
+            assert 1.0 <= a <= K
+
+    # 4) convergence comparable to the simulated clock (batch streams
+    #    differ by construction, so tolerance not bit-equality)
+    sim = run_simulation(
+        SimConfig(n_clients=N, s_selected=S, K=K, eta=0.2, batch_size=16,
+                  total_time=rounds * ROUND_DUR,
+                  eval_every=rounds * ROUND_DUR, seed=0),
+        data, d_hidden=16)
+    assert res["final_accuracy"] is not None
+    assert abs(res["final_accuracy"] - sim["final_accuracy"]) <= 0.1
+
+
+def test_deterministic_double_run(data, base_run):
+    """Same (actors, plan, seed) -> bit-identical everything."""
+    again = run_inproc(_cfg(), data, d_hidden=16,
+                       plan=FaultPlan(latency=0.5), seed=0)
+    a, b = base_run["server"], again["server"]
+    assert a["selection"] == b["selection"]
+    assert a["alpha"] == b["alpha"]
+    assert a["staleness"] == b["staleness"]
+    assert a["final_accuracy"] == b["final_accuracy"]
+    assert base_run["transport"] == again["transport"]
+    assert base_run["client_logs"] == again["client_logs"]
+
+
+def test_base_run_bookkeeping(base_run):
+    res = base_run["server"]
+    assert res["rounds"] == ROUNDS
+    assert res["stats"]["admitted"] == ROUNDS * S
+    assert res["stats"]["resets"] == ROUNDS * S
+    assert res["stats"]["byes"] == N
+    assert len(res["staleness"]) == ROUNDS * S
+    assert all(0 <= q <= K for q in res["staleness"])
+
+
+# -- fault classes -----------------------------------------------------------
+
+def test_straggler_degrades_gracefully(data):
+    """A x10 straggler misses harvest windows but the run completes; the
+    other clients keep the server moving."""
+    out = run_inproc(_cfg(), data, d_hidden=16,
+                     plan=FaultPlan(latency=0.5,
+                                    straggler={"client0": 10.0}), seed=0)
+    res = out["server"]
+    assert res["rounds"] == ROUNDS
+    assert res["stats"]["short_polls"] > 0        # the straggler missed polls
+    assert res["stats"]["admitted"] < ROUNDS * S
+    assert res["stats"]["admitted"] > 0
+    assert res["final_accuracy"] is not None
+    assert 0.0 <= res["final_accuracy"] <= 1.0
+    # stale acks stopped the straggler's retries (no unbounded resend)
+    assert out["client_stats"]["client0"]["gave_up"] == 0
+
+
+def test_drops_recovered_by_retry(data):
+    """20% update drops: the backoff retries recover every poll."""
+    out = run_inproc(_cfg(), data, d_hidden=16,
+                     plan=FaultPlan(latency=0.5, drop=0.2), seed=0)
+    res = out["server"]
+    assert out["transport"]["dropped"] > 0        # the fault actually fired
+    assert res["rounds"] == ROUNDS
+    assert res["stats"]["admitted"] == ROUNDS * S  # retries recovered all
+    retries = sum(s["retries"] for s in out["client_stats"].values())
+    assert retries > 0
+
+
+def test_duplicates_and_reorder_deduped(data):
+    """Duplicated / reordered update copies are admitted once each."""
+    out = run_inproc(_cfg(), data, d_hidden=16,
+                     plan=FaultPlan(latency=0.5, duplicate=0.5, reorder=0.3,
+                                    reorder_delay=2.0), seed=0)
+    res = out["server"]
+    assert out["transport"]["duplicated"] > 0
+    assert res["rounds"] == ROUNDS
+    assert res["stats"]["admitted"] == ROUNDS * S  # dedup by (round, client)
+
+
+def test_crash_and_rejoin(data):
+    """A client crashes mid-run, is blackholed, rejoins via join/sync, and
+    participates again; the run completes."""
+    t0 = 3 * ROUND_DUR
+    out = run_inproc(_cfg(), data, d_hidden=16,
+                     plan=FaultPlan(latency=0.5,
+                                    crash={"client1": (t0, t0 + 6 * ROUND_DUR)}),
+                     seed=0)
+    res = out["server"]
+    assert res["rounds"] == ROUNDS
+    assert out["transport"]["blackholed"] > 0
+    assert res["stats"]["rejoins"] == 1
+    assert out["client_stats"]["client1"]["rejoins"] == 1
+    # the crashed client missed its in-window polls -> some short polls
+    assert res["stats"]["short_polls"] > 0
+    # but it pushed again after rejoining
+    post = [rec for rec in out["client_logs"]["client1"]
+            if rec["polled"]]
+    assert len(post) > 0
+
+
+def test_per_client_latency_table(data):
+    """A seeded per-client latency table drives admission: slow links miss
+    the harvest deadline, fast links always deliver."""
+    table = symmetric_latency_table(
+        [f"client{i}" for i in range(N)],
+        [0.2] * (N - 1) + [ROUND_DUR])            # client5's link > window
+    out = run_inproc(_cfg(), data, d_hidden=16,
+                     plan=FaultPlan(latency_table=table), seed=0)
+    res = out["server"]
+    assert res["rounds"] == ROUNDS
+    slow_sel = sum(1 for sel in res["selection"] if 5 in sel)
+    admitted5 = sum(1 for rec in res["alpha"] if "client5" in rec)
+    assert slow_sel > 0 and admitted5 == 0        # never made a harvest
+    assert res["stats"]["admitted"] == ROUNDS * S - slow_sel
+
+
+# -- transport unit behaviour ------------------------------------------------
+
+class _Echo(Actor):
+    def __init__(self, node_id):
+        self.node_id = node_id
+        self.seen = []
+
+    def on_message(self, src, msg, api):
+        self.seen.append((api.now(), msg["i"]))
+
+
+class _Burst(Actor):
+    node_id = "burst"
+
+    def __init__(self, dst, n, kind="data"):
+        self.dst, self.n, self.kind = dst, n, kind
+
+    def on_start(self, api):
+        for i in range(self.n):
+            api.send(self.dst, {"kind": self.kind, "i": i})
+        api.stop()
+
+
+def test_inproc_fifo_per_pair():
+    """Same-pair messages deliver in send order even at equal latency."""
+    t = InProcTransport(FaultPlan(latency=1.0), seed=0)
+    sink = _Echo("sink")
+    t.add_actor(_Burst("sink", 50))
+    t.add_actor(sink)
+    t.run()
+    assert [i for _, i in sink.seen] == list(range(50))
+
+
+def test_inproc_reorder_overtakes():
+    """reorder=1.0 exempts update-class messages from the FIFO clamp, so a
+    later control message can overtake only when the fault says so."""
+    t = InProcTransport(FaultPlan(latency=1.0, reorder=1.0,
+                                  reorder_delay=5.0), seed=0)
+    sink = _Echo("sink")
+    t.add_actor(_Burst("sink", 1, kind="update"))   # delayed by reorder
+    t.add_actor(sink)
+    t.run()
+    assert sink.seen and sink.seen[0][0] == pytest.approx(6.0)
+
+
+def test_inproc_max_events_guard():
+    """A ping-pong protocol bug raises instead of wedging."""
+    class _Ping(Actor):
+        def __init__(self, me, peer):
+            self.node_id, self.peer = me, peer
+
+        def on_start(self, api):
+            if self.node_id == "a":
+                api.send(self.peer, {"kind": "ping"})
+
+        def on_message(self, src, msg, api):
+            api.send(src, {"kind": "ping"})
+
+    t = InProcTransport(FaultPlan(latency=0.1), seed=0)
+    t.add_actor(_Ping("a", "b"))
+    t.add_actor(_Ping("b", "a"))
+    with pytest.raises(RuntimeError, match="wedged|exceeded"):
+        t.run(max_events=500)
+
+
+def test_fault_decide_draw_count_invariant():
+    """decide() consumes the same rng draws whatever the outcome, so fault
+    probabilities don't perturb the latency stream of later messages."""
+    for plan in (FaultPlan(jitter=0.5),
+                 FaultPlan(jitter=0.5, drop=1.0),
+                 FaultPlan(jitter=0.5, drop=0.0, duplicate=1.0, reorder=1.0,
+                           reorder_delay=1.0)):
+        rng = np.random.default_rng(7)
+        plan.decide("a", "b", "update", rng)
+        follow = rng.uniform()
+        rng2 = np.random.default_rng(7)
+        FaultPlan(jitter=0.5).decide("a", "b", "update", rng2)
+        assert follow == rng2.uniform()
+
+
+def test_backoff_policy():
+    p = BackoffPolicy(base=0.5, factor=2.0, max_delay=3.0, max_attempts=4)
+    assert [p.delay(k) for k in range(4)] == [0.5, 1.0, 2.0, 3.0]
+    assert not p.exhausted(3)
+    assert p.exhausted(4)
+    with pytest.raises(ValueError):
+        BackoffPolicy(base=0.0)
+
+
+# -- checkpointing: pending quantized updates (the PR 7 gap) -----------------
+
+class _FakeAPI:
+    """Minimal TransportAPI capturing sends, for driving the server's
+    handlers synchronously."""
+    node_id = "server"
+
+    def __init__(self):
+        self.sent = []
+        self._t = 0.0
+
+    def now(self):
+        return self._t
+
+    def send(self, dst, msg):
+        self.sent.append((dst, msg))
+
+    def set_timer(self, name, delay):
+        pass
+
+    def cancel_timer(self, name):
+        pass
+
+    def stop(self):
+        pass
+
+
+def _server_with_pending(bits: int):
+    """Drive a server to mid-round with one admitted (pending) update."""
+    from repro.models.classifier import mlp_init
+    params0 = mlp_init(jax.random.PRNGKey(0), 8, 8, 3)
+    cfg = AsyncConfig(n_clients=4, s_selected=2, K=4, rounds=4,
+                      quant_bits=bits, seed=0)
+    srv = FavasAsyncServer(cfg, params0)
+    api = _FakeAPI()
+    srv.on_start(api)
+    srv.on_timer("barrier", api)
+    srv.on_timer("round", api)          # opens round 0, draws k_sel/k_q
+    polled = srv._polled[0]
+    rng = np.random.default_rng(3)
+    bufs = [np.asarray(b) + rng.standard_normal(b.shape).astype(np.float32)
+            for b in srv._server_payload()]
+    srv.on_message(polled, {"kind": "update", "round": 0, "q": 3,
+                            "params": bufs}, api)
+    assert len(srv.pending) == 1        # round still open (s=2)
+    return srv
+
+
+@pytest.mark.parametrize("bits", [0, 4])
+def test_server_checkpoint_roundtrip(bits, tmp_path):
+    """Codes + scales + key chain of the pending admitted update survive
+    save/load bit-exactly, for raw (bits=0) and LUQ (bits=4) admission."""
+    srv = _server_with_pending(bits)
+    state = srv.checkpoint_state()
+    if bits > 0:
+        ent = next(iter(state["pending"].values()))
+        assert ent["codes0"].dtype == np.uint8    # truly held quantized
+        assert ent["scale0"].dtype == np.float32
+    path = srv.save(str(tmp_path), step=0)
+
+    other = _server_with_pending(bits)            # identical protocol point
+    # perturb, then restore: load must win, bit-exactly
+    other.rkey = jax.random.PRNGKey(99)
+    other.srv_f = tuple(b + 1.0 for b in other.srv_f)
+    other.load(path)
+    back = other.checkpoint_state()
+    assert np.array_equal(np.asarray(back["rkey"]), np.asarray(state["rkey"]))
+    for a, b in zip(back["server"], state["server"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for c, ent in state["pending"].items():
+        for k, v in ent.items():
+            got = back["pending"][c][k]
+            assert np.asarray(got).dtype == np.asarray(v).dtype
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(v))
+
+
+def test_quantized_deployment_runs(data):
+    """End-to-end with quant_bits=4: pending updates ride as codes and the
+    run still completes/aggregates."""
+    out = run_inproc(_cfg(rounds=6, quant_bits=4), data, d_hidden=16,
+                     plan=FaultPlan(latency=0.5), seed=0)
+    res = out["server"]
+    assert res["rounds"] == 6
+    assert res["stats"]["admitted"] == 6 * S
+    assert res["final_accuracy"] is not None
+
+
+# -- prefetcher close hardening ----------------------------------------------
+
+def test_prefetcher_close_joins_and_reports():
+    import threading
+    from repro.data.pipeline import BatchPrefetcher
+    before = threading.active_count()
+    pf = BatchPrefetcher(lambda i: np.zeros((4,)), n_steps=100,
+                         to_device=False)
+    pf.get()
+    assert pf.close() is True
+    assert not pf._thread.is_alive()
+    assert threading.active_count() == before
+
+
+def test_prefetcher_close_deadline_warns_on_slow_producer():
+    import time as _time
+    from repro.data.pipeline import BatchPrefetcher
+
+    def slow(i):
+        _time.sleep(1.5)                # longer than the close deadline
+        return np.zeros((2,))
+
+    pf = BatchPrefetcher(slow, n_steps=10, to_device=False)
+    t0 = _time.monotonic()
+    with pytest.warns(RuntimeWarning, match="still alive"):
+        ok = pf.close(timeout=0.3)
+    assert ok is False
+    assert _time.monotonic() - t0 < 1.0   # the deadline is wall-clock
+    pf._thread.join(timeout=5.0)          # producer exits once sleep ends
+    assert not pf._thread.is_alive()
+
+
+# -- Gumbel top-s selection statistics (satellite) ---------------------------
+
+def _chi2_critical(dof: int, z: float = 3.0902) -> float:
+    """Wilson-Hilferty approximation of the chi-square quantile (p=0.999
+    for the default z) — scipy is not available in this environment."""
+    return dof * (1.0 - 2.0 / (9.0 * dof)
+                  + z * np.sqrt(2.0 / (9.0 * dof))) ** 3
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("n,s", [(12, 4), (9, 1)])
+def test_selection_inclusion_frequencies_chi2(n, s):
+    """Gumbel top-s inclusion frequencies match the uniform s/n inclusion
+    probability: chi-square GOF over per-client selection counts across
+    many seeded rounds. (Within-round draws are without replacement, which
+    only shrinks the count variance vs the multinomial null — the test is
+    conservative, catching bias regressions without false alarms.)"""
+    rounds = 4000
+    keys = jax.random.split(jax.random.PRNGKey(123), rounds)
+    idx, mask = jax.vmap(
+        lambda k: sampler.sample_selection_indices(k, n, s))(keys)
+    idx = np.asarray(idx)
+    mask = np.asarray(mask)
+    # every round selects exactly s distinct clients
+    assert mask.sum(axis=1).min() == s and mask.sum(axis=1).max() == s
+    assert all(len(set(row)) == s for row in idx)
+    counts = mask.sum(axis=0)
+    expected = rounds * s / n
+    stat = float(((counts - expected) ** 2 / expected).sum())
+    assert stat < _chi2_critical(n - 1), \
+        f"chi2={stat:.1f} exceeds the p=0.999 critical value"
+
+
+# -- the real multi-process transport ----------------------------------------
+
+@pytest.mark.slow
+def test_proc_transport_smoke(data):
+    """2 real client processes, 20 rounds under injected latency, clean
+    teardown (CI runs the same scenario tier-1 via the cluster CLI)."""
+    cfg = AsyncConfig(n_clients=2, s_selected=1, K=4, batch_size=16,
+                      rounds=20, round_dur=0.4,
+                      fast_step_time=0.1, slow_step_time=0.2, seed=0)
+    x, y, xt, yt, _ = data
+    from repro.data.partition import partition_iid
+    parts = partition_iid(len(y), 2, seed=0)
+    out = run_proc(cfg, (x, y, xt, yt, parts), d_hidden=16,
+                   plan=FaultPlan(latency=0.02), seed=0, timeout=90.0)
+    res = out["server"]
+    assert out["clean"], f"child exit codes: {out['exitcodes']}"
+    assert res["rounds"] == 20
+    assert res["stats"]["admitted"] > 0
+    assert res["final_accuracy"] is not None
+    # the deterministic halves hold on the wall clock too
+    assert res["selection"] == _replay_selection(0, 2, 1, 20)
