@@ -1,0 +1,178 @@
+"""Recovery benchmark: what durability costs and what restarts cost
+(docs/architecture.md §12).
+
+Two questions, one deployment config:
+
+* **WAL overhead** — the same deterministic in-proc run with and without
+  the write-ahead log armed (fsync'd appends + periodic snapshot/rotate).
+  The virtual clock makes the comparison pure compute: any wall-time gap
+  IS the durability tax. Target: <= 10% slowdown (recorded as
+  ``meets_target``); the trajectory must be BIT-EXACT either way — a WAL
+  that perturbs the aggregate is a bug, not an overhead.
+* **recovery time vs WAL length** — kill nothing, just measure
+  :func:`repro.launch.server.recover_server` against logs of growing
+  length (``ckpt_every=0``: pure replay from round 0), plus the
+  snapshotted case showing replay work stays bounded by the checkpoint
+  interval instead of growing with history.
+
+Results go to ``experiments/bench/recovery.json`` AND the repo-root
+``BENCH_recovery.json`` (the perf-trajectory file).
+
+  PYTHONPATH=src:. python benchmarks/recovery_bench.py [--full|--smoke]
+
+``--smoke`` (the CI ``chaos`` job) runs the cheapest defensible check and
+exits non-zero unless the WAL'd run is bit-exact vs the plain run, a
+recovery from its log reproduces the same buckets, and the overhead is
+within the (noise-padded) smoke bound; smoke artifacts go to
+``recovery_smoke.json`` and never overwrite the canonical files.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import save_artifact
+from repro.checkpointing import wal
+from repro.launch.cluster import _smoke_data, recovered_server, run_inproc
+from repro.launch.server import AsyncConfig
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: the headline durability-tax target (full mode reports against this)
+TARGET_OVERHEAD = 0.10
+#: smoke gate: padded for CI timer noise on short runs
+SMOKE_OVERHEAD_BOUND = 0.50
+
+
+def _cfg(rounds: int, bits: int = 0) -> AsyncConfig:
+    return AsyncConfig(n_clients=6, s_selected=2, K=5, batch_size=16,
+                       rounds=rounds, round_dur=7.0, quant_bits=bits,
+                       seed=0)
+
+
+def _bit_exact(a, b) -> bool:
+    sa, sb = a["server_actor"], b["server_actor"]
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(sa.srv_f, sb.srv_f))
+
+
+def _timed_run(cfg, data, wal_dir=None, ckpt_every=0):
+    t0 = time.monotonic()
+    out = run_inproc(cfg, data, d_hidden=16, seed=0,
+                     wal_dir=wal_dir, ckpt_every=ckpt_every)
+    return out, time.monotonic() - t0
+
+
+def _wal_bytes(d: str) -> int:
+    return sum(os.path.getsize(p) for _, p in wal.segment_files(d)) \
+        + sum(os.path.getsize(p) for _, p in wal.snapshot_files(d))
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        rounds, lengths = 6, (6,)
+    elif quick:
+        rounds, lengths = 12, (4, 8, 12)
+    else:
+        rounds, lengths = 24, (6, 12, 24)
+    data = _smoke_data(6, 0)
+    cfg = _cfg(rounds)
+
+    # -- overhead: plain vs WAL'd, same seed, bit-exact required ------------
+    # warmup pays the jit compile off-clock; best-of-N wall time is the
+    # noise-robust estimator for the durability tax
+    reps = 1 if smoke else 2
+    _timed_run(cfg, data)
+    plain, t_plain = _timed_run(cfg, data)
+    for _ in range(reps - 1):
+        t_plain = min(t_plain, _timed_run(cfg, data)[1])
+    work = tempfile.mkdtemp(prefix="recovery_bench_")
+    try:
+        wd = os.path.join(work, "overhead")
+        walled, t_wal = _timed_run(cfg, data, wal_dir=wd, ckpt_every=4)
+        for _ in range(reps - 1):
+            shutil.rmtree(wd)
+            t_wal = min(t_wal, _timed_run(cfg, data, wal_dir=wd,
+                                          ckpt_every=4)[1])
+        overhead = t_wal / max(t_plain, 1e-9) - 1.0
+        out = {
+            "config": {"rounds": rounds, "clients": 6, "selected": 2,
+                       "ckpt_every": 4},
+            "overhead": {
+                "plain_s": t_plain, "wal_s": t_wal,
+                "overhead_frac": overhead,
+                "target_frac": TARGET_OVERHEAD,
+                "meets_target": overhead <= TARGET_OVERHEAD,
+                "bit_exact": _bit_exact(plain, walled),
+                "wal_bytes": _wal_bytes(wd),
+            },
+        }
+
+        # -- recovery time vs WAL length (pure replay, no snapshots) -------
+        rows = []
+        for L in lengths:
+            lcfg = _cfg(L)
+            ldir = os.path.join(work, f"len{L}")
+            lrun, _ = _timed_run(lcfg, data, wal_dir=ldir, ckpt_every=0)
+            records, _ = wal.replay(ldir)
+            t0 = time.monotonic()
+            srv = recovered_server(lcfg, data, d_hidden=16, wal_dir=ldir)
+            t_rec = time.monotonic() - t0
+            exact = all(np.array_equal(np.asarray(x), np.asarray(y))
+                        for x, y in zip(lrun["server_actor"].srv_f,
+                                        srv.srv_f))
+            rows.append({"rounds": L, "wal_records": len(records),
+                         "wal_bytes": _wal_bytes(ldir),
+                         "recovery_s": t_rec, "bit_exact": exact})
+        out["recovery_vs_length"] = rows
+
+        # -- snapshots bound the replay ------------------------------------
+        sdir = os.path.join(work, "snap")
+        srun, _ = _timed_run(cfg, data, wal_dir=sdir, ckpt_every=2)
+        t0 = time.monotonic()
+        srv = recovered_server(cfg, data, d_hidden=16, wal_dir=sdir,
+                               ckpt_every=2)
+        out["recovery_with_snapshots"] = {
+            "ckpt_every": 2, "recovery_s": time.monotonic() - t0,
+            "replayed_records": srv.replay_meta["records"],
+            "bit_exact": all(
+                np.array_equal(np.asarray(x), np.asarray(y))
+                for x, y in zip(srun["server_actor"].srv_f, srv.srv_f)),
+        }
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+    name = "recovery_smoke" if smoke else "recovery"
+    save_artifact(name, out)
+    if not smoke:
+        with open(os.path.join(ROOT, "BENCH_recovery.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    smoke = "--smoke" in (argv or sys.argv[1:])
+    quick = "--full" not in (argv or sys.argv[1:])
+    out = run(quick, smoke=smoke)
+    print(json.dumps(out, indent=2, default=float))
+    if smoke:
+        ov = out["overhead"]
+        ok = (ov["bit_exact"]
+              and ov["overhead_frac"] <= SMOKE_OVERHEAD_BOUND
+              and all(r["bit_exact"] for r in out["recovery_vs_length"])
+              and out["recovery_with_snapshots"]["bit_exact"])
+        if not ok:
+            print("SMOKE GATE FAILED: durability perturbed the trajectory "
+                  "or overhead blew the bound", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,7 +6,8 @@ the roofline/kernel harnesses. ``--full`` runs paper-scale FL simulations
   PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only NAME]
 
 ``--smoke`` asks each benchmark that supports it (data_plane_bench,
-paged_state_bench, quant_fused_bench) for its cheapest defensible check;
+paged_state_bench, quant_fused_bench, async_server_bench, recovery_bench)
+for its cheapest defensible check;
 smoke artifacts go
 to ``*_smoke.json`` and never overwrite the canonical files. Benchmarks
 without a smoke path just run their quick mode.
@@ -31,7 +32,7 @@ def main() -> None:
                             roofline_table, ablation_reweight,
                             round_loop_bench, data_plane_bench,
                             paged_state_bench, quant_fused_bench,
-                            async_server_bench)
+                            async_server_bench, recovery_bench)
 
     suite = [
         ("table1_theory", lambda: theory_table.run(quick)),
@@ -45,6 +46,7 @@ def main() -> None:
                                                             smoke=smoke)),
         ("async_server_bench", lambda: async_server_bench.run(quick,
                                                               smoke=smoke)),
+        ("recovery_bench", lambda: recovery_bench.run(quick, smoke=smoke)),
         ("roofline_table", lambda: roofline_table.run(quick)),
         ("fig1_table2_mnist", lambda: fl_paper.fig1_table2(quick)),
         ("fig2_stragglers_1of9fast", lambda: fl_paper.fig2_stragglers(quick)),
@@ -115,6 +117,13 @@ def _derive(name: str, out) -> str:
                     f";sim={out['simulated']['rounds_per_sec']:.1f}r/s"
                     f";sel_eq={out['selection_identical']}"
                     f";clean={out['clean']}")
+        if name == "recovery_bench":
+            ov = out["overhead"]
+            rec = out["recovery_vs_length"][-1]
+            return (f"wal_overhead={ov['overhead_frac'] * 100:.1f}%"
+                    f";bit_exact={ov['bit_exact']}"
+                    f";recover_{rec['rounds']}r="
+                    f"{rec['recovery_s'] * 1e3:.0f}ms")
         if name == "roofline_table":
             ok = sum(1 for r in out if r["status"] == "ok")
             sk = sum(1 for r in out if r["status"] == "skipped")

@@ -1,3 +1,4 @@
+from repro.checkpointing import wal
 from repro.checkpointing.ckpt import (save_checkpoint, load_checkpoint,
                                       latest_checkpoint,
                                       save_engine_checkpoint,

@@ -1,17 +1,47 @@
 """Checkpointing: pytree <-> flat .npz with '/'-joined key paths (orbax is
-not available offline). Atomic write via tmp-rename; restores into the
-reference tree's structure and dtypes, so sharded trees round-trip after a
-device_get.
+not available offline). Crash-safe write: tmp file -> fsync -> atomic
+rename -> directory fsync, so power loss at any point leaves either the
+old checkpoint set or the complete new file, never a torn visible one;
+:func:`latest_checkpoint` additionally validates candidates newest-first
+and skips any that do not load (a torn or truncated file never shadows an
+older good checkpoint). Restores go into the reference tree's structure
+and dtypes, so sharded trees round-trip after a device_get.
 """
 from __future__ import annotations
 
 import os
 import re
 import tempfile
+import zipfile
 from typing import Any, Optional
 
 import jax
 import numpy as np
+
+
+def _write_npz_atomic(directory: str, final: str, flat: dict) -> str:
+    """tmp + fsync + rename + dir-fsync — the same durability ladder as
+    checkpointing/wal.py snapshots."""
+    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+    try:
+        dfd = os.open(directory, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir fds
+        return final
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+    return final
 
 
 def _path_str(path) -> str:
@@ -35,11 +65,7 @@ def save_checkpoint(directory: str, step: int, tree: Any) -> str:
             arr = arr.astype(np.float32)       # lossless widening
         flat[_path_str(path)] = arr
     final = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **flat)
-    os.replace(tmp, final)
-    return final
+    return _write_npz_atomic(directory, final, flat)
 
 
 def load_checkpoint(path: str, reference: Any) -> Any:
@@ -84,11 +110,7 @@ def save_engine_checkpoint(directory: str, step: int, state: Any) -> str:
         flat[key] = arr
     flat[_META_KEY] = np.array(meta)
     final = os.path.join(directory, f"ckpt_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **flat)
-    os.replace(tmp, final)
-    return final
+    return _write_npz_atomic(directory, final, flat)
 
 
 def load_engine_checkpoint(path: str, state_template: Any) -> Any:
@@ -124,12 +146,31 @@ def load_engine_checkpoint(path: str, state_template: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
+def _readable(path: str) -> bool:
+    """Cheap integrity probe: the zip central directory must parse and
+    every member must decompress (CRC-checked by zipfile). Catches torn
+    tails, truncation, and half-written files without materializing
+    arrays."""
+    try:
+        with zipfile.ZipFile(path) as z:
+            return z.testzip() is None
+    except (zipfile.BadZipFile, OSError, EOFError):
+        return False
+
+
 def latest_checkpoint(directory: str) -> Optional[str]:
+    """Newest checkpoint that actually LOADS. Unreadable/torn candidates
+    (a crash mid-write predating the atomic-rename path, a truncated
+    copy) are skipped, never returned — recovery must not wedge on the
+    highest-numbered file being garbage."""
     if not os.path.isdir(directory):
         return None
-    best = None
+    found = []
     for f in os.listdir(directory):
         m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
-        if m and (best is None or int(m.group(1)) > best[0]):
-            best = (int(m.group(1)), os.path.join(directory, f))
-    return best[1] if best else None
+        if m:
+            found.append((int(m.group(1)), os.path.join(directory, f)))
+    for _, path in sorted(found, reverse=True):
+        if _readable(path):
+            return path
+    return None

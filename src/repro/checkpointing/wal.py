@@ -1,0 +1,266 @@
+"""Crash-safe write-ahead log + snapshots for the async FAVAS server
+(docs/architecture.md §12).
+
+The durability layer under ``launch/server.py::FavasAsyncServer``: every
+protocol transition that affects the aggregate (round start, each admitted
+update, round close) is appended to an on-disk log BEFORE its effects are
+acknowledged, so a restarted server recovers as
+
+    latest valid snapshot  +  replay of the WAL records after it.
+
+Format
+------
+A **record** is a CRC-framed pickled payload::
+
+    [u32 length][u32 crc32(payload)][payload bytes]
+
+Appends are optionally fsynced. On replay, a record whose header is
+incomplete, whose payload is shorter than ``length``, or whose CRC
+mismatches is treated as a **torn tail**: replay stops there and reports
+``torn=True`` — exactly the state a crash mid-``write`` leaves behind.
+Admitted updates are logged in their wire-exact representation (LUQ codes
++ scales when the server runs ``quant_bits > 0``, raw float32 rows
+otherwise), so replay rebuilds the pending set bit-for-bit.
+
+**Segments** (``wal_<idx>.seg``) are append-only and strictly ordered by
+index. A **snapshot** (``snap_<step>.ck``) is one framed record written to
+a tmp file, fsynced, and atomically renamed into place (then the directory
+is fsynced), carrying the segment index replay should resume from; after a
+snapshot lands, older segments and snapshots are pruned. A torn snapshot
+therefore never shadows an older valid one: :func:`latest_snapshot` CRC-
+checks candidates newest-first and skips unreadable ones.
+
+Payloads are pickled (own files, own process — the arrays round-trip
+bit-exactly, including packed uint8 LUQ codes and f32 scales).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import re
+import struct
+import zlib
+from typing import Any, List, Optional, Tuple
+
+_HDR = struct.Struct("<II")
+_SEG_RE = re.compile(r"wal_(\d+)\.seg")
+_SNAP_RE = re.compile(r"snap_(\d+)\.ck")
+
+
+def _encode(obj: Any) -> bytes:
+    return pickle.dumps(obj, protocol=4)
+
+
+def frame(obj: Any) -> bytes:
+    """One CRC-framed record: header + payload."""
+    payload = _encode(obj)
+    return _HDR.pack(len(payload), zlib.crc32(payload)) + payload
+
+
+def read_frames(data: bytes) -> Tuple[List[Any], bool]:
+    """Decode consecutive framed records. Returns ``(records, torn)`` —
+    ``torn`` is True when the buffer ends in an incomplete or CRC-invalid
+    record (everything before it is returned)."""
+    out: List[Any] = []
+    off = 0
+    n = len(data)
+    while off < n:
+        if n - off < _HDR.size:
+            return out, True
+        length, crc = _HDR.unpack_from(data, off)
+        start = off + _HDR.size
+        end = start + length
+        if end > n:
+            return out, True
+        payload = data[start:end]
+        if zlib.crc32(payload) != crc:
+            return out, True
+        out.append(pickle.loads(payload))
+        off = end
+    return out, False
+
+
+# ---------------------------------------------------------------------------
+# segments
+# ---------------------------------------------------------------------------
+
+def segment_files(directory: str) -> List[Tuple[int, str]]:
+    """``(index, path)`` of every WAL segment, ascending."""
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for f in os.listdir(directory):
+        m = _SEG_RE.fullmatch(f)
+        if m:
+            out.append((int(m.group(1)), os.path.join(directory, f)))
+    return sorted(out)
+
+
+def _fsync_dir(directory: str) -> None:
+    try:
+        fd = os.open(directory, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir fds
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+class WalWriter:
+    """Append-only writer. Each :class:`WalWriter` opens a FRESH segment
+    (max existing index + 1), so a recovering server never appends into a
+    possibly-torn predecessor file — the old tail stays readable exactly
+    as the crash left it.
+
+    ``fsync=True`` (the default) makes every append durable before it
+    returns — the write-ahead contract the server's ack path relies on.
+    """
+
+    def __init__(self, directory: str, *, fsync: bool = True):
+        self.directory = directory
+        self.fsync = bool(fsync)
+        os.makedirs(directory, exist_ok=True)
+        segs = segment_files(directory)
+        self._seg_idx = (segs[-1][0] + 1) if segs else 1
+        self._open_segment()
+
+    def _open_segment(self) -> None:
+        self.path = os.path.join(self.directory,
+                                 f"wal_{self._seg_idx:08d}.seg")
+        self._f = open(self.path, "ab")
+        _fsync_dir(self.directory)
+
+    @property
+    def segment_index(self) -> int:
+        return self._seg_idx
+
+    def append(self, obj: Any) -> None:
+        self._f.write(frame(obj))
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def rotate(self) -> int:
+        """Seal the current segment and start the next. Returns the NEW
+        segment index (what a snapshot taken now should record as its
+        replay start)."""
+        self._f.flush()
+        os.fsync(self._f.fileno())
+        self._f.close()
+        self._seg_idx += 1
+        self._open_segment()
+        return self._seg_idx
+
+    def tear_tail(self, nbytes: int) -> None:
+        """Chaos hook: truncate the current segment by ``nbytes`` —
+        models a crash mid-write leaving a torn final record (replay must
+        tolerate it)."""
+        self._f.flush()
+        size = self._f.tell()
+        self._f.truncate(max(size - int(nbytes), 0))
+        os.fsync(self._f.fileno())
+
+    def close(self) -> None:
+        try:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+        finally:
+            self._f.close()
+
+
+def replay(directory: str, start_seg: int = 0) -> Tuple[List[Any], dict]:
+    """Read every record from segments ``>= start_seg`` in index order.
+
+    Returns ``(records, meta)``; ``meta["torn"]`` is True when a segment
+    ended in a torn/CRC-invalid record. Replay stops at the first tear —
+    records in LATER segments (there are none in a crash, but belt and
+    braces) are not trusted past a tear."""
+    records: List[Any] = []
+    meta = {"torn": False, "segments": 0}
+    for idx, path in segment_files(directory):
+        if idx < start_seg:
+            continue
+        with open(path, "rb") as f:
+            recs, torn = read_frames(f.read())
+        records.extend(recs)
+        meta["segments"] += 1
+        if torn:
+            meta["torn"] = True
+            break
+    return records, meta
+
+
+def prune_segments(directory: str, before: int) -> int:
+    """Delete segments with index < ``before`` (covered by a snapshot)."""
+    n = 0
+    for idx, path in segment_files(directory):
+        if idx < before:
+            os.unlink(path)
+            n += 1
+    if n:
+        _fsync_dir(directory)
+    return n
+
+
+# ---------------------------------------------------------------------------
+# snapshots
+# ---------------------------------------------------------------------------
+
+def snapshot_files(directory: str) -> List[Tuple[int, str]]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for f in os.listdir(directory):
+        m = _SNAP_RE.fullmatch(f)
+        if m:
+            out.append((int(m.group(1)), os.path.join(directory, f)))
+    return sorted(out)
+
+
+def save_snapshot(directory: str, step: int, payload: Any) -> str:
+    """One framed+CRC'd record, written tmp -> fsync -> atomic rename ->
+    dir fsync. A crash at ANY point leaves either the old snapshot set or
+    the complete new file — never a half-written visible snapshot."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"snap_{step:08d}.ck")
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(frame(payload))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+    _fsync_dir(directory)
+    return final
+
+
+def load_snapshot(path: str) -> Any:
+    with open(path, "rb") as f:
+        recs, torn = read_frames(f.read())
+    if torn or len(recs) != 1:
+        raise ValueError(f"snapshot {path!r} is torn or malformed")
+    return recs[0]
+
+
+def latest_snapshot(directory: str) -> Optional[str]:
+    """Newest snapshot that actually loads (CRC-valid, complete). Torn or
+    unreadable candidates are skipped, not returned."""
+    for _, path in reversed(snapshot_files(directory)):
+        try:
+            load_snapshot(path)
+            return path
+        except (ValueError, OSError, pickle.UnpicklingError, EOFError):
+            continue
+    return None
+
+
+def prune_snapshots(directory: str, keep: int = 2) -> int:
+    """Keep the newest ``keep`` snapshots, delete the rest."""
+    snaps = snapshot_files(directory)
+    n = 0
+    for _, path in snaps[:-keep] if keep > 0 else snaps:
+        os.unlink(path)
+        n += 1
+    if n:
+        _fsync_dir(directory)
+    return n

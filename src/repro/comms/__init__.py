@@ -1,7 +1,8 @@
 """Async transport substrate: the actor contract, the deterministic
 virtual-clock transport, the real multi-process endpoint, fault injection,
 and the client-push retry policy (docs/architecture.md §11)."""
-from repro.comms.faults import (Decision, FaultPlan, UPDATE_KINDS,
+from repro.comms.faults import (Decision, FaultPlan, ServerCrashSwitch,
+                                SimulatedCrash, UPDATE_KINDS,
                                 symmetric_latency_table)
 from repro.comms.retry import BackoffPolicy
 from repro.comms.transport import (Actor, InProcTransport, ProcEndpoint,
@@ -9,6 +10,6 @@ from repro.comms.transport import (Actor, InProcTransport, ProcEndpoint,
 
 __all__ = [
     "Actor", "BackoffPolicy", "Decision", "FaultPlan", "InProcTransport",
-    "ProcEndpoint", "TransportAPI", "UPDATE_KINDS",
-    "symmetric_latency_table",
+    "ProcEndpoint", "ServerCrashSwitch", "SimulatedCrash", "TransportAPI",
+    "UPDATE_KINDS", "symmetric_latency_table",
 ]

@@ -14,10 +14,19 @@ the network may do to a FAVAS deployment:
   messages (tick/poll/reset) ride a reliable channel, data pushes do not,
   which is exactly what the client-side retry/backoff path exists to
   survive;
-* **crash-and-rejoin** — per-node outage windows ``[t_down, t_up)``: the
-  transport blackholes every message to or from the node inside the window
-  and delivers ``on_crash`` / ``on_rejoin`` control events at the
-  boundaries (InProc transport; real processes crash for real).
+* **crash-and-rejoin** — per-node outage windows ``[t_down, t_up)`` (one
+  window or a list of them): the transport blackholes every message to or
+  from the node inside a window and delivers ``on_crash`` / ``on_rejoin``
+  control events at the boundaries (InProc transport; real processes
+  crash for real);
+* **server kill points** — :class:`ServerCrashSwitch` arms a named
+  DURABILITY point inside the server (``admit``, ``close``,
+  ``round_start``): the k-th hit raises :class:`SimulatedCrash`
+  (optionally tearing the WAL tail first, the torn-write crash model) and
+  ``InProcTransport`` marks the node killed until a supervisor swaps in a
+  recovered actor via ``revive()``. This is how the chaos suite kills the
+  server BETWEEN a log write and its acknowledgement — an interleaving a
+  time-based crash window cannot express.
 
 Every stochastic decision is drawn from an ``np.random.Generator`` owned by
 the transport, consumed in deterministic event order — under
@@ -35,6 +44,46 @@ import numpy as np
 #: data-plane classes; everything else is control-plane and only sees
 #: latency/straggler/crash effects)
 UPDATE_KINDS = ("update",)
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised inside an actor handler to model the process dying at a
+    durability point. ``InProcTransport`` catches it, marks the node
+    killed (blackholed, timers invalidated), and lets a supervisor
+    ``revive()`` a recovered replacement actor."""
+
+
+@dataclasses.dataclass
+class ServerCrashSwitch:
+    """Deterministic kill switch for the chaos suite: counts hits of
+    named durability points and raises :class:`SimulatedCrash` on the
+    ``at``-th hit of ``point`` (1-based). With ``tear_bytes > 0`` the
+    WAL's open segment is truncated by that many bytes first — the crash
+    happens MID-write and replay must tolerate the torn record."""
+    point: str
+    at: int = 1
+    tear_bytes: int = 0
+    fired: bool = False
+    counts: dict = dataclasses.field(default_factory=dict)
+
+    def hit(self, point: str, wal=None) -> None:
+        if self.fired:
+            return
+        c = self.counts.get(point, 0) + 1
+        self.counts[point] = c
+        if point == self.point and c == self.at:
+            self.fired = True
+            if self.tear_bytes > 0 and wal is not None:
+                wal.tear_tail(self.tear_bytes)
+            raise SimulatedCrash(f"server killed at {point} #{c}")
+
+
+def _as_windows(value) -> Tuple[Tuple[float, float], ...]:
+    """Normalize a crash entry: one ``(t0, t1)`` pair or a list of pairs."""
+    seq = list(value)
+    if len(seq) == 2 and all(isinstance(x, (int, float)) for x in seq):
+        return ((float(seq[0]), float(seq[1])),)
+    return tuple((float(a), float(b)) for a, b in seq)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -76,10 +125,12 @@ class FaultPlan:
             p = getattr(self, name)
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{name} must be a probability, got {p}")
-        for node, (t0, t1) in dict(self.crash).items():
-            if t1 < t0:
-                raise ValueError(
-                    f"crash window for {node!r} is reversed: ({t0}, {t1})")
+        for node, value in dict(self.crash).items():
+            for t0, t1 in _as_windows(value):
+                if t1 < t0:
+                    raise ValueError(
+                        f"crash window for {node!r} is reversed: "
+                        f"({t0}, {t1})")
 
     # -- helpers ------------------------------------------------------------
 
@@ -91,9 +142,13 @@ class FaultPlan:
         return (base * float(self.straggler.get(src, 1.0))
                 * float(self.straggler.get(dst, 1.0)))
 
+    def windows(self, node: str) -> Tuple[Tuple[float, float], ...]:
+        """The node's crash windows (possibly several), normalized."""
+        value = self.crash.get(node)
+        return _as_windows(value) if value is not None else ()
+
     def is_down(self, node: str, t: float) -> bool:
-        win = self.crash.get(node)
-        return win is not None and win[0] <= t < win[1]
+        return any(t0 <= t < t1 for t0, t1 in self.windows(node))
 
     def decide(self, src: str, dst: str, kind: str,
                rng: np.random.Generator) -> Decision:

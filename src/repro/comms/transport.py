@@ -40,7 +40,7 @@ from typing import Any, Callable, Dict, Optional
 
 import numpy as np
 
-from repro.comms.faults import FaultPlan
+from repro.comms.faults import FaultPlan, SimulatedCrash
 
 #: minimum spacing enforced between FIFO deliveries on one (src, dst) pair
 _FIFO_EPS = 1e-9
@@ -143,8 +143,10 @@ class InProcTransport:
         self._timer_tok: Dict[tuple, int] = {}
         self._fifo_last: Dict[tuple, float] = {}
         self._stopped: set = set()
+        self._killed: set = set()
+        self._begun = False
         self.stats = {"delivered": 0, "dropped": 0, "duplicated": 0,
-                      "blackholed": 0, "events": 0}
+                      "blackholed": 0, "events": 0, "kills": 0}
 
     # -- wiring -------------------------------------------------------------
 
@@ -188,6 +190,42 @@ class InProcTransport:
         self._timer_tok[(node, name)] = \
             self._timer_tok.get((node, name), 0) + 1
 
+    # -- kill / revive (the chaos-supervisor hooks) -------------------------
+
+    def _down(self, node: str, t: float) -> bool:
+        return node in self._killed or self.plan.is_down(node, t)
+
+    def _kill(self, node: str) -> None:
+        """Mark a node dead mid-handler (a SimulatedCrash escaped it):
+        messages to/from it blackhole and every pending timer is
+        invalidated — exactly what losing the process loses."""
+        self._killed.add(node)
+        self.stats["kills"] += 1
+        for key in list(self._timer_tok):
+            if key[0] == node:
+                self._timer_tok[key] += 1
+
+    def revive(self, actor: Actor) -> None:
+        """Swap a (recovered) replacement actor in for a killed node and
+        start it — the supervisor step of the chaos harness. The new
+        actor's ``on_start`` runs at the current virtual time."""
+        node = actor.node_id
+        if node not in self._actors:
+            raise KeyError(f"revive of unknown node {node!r}")
+        self._actors[node] = actor
+        self._apis[node] = _InProcAPI(self, node)
+        self._killed.discard(node)
+        actor.on_start(self._apis[node])
+
+    def done(self) -> bool:
+        """No more work: heap drained or every actor stopped."""
+        return not self._heap or len(self._stopped) == len(self._actors)
+
+    def killed_nodes(self) -> frozenset:
+        """Nodes currently dead from an escaped SimulatedCrash (a
+        supervisor polls this between ``run(until=...)`` slices)."""
+        return frozenset(self._killed)
+
     # -- the event loop -----------------------------------------------------
 
     def run(self, until: Optional[float] = None,
@@ -195,18 +233,30 @@ class InProcTransport:
         """Drive the simulation until the heap drains, every actor stopped,
         virtual time passes ``until``, or ``max_events`` dispatches — the
         last is the anti-wedge guard: a protocol bug that ping-pongs
-        forever raises instead of hanging the test runner."""
-        for node, (t0, t1) in dict(self.plan.crash).items():
-            self._push(float(t0), "crash", node)
-            self._push(float(t1), "rejoin", node)
-        for node, actor in self._actors.items():
-            actor.on_start(self._apis[node])
+        forever raises instead of hanging the test runner.
+
+        ``run`` is RESUMABLE: actors start (and crash windows schedule)
+        only on the first call, and an event past ``until`` is pushed back
+        unconsumed — so stepping the clock in slices is event-for-event
+        identical to one uninterrupted run (the chaos harness interleaves
+        ``run(until=...)`` with server recovery)."""
+        if not self._begun:
+            self._begun = True
+            for node in dict(self.plan.crash):
+                for t0, t1 in self.plan.windows(node):
+                    self._push(float(t0), "crash", node)
+                    self._push(float(t1), "rejoin", node)
+            for node, actor in self._actors.items():
+                actor.on_start(self._apis[node])
         n_events = 0
         while self._heap:
             if len(self._stopped) == len(self._actors):
                 break
-            t, _, kind, payload = heapq.heappop(self._heap)
+            item = heapq.heappop(self._heap)
+            t, _, kind, payload = item
             if until is not None and t > until:
+                heapq.heappush(self._heap, item)   # unconsumed: resumable
+                self._now = max(self._now, until)
                 break
             n_events += 1
             if n_events > max_events:
@@ -214,24 +264,29 @@ class InProcTransport:
                     f"InProcTransport exceeded {max_events} events at "
                     f"virtual time {t:.3f} — wedged protocol?")
             self._now = max(self._now, t)
-            self.stats["events"] = n_events
+            self.stats["events"] += 1
             if kind == "msg":
                 src, dst, msg = payload
                 if dst in self._stopped:
                     continue
-                if (self.plan.is_down(dst, self._now)
-                        or self.plan.is_down(src, self._now)):
+                if self._down(dst, self._now) or self._down(src, self._now):
                     self.stats["blackholed"] += 1
                     continue
                 self.stats["delivered"] += 1
-                self._actors[dst].on_message(src, msg, self._apis[dst])
+                try:
+                    self._actors[dst].on_message(src, msg, self._apis[dst])
+                except SimulatedCrash:
+                    self._kill(dst)
             elif kind == "timer":
                 node, name, tok = payload
                 if (node in self._stopped
                         or self._timer_tok.get((node, name)) != tok
-                        or self.plan.is_down(node, self._now)):
+                        or self._down(node, self._now)):
                     continue   # cancelled / superseded / node is down
-                self._actors[node].on_timer(name, self._apis[node])
+                try:
+                    self._actors[node].on_timer(name, self._apis[node])
+                except SimulatedCrash:
+                    self._kill(node)
             elif kind == "crash":
                 (node,) = payload
                 if node not in self._stopped:

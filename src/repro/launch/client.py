@@ -19,11 +19,24 @@ The client owns THREE pieces of state the simulator kept server-side:
   :class:`repro.comms.retry.BackoffPolicy` schedule until the server acks
   it (``stale`` acks stop the retries too: the round closed without us,
   our progress simply keeps accumulating like an unselected client's).
+  Every NEW push carries a monotone ``seq`` stamp that retransmits reuse
+  — the server's exactly-once dedup ledger keys on ``(client, round,
+  seq)``, so a retry of an update that was durably admitted before a
+  server crash is acked-but-ignored after recovery.
 
 Crash-and-rejoin: the transport blackholes a crashed client and fires
 ``on_rejoin``; the client then sends ``join`` and resynchronizes from the
 server's ``sync`` reply (params adopted, q -> 0), rejoining the population
 exactly like a fresh reset.
+
+Server recovery (docs/architecture.md §12): a restarted server announces
+a ``recover`` hello (its new epoch + current round) and re-broadcasts the
+open round's ticks and the last close's resets. The client is idempotent
+against all of that: ticks and resets are deduplicated BY ROUND
+(``_last_tick_round`` / ``_last_reset_round``), so a re-broadcast never
+double-advances the credit clock or re-zeroes ``q``, and the ``recover``
+hello makes the client retransmit its still-unacked pushes immediately
+instead of waiting out the backoff schedule.
 """
 from __future__ import annotations
 
@@ -83,9 +96,14 @@ class LocalSGDClient(Actor):
                                               n_classes), eta)
         self.backoff = backoff or BackoffPolicy()
         self._inflight = {}             # round -> {"msg", "attempt"}
+        self._seq = 0                   # exactly-once stamp for NEW pushes
+        self._last_tick_round = -1      # idempotency vs recovery re-sends
+        self._last_reset_round = -1
+        self.server_epoch = 0           # learned from the recover hello
         self.log: List[dict] = []       # per-round credit/step records
         self.stats = {"rounds": 0, "pushes": 0, "retries": 0, "gave_up": 0,
-                      "stale_acks": 0, "resets": 0, "rejoins": 0}
+                      "stale_acks": 0, "resets": 0, "rejoins": 0,
+                      "recovers_seen": 0}
 
     # -- local compute -------------------------------------------------------
 
@@ -131,10 +149,17 @@ class LocalSGDClient(Actor):
         elif kind == "ack":
             self._on_ack(msg, api)
         elif kind in ("reset", "sync"):
+            if kind == "reset":
+                r = int(msg.get("round", -1))
+                if r <= self._last_reset_round:
+                    return               # recovery re-send: already applied
+                self._last_reset_round = r
             bufs = [jnp.asarray(b) for b in msg["params"]]
             self.params = round_engine.unflatten_tree(self.spec, bufs)
             self.q = 0
             self.stats["resets" if kind == "reset" else "rejoins"] += 1
+        elif kind == "recover":
+            self._on_recover(msg, api)
         elif kind == "stop":
             api.send(SERVER, {"kind": "bye", "log": list(self.log)})
             api.stop()
@@ -149,7 +174,10 @@ class LocalSGDClient(Actor):
     # -- push path -----------------------------------------------------------
 
     def _on_tick(self, msg, api: TransportAPI) -> None:
-        r = msg["round"]
+        r = int(msg["round"])
+        if r <= self._last_tick_round:
+            return                       # recovery re-broadcast: no-op
+        self._last_tick_round = r
         do = self._credit_clock()
         self._train(do)
         self.q += do
@@ -160,10 +188,23 @@ class LocalSGDClient(Actor):
             bufs = [np.asarray(b) for b in
                     round_engine.flatten_tree(self.spec, self.params)]
             push = {"kind": "update", "round": r, "client": self.node_id,
-                    "q": self.q, "params": bufs}
+                    "q": self.q, "seq": self._seq, "params": bufs}
+            self._seq += 1               # retransmits reuse the stamp
             self._inflight[r] = {"msg": push, "attempt": 0}
             api.send(SERVER, push)
             self.stats["pushes"] += 1
+            api.set_timer(f"push:{r}", self.backoff.delay(0))
+
+    def _on_recover(self, msg, api: TransportAPI) -> None:
+        """Server came back: adopt its epoch and retransmit every unacked
+        push NOW (fresh backoff) — the dedup ledger makes this safe even
+        when the original was admitted just before the crash."""
+        self.server_epoch = int(msg.get("epoch", self.server_epoch))
+        self.stats["recovers_seen"] += 1
+        for r, ent in self._inflight.items():
+            ent["attempt"] = 0
+            api.send(SERVER, ent["msg"])
+            self.stats["retries"] += 1
             api.set_timer(f"push:{r}", self.backoff.delay(0))
 
     def _on_ack(self, msg, api: TransportAPI) -> None:

@@ -1,0 +1,497 @@
+"""Durability & crash-recovery suite (docs/architecture.md §12).
+
+The headline claim: a FAVAS server killed at an ADVERSARIAL durability
+point — mid-round with partial admissions, between the durable close
+record and its effects, at a fresh round start, or mid-WAL-write leaving
+a torn final record — and restarted from snapshot + WAL replay finishes
+the run with buckets BIT-EXACT to an uninterrupted run on the same seed,
+for raw and LUQ-quantized admission alike. The argument: buckets depend
+only on the selection stream (re-derived from the logged key chain), the
+admitted sets (the close records), the admitted entries (the admit
+records, wire-exact), and the q values — none of which see the clock, so
+stretching a round across a crash is invisible to the aggregate.
+
+Around the headline:
+
+* wal.py unit coverage — CRC framing, torn-tail tolerance at EVERY
+  truncation offset, segment rotation/pruning, snapshot atomicity and
+  torn-snapshot skipping;
+* the exactly-once ledger — a retransmit of an update that was durably
+  admitted (before or after a crash) is acked-but-ignored, never
+  double-admitted;
+* the harvest-timer race — a late duplicate arriving after an early
+  close is stale-acked, not admitted into the next round;
+* ckpt.py hardening — ``latest_checkpoint`` skips torn/unreadable
+  candidates instead of wedging recovery on them;
+* AsyncConfig validation — nonsense deployments are rejected at
+  construction, not at round 40;
+* the real-process supervisor (slow) — SIGKILL the server child behind
+  its pipe proxies, respawn with ``recover=True``, and the run still
+  completes every round with a nonzero crash count.
+"""
+import os
+import signal
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpointing import wal
+from repro.checkpointing.ckpt import latest_checkpoint, save_checkpoint
+from repro.comms import FaultPlan, ServerCrashSwitch, SimulatedCrash
+from repro.launch.cluster import (_smoke_data, run_inproc, run_inproc_chaos,
+                                  run_proc_supervised)
+from repro.launch.server import (AsyncConfig, FavasAsyncServer,
+                                 recover_server)
+
+# -- per-test wedge guard ----------------------------------------------------
+
+TEST_TIMEOUT_S = 300
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout():
+    """Fail fast instead of hanging the runner if a transport wedges."""
+    if not hasattr(signal, "SIGALRM"):     # non-POSIX: no guard
+        yield
+        return
+
+    def _alarm(signum, frame):
+        raise RuntimeError(
+            f"test exceeded the {TEST_TIMEOUT_S}s wedge guard")
+
+    old = signal.signal(signal.SIGALRM, _alarm)
+    signal.alarm(TEST_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)
+
+
+# -- wal.py: framing, torn tails, segments, snapshots ------------------------
+
+def test_frame_roundtrip():
+    recs = [{"kind": "round_start", "round": 0},
+            {"kind": "admit", "entry": {"q": np.int32(3),
+                                        "codes0": np.arange(7, dtype=np.uint8),
+                                        "scale0": np.float32(0.25)}},
+            {"kind": "close", "admitted": ["client0", "client3"]}]
+    blob = b"".join(wal.frame(r) for r in recs)
+    back, torn = wal.read_frames(blob)
+    assert not torn
+    assert len(back) == len(recs)
+    np.testing.assert_array_equal(back[1]["entry"]["codes0"],
+                                  recs[1]["entry"]["codes0"])
+    assert back[2] == recs[2]
+
+
+def test_read_frames_torn_at_every_offset():
+    """Truncating the buffer at ANY byte boundary yields the whole-record
+    prefix plus torn=True — never an exception, never a partial record."""
+    recs = [{"i": i, "pad": "x" * i} for i in range(4)]
+    blob = b"".join(wal.frame(r) for r in recs)
+    whole = []
+    off = 0
+    for r in recs:
+        off += len(wal.frame(r))
+        whole.append(off)
+    boundaries = {0, *whole}
+    for cut in range(len(blob) + 1):
+        got, torn = wal.read_frames(blob[:cut])
+        assert len(got) == sum(1 for o in whole if o <= cut)
+        assert torn == (cut not in boundaries)
+
+
+def test_read_frames_crc_corruption():
+    blob = wal.frame({"a": 1}) + wal.frame({"b": 2})
+    bad = blob[:len(blob) - 3] + bytes([blob[-3] ^ 0xFF]) + blob[-2:]
+    got, torn = wal.read_frames(bad)
+    assert torn and len(got) == 1 and got[0] == {"a": 1}
+
+
+def test_wal_writer_rotation_and_replay(tmp_path):
+    d = str(tmp_path)
+    w = wal.WalWriter(d)
+    assert w.segment_index == 1
+    w.append({"n": 1})
+    w.append({"n": 2})
+    assert w.rotate() == 2
+    w.append({"n": 3})
+    w.close()
+    recs, meta = wal.replay(d)
+    assert [r["n"] for r in recs] == [1, 2, 3]
+    assert meta == {"torn": False, "segments": 2}
+    # replay from the rotated segment skips the sealed one
+    recs2, _ = wal.replay(d, start_seg=2)
+    assert [r["n"] for r in recs2] == [3]
+    # pruning below the start segment deletes only the sealed file
+    assert wal.prune_segments(d, before=2) == 1
+    assert [i for i, _ in wal.segment_files(d)] == [2]
+
+
+def test_wal_writer_reopen_never_appends_into_torn_tail(tmp_path):
+    d = str(tmp_path)
+    w = wal.WalWriter(d)
+    w.append({"n": 1})
+    w.append({"n": 2})
+    w.tear_tail(3)                      # crash mid-write of record 2
+    w.close()
+    w2 = wal.WalWriter(d)               # the restarted server's writer
+    assert w2.segment_index == 2        # fresh segment, torn tail untouched
+    w2.append({"n": 3})
+    w2.close()
+    recs, meta = wal.replay(d)
+    assert [r["n"] for r in recs] == [1]
+    assert meta["torn"]                 # replay stopped at the tear
+
+
+def test_snapshot_roundtrip_and_torn_skip(tmp_path):
+    d = str(tmp_path)
+    wal.save_snapshot(d, 2, {"round": 2, "x": np.arange(5)})
+    p3 = wal.save_snapshot(d, 3, {"round": 3})
+    with open(p3, "r+b") as f:          # tear the NEWEST snapshot
+        f.truncate(os.path.getsize(p3) - 2)
+    best = wal.latest_snapshot(d)
+    assert best is not None and best.endswith("snap_00000002.ck")
+    state = wal.load_snapshot(best)
+    assert state["round"] == 2
+    np.testing.assert_array_equal(state["x"], np.arange(5))
+    with pytest.raises(ValueError):
+        wal.load_snapshot(p3)
+
+
+def test_prune_snapshots_keeps_newest(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        wal.save_snapshot(d, s, {"s": s})
+    assert wal.prune_snapshots(d, keep=2) == 2
+    assert [s for s, _ in wal.snapshot_files(d)] == [3, 4]
+
+
+# -- ckpt.py hardening (satellite) -------------------------------------------
+
+def test_latest_checkpoint_skips_torn_candidate(tmp_path):
+    d = str(tmp_path)
+    good = save_checkpoint(d, 1, {"w": np.arange(4, dtype=np.float32)})
+    # a higher-numbered file that is garbage (pre-atomic-write crash relic)
+    with open(os.path.join(d, "ckpt_00000002.npz"), "wb") as f:
+        f.write(b"PK\x03\x04 not actually a zip")
+    assert latest_checkpoint(d) == good
+    # truncated copy of a real checkpoint is also skipped
+    blob = open(good, "rb").read()
+    with open(os.path.join(d, "ckpt_00000003.npz"), "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    assert latest_checkpoint(d) == good
+
+
+# -- AsyncConfig validation (satellite) --------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {"round_dur": 0.0}, {"round_dur": -1.0},
+    {"n_clients": 0}, {"n_clients": -2},
+    {"quant_bits": 3}, {"quant_bits": 16}, {"quant_bits": -4},
+    {"harvest_frac": 0.0}, {"harvest_frac": 1.5},
+    {"n_clients": 2, "s_selected": 3},
+])
+def test_async_config_rejects_nonsense(kw):
+    base = dict(n_clients=4, s_selected=2)
+    base.update(kw)
+    with pytest.raises(ValueError):
+        AsyncConfig(**base)
+
+
+@pytest.mark.parametrize("bits", [0, 2, 4, 8])
+def test_async_config_accepts_codec_widths(bits):
+    assert AsyncConfig(quant_bits=bits).quant_bits == bits
+
+
+# -- exactly-once ledger + harvest race (driven handlers) --------------------
+
+class _FakeAPI:
+    """Minimal TransportAPI capturing sends/timers, for driving the
+    server's handlers synchronously."""
+    node_id = "server"
+
+    def __init__(self):
+        self.sent = []
+        self.timers = []
+
+    def now(self):
+        return 0.0
+
+    def send(self, dst, msg):
+        self.sent.append((dst, msg))
+
+    def set_timer(self, name, delay):
+        self.timers.append((name, delay))
+
+    def cancel_timer(self, name):
+        pass
+
+    def stop(self):
+        pass
+
+
+def _mk_server(**kw):
+    from repro.models.classifier import mlp_init
+    params0 = mlp_init(jax.random.PRNGKey(0), 8, 8, 3)
+    cfg = AsyncConfig(n_clients=4, s_selected=2, K=4, rounds=4,
+                      **{k: v for k, v in kw.items()
+                         if k in AsyncConfig.__dataclass_fields__})
+    srv = FavasAsyncServer(
+        cfg, params0,
+        wal_dir=kw.get("wal_dir"), ckpt_every=kw.get("ckpt_every", 0))
+    api = _FakeAPI()
+    srv.on_start(api)
+    srv.on_timer("barrier", api)
+    srv.on_timer("round", api)          # opens round 0
+    return srv, api, params0
+
+
+def _push(srv, client, rnd, seq, api, q=3, jiggle=1.0):
+    rng = np.random.default_rng(seq + 11)
+    bufs = [np.asarray(b)
+            + jiggle * rng.standard_normal(b.shape).astype(np.float32)
+            for b in srv._server_payload()]
+    srv.on_message(client, {"kind": "update", "round": rnd, "q": q,
+                            "seq": seq, "params": bufs}, api)
+
+
+def _acks(api, dst):
+    return [m for d, m in api.sent if d == dst and m.get("kind") == "ack"]
+
+
+def test_ledger_dedups_retransmit_same_incarnation():
+    srv, api, _ = _mk_server()
+    c = srv._polled[0]
+    _push(srv, c, 0, 0, api)
+    assert srv.stats["admitted"] == 1
+    buckets = [np.array(srv.pending[c][k]) for k in sorted(srv.pending[c])]
+    _push(srv, c, 0, 0, api)            # retransmit, same (round, seq)
+    assert srv.stats["admitted"] == 1   # not double-admitted
+    assert srv.stats["dedup"] == 1
+    assert len(_acks(api, c)) == 2      # but still acked (retries must stop)
+    for k, v in zip(sorted(srv.pending[c]), buckets):
+        np.testing.assert_array_equal(np.asarray(srv.pending[c][k]), v)
+
+
+def test_ledger_dedups_retransmit_across_restart(tmp_path):
+    """The acceptance regression: update admitted + WAL-logged, server
+    dies before acking, client retransmits into the RECOVERED server —
+    acked-but-ignored, exactly one admission survives."""
+    wd = str(tmp_path)
+    srv, api, params0 = _mk_server(wal_dir=wd)
+    c = srv._polled[0]
+    _push(srv, c, 0, 0, api)
+    assert srv.stats["admitted"] == 1
+    entry = {k: np.array(v) for k, v in srv.pending[c].items()}
+
+    srv2 = recover_server(srv.cfg, params0, wd)   # the old process is gone
+    api2 = _FakeAPI()
+    srv2.on_start(api2)                 # resume protocol, not the barrier
+    assert srv2.epoch == 1
+    assert srv2.stats["recoveries"] == 1
+    assert [m["kind"] for _, m in api2.sent].count("recover") == 4
+    # replay rebuilt the pending admission bit-exactly
+    assert srv2.stats["admitted"] == 1
+    for k, v in entry.items():
+        np.testing.assert_array_equal(np.asarray(srv2.pending[c][k]), v)
+    # the retransmit (client never saw an ack) is dedup-acked, not admitted
+    _push(srv2, c, 0, 0, api2)
+    assert srv2.stats["admitted"] == 1
+    assert srv2.stats["dedup"] == 1
+    acks = _acks(api2, c)
+    assert acks and acks[-1]["stale"] is False    # round still open
+
+
+def test_harvest_race_late_duplicate_not_admitted_next_round():
+    """Satellite regression: all polled clients deliver -> early close;
+    a duplicate of an ADMITTED round-0 update arriving after the close
+    (the harvest-timer race window) is stale-acked and must not leak
+    into round 1's pending set."""
+    srv, api, _ = _mk_server()
+    polled = list(srv._polled)
+    for i, c in enumerate(polled):
+        _push(srv, c, 0, i, api)
+    assert srv.stats["rounds"] == 1     # early close fired
+    assert not srv._open and not srv.pending
+    n_stale = len(srv.staleness)
+
+    late = polled[0]
+    _push(srv, late, 0, 0, api)         # the straggling duplicate copy
+    assert srv.stats["dedup"] == 1
+    assert _acks(api, late)[-1]["stale"] is True
+    assert not srv.pending              # NOT admitted anywhere
+
+    srv.on_timer("round", api)          # round 1 opens
+    assert srv._open and srv.round == 1
+    assert not srv.pending              # and starts empty
+    assert len(srv.staleness) == n_stale
+    # an unstamped duplicate (no seq) after close is also stale-acked
+    srv2, api2, _ = _mk_server()
+    for i, c in enumerate(srv2._polled):
+        _push(srv2, c, 0, i, api2)
+    dup = {"kind": "update", "round": 0, "q": 3,
+           "params": srv2._server_payload()}
+    srv2.on_message(srv2._polled[0], dup, api2)
+    assert _acks(api2, srv2._polled[0])[-1]["stale"] is True
+    assert srv2.stats["late"] == 1
+
+
+# -- the headline: adversarial kills, bit-exact recovery ---------------------
+
+N, S, ROUNDS = 6, 2, 8
+
+
+def _cfg(bits=0):
+    return AsyncConfig(n_clients=N, s_selected=S, K=5, eta=0.2,
+                       batch_size=16, rounds=ROUNDS, round_dur=7.0,
+                       quant_bits=bits, seed=0)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return _smoke_data(N, 0)
+
+
+@pytest.fixture(scope="module")
+def baseline(data):
+    """Uninterrupted runs, one per codec width."""
+    return {bits: run_inproc(_cfg(bits), data, d_hidden=16, seed=0)
+            for bits in (0, 4)}
+
+
+def _assert_bit_exact(base, out):
+    a, b = base["server_actor"], out["server_actor"]
+    for x, y in zip(a.srv_f, b.srv_f):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    for x, y in zip(a.cli_f, b.cli_f):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert base["server"]["selection"] == out["server"]["selection"]
+    assert base["server"]["alpha"] == out["server"]["alpha"]
+    # staleness is logged in admission-arrival order, which recovery's
+    # re-timed round may permute WITHIN a round — the multiset is exact
+    assert sorted(base["server"]["staleness"]) == \
+        sorted(out["server"]["staleness"])
+
+
+@pytest.mark.parametrize("bits", [0, 4])
+@pytest.mark.parametrize("point,at,tear", [
+    ("admit", 3, 0),        # mid-round, partial admissions already durable
+    ("close", 2, 0),        # between the durable close and its resets
+    ("round_start", 4, 0),  # fresh round logged, no tick ever sent
+    ("admit", 2, 3),        # crash MID-write: torn final record on disk
+])
+def test_kill_and_recover_bit_exact(data, baseline, tmp_path, bits, point,
+                                    at, tear):
+    out = run_inproc_chaos(
+        _cfg(bits), data, d_hidden=16, wal_dir=str(tmp_path), ckpt_every=3,
+        kills=[ServerCrashSwitch(point=point, at=at, tear_bytes=tear)],
+        seed=0)
+    assert out["recoveries"] == 1
+    assert out["transport"]["kills"] == 1
+    assert out["server"]["rounds"] == ROUNDS
+    assert out["server"]["stats"]["recoveries"] == 1
+    _assert_bit_exact(baseline[bits], out)
+    if tear:
+        # the recovered server really did replay up to a torn tail
+        assert out["server_actor"].replay_meta["torn"] is True
+
+
+def test_double_kill_recovers_twice(data, baseline, tmp_path):
+    """Two kills in one run — the second incarnation dies too and the
+    THIRD still lands bit-exact (snapshot + replay composes)."""
+    out = run_inproc_chaos(
+        _cfg(0), data, d_hidden=16, wal_dir=str(tmp_path), ckpt_every=2,
+        kills=[ServerCrashSwitch(point="admit", at=2),
+               ServerCrashSwitch(point="close", at=2)],
+        seed=0)
+    assert out["recoveries"] == 2
+    assert out["server"]["stats"]["recoveries"] == 2
+    assert out["server"]["rounds"] == ROUNDS
+    _assert_bit_exact(baseline[0], out)
+    # checkpoints rotated and pruned along the way
+    assert wal.snapshot_files(str(tmp_path))
+
+
+def test_chaos_without_checkpoints_pure_replay(data, baseline, tmp_path):
+    """ckpt_every=0: recovery is a FULL log replay from round 0 — the
+    snapshot is an optimization, not a correctness ingredient."""
+    out = run_inproc_chaos(
+        _cfg(0), data, d_hidden=16, wal_dir=str(tmp_path), ckpt_every=0,
+        kills=[ServerCrashSwitch(point="close", at=5)], seed=0)
+    assert out["recoveries"] == 1
+    assert not wal.snapshot_files(str(tmp_path))
+    _assert_bit_exact(baseline[0], out)
+
+
+def test_stepped_run_equals_single_run(data, baseline):
+    """The chaos harness's run(until=...) slicing is event-for-event
+    identical to one uninterrupted run — the resumability precondition."""
+    from repro.comms import InProcTransport
+    from repro.launch.cluster import build_deployment
+    cfg = _cfg(0)
+    server, clients = build_deployment(cfg, data, d_hidden=16)
+    t = InProcTransport(None, seed=0)
+    t.add_actor(server)
+    for c in clients:
+        t.add_actor(c)
+    horizon = 0.0
+    while True:
+        horizon += cfg.round_dur / 4.0
+        t.run(until=horizon)
+        if t.done():
+            break
+        assert horizon < 100 * ROUNDS * cfg.round_dur
+    base = baseline[0]
+    res = server.result()
+    assert res["selection"] == base["server"]["selection"]
+    assert res["alpha"] == base["server"]["alpha"]
+    assert res["staleness"] == base["server"]["staleness"]
+    for x, y in zip(base["server_actor"].srv_f, server.srv_f):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_simulated_crash_switch_counts_and_fires_once():
+    sw = ServerCrashSwitch(point="close", at=2)
+    sw.hit("admit")
+    sw.hit("close")
+    with pytest.raises(SimulatedCrash):
+        sw.hit("close")
+    assert sw.fired
+    sw.hit("close")                     # no re-raise after firing
+    assert sw.counts == {"admit": 1, "close": 2}
+
+
+def test_wal_overhead_run_matches_plain_run(data, baseline, tmp_path):
+    """Arming the WAL (no crash) must not perturb the trajectory."""
+    out = run_inproc(_cfg(0), data, d_hidden=16, seed=0,
+                     wal_dir=str(tmp_path), ckpt_every=2)
+    _assert_bit_exact(baseline[0], out)
+    assert wal.segment_files(str(tmp_path))
+    assert wal.snapshot_files(str(tmp_path))
+
+
+# -- the real multi-process supervisor ---------------------------------------
+
+@pytest.mark.slow
+def test_proc_supervisor_kill_restart_smoke(tmp_path, data):
+    """SIGKILL the real server child mid-run; the supervisor respawns it
+    with recover=True behind the same client pipes and the deployment
+    still completes every round."""
+    cfg = AsyncConfig(n_clients=2, s_selected=1, K=4, batch_size=16,
+                      rounds=40, round_dur=0.5,
+                      fast_step_time=0.1, slow_step_time=0.2, seed=0)
+    x, y, xt, yt, _ = data
+    from repro.data.partition import partition_iid
+    parts = partition_iid(len(y), 2, seed=0)
+    out = run_proc_supervised(cfg, (x, y, xt, yt, parts), d_hidden=16,
+                              plan=FaultPlan(latency=0.02), seed=0,
+                              timeout=180.0, wal_dir=str(tmp_path),
+                              ckpt_every=5, kill_at=(8.0,))
+    assert out["crashes"] == 1
+    assert out["server"] is not None, "no result from the final incarnation"
+    assert out["clean"], f"child exit codes: {out['exitcodes']}"
+    assert out["server"]["rounds"] == cfg.rounds
+    assert out["server"]["stats"]["admitted"] > 0
