@@ -43,7 +43,7 @@ import numpy as np
 from benchmarks.common import save_artifact
 from repro.core.favas import FavasConfig, client_lambdas
 from repro.core.paging import encoded_nbytes
-from repro.core.round_engine import RoundEngine
+from repro.core.round_engine import RoundEngine, engine_resident_bytes_by_tier
 from repro.data.device_corpus import make_classification_corpus
 from repro.models.classifier import classifier_loss, mlp_apply, mlp_init
 
@@ -79,6 +79,14 @@ def _resident_bytes(n_clients: int, *, paged: bool) -> int:
     eng, fcfg, params, key = _make_engine(n_clients, paged=paged)
     state = eng.init_state(params, key)
     b = eng.resident_bytes(state)
+    # tier split (docs/architecture.md §13): everything here is device
+    # placement, so the host tier must be EMPTY and the device tier must
+    # be exactly the headline number — benchmarks/streaming_bench.py owns
+    # the host-placement side of this identity
+    tiers = engine_resident_bytes_by_tier(state)
+    if tiers["host"] != 0 or tiers["device"] != b:
+        raise SystemExit(f"FAIL: tier accounting drift at n={n_clients}: "
+                         f"{tiers} vs resident_bytes {b}")
     jax.tree_util.tree_map(lambda x: x.delete(),
                            jax.tree_util.tree_leaves(state))
     return int(b)

@@ -6,8 +6,8 @@ the roofline/kernel harnesses. ``--full`` runs paper-scale FL simulations
   PYTHONPATH=src python -m benchmarks.run [--full] [--smoke] [--only NAME]
 
 ``--smoke`` asks each benchmark that supports it (data_plane_bench,
-paged_state_bench, quant_fused_bench, async_server_bench, recovery_bench)
-for its cheapest defensible check;
+paged_state_bench, streaming_bench, quant_fused_bench, async_server_bench,
+recovery_bench) for its cheapest defensible check;
 smoke artifacts go
 to ``*_smoke.json`` and never overwrite the canonical files. Benchmarks
 without a smoke path just run their quick mode.
@@ -19,20 +19,41 @@ import time
 import traceback
 
 
+# benchmarks re-run on the accelerator tier (``--tier device``): the
+# kernel-facing subset whose numbers change with a real backend
+DEVICE_TIER = {"kernel_bench", "round_loop_bench", "paged_state_bench",
+               "streaming_bench", "roofline_table"}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--tier", default="host", choices=["host", "device"],
+                    help="host (default): the CPU-oracle suite. device: "
+                         "re-run the kernel-facing benchmarks on the real "
+                         "accelerator backend — with no TPU/GPU present "
+                         "this SKIPS CLEANLY (exit 0), so the CI job is a "
+                         "no-op off-accelerator")
     args, _ = ap.parse_known_args()
     quick = not args.full
     smoke = args.smoke
+
+    if args.tier == "device":
+        import jax
+        backend = jax.default_backend()
+        if backend not in ("tpu", "gpu"):
+            print(f"tier=device: no accelerator backend "
+                  f"(jax.default_backend()={backend!r}) — skipping cleanly")
+            raise SystemExit(0)
 
     from benchmarks import (fl_paper, theory_table, kernel_bench,
                             roofline_table, ablation_reweight,
                             round_loop_bench, data_plane_bench,
                             paged_state_bench, quant_fused_bench,
-                            async_server_bench, recovery_bench)
+                            async_server_bench, recovery_bench,
+                            streaming_bench)
 
     suite = [
         ("table1_theory", lambda: theory_table.run(quick)),
@@ -42,6 +63,7 @@ def main() -> None:
                                                           smoke=smoke)),
         ("paged_state_bench", lambda: paged_state_bench.run(quick,
                                                             smoke=smoke)),
+        ("streaming_bench", lambda: streaming_bench.run(quick, smoke=smoke)),
         ("quant_fused_bench", lambda: quant_fused_bench.run(quick,
                                                             smoke=smoke)),
         ("async_server_bench", lambda: async_server_bench.run(quick,
@@ -55,6 +77,8 @@ def main() -> None:
         ("fig7_quant_luq", lambda: fl_paper.fig7_quant(quick)),
         ("ablation_reweight", lambda: ablation_reweight.run(quick)),
     ]
+    if args.tier == "device":
+        suite = [(n, f) for n, f in suite if n in DEVICE_TIER]
     print("name,us_per_call,derived")
     failures = 0
     for name, fn in suite:
@@ -102,6 +126,13 @@ def _derive(name: str, out) -> str:
             t = out["throughput_n1024_chunk32"]
             return (f"pop=x{pop['population_ratio_paged_vs_dense']:.1f}"
                     f";rps=x{t['paged_over_dense']:.2f}")
+        if name == "streaming_bench":
+            if "host_over_device" in out:            # --smoke shape
+                return f"smoke_host_rps=x{out['host_over_device']:.2f}"
+            pop = out["max_population_at_fixed_device_memory"]
+            t = out["throughput_n1024_chunk32"]
+            return (f"pop=x{pop['population_ratio_host_vs_device']:.0f}"
+                    f";rps=x{t['host_over_device']:.2f}")
         if name == "quant_fused_bench":
             r32 = out["sweep"][-1]
             return (f"n{r32['n_clients']}_fused="

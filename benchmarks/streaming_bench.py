@@ -1,0 +1,292 @@
+"""Host-offloaded cold tier benchmark: device-resident population at fixed
+HBM + overlapped streaming throughput (docs/architecture.md §13).
+
+``cold_placement="host"`` moves the LUQ cold pools out of device memory:
+the device holds only the s_max-row hot stacks plus per-client bookkeeping,
+and each superstep streams a churn-bounded slab (2*T*s_churn+1 rows) in and
+out around the dispatch — overlapped with compute by
+``core.streaming.engine_run_stream``. Two measurements:
+
+* **device-tier residency sweep** — ``RoundEngine.resident_bytes_by_tier``
+  at n in {1e3, 1e4, 1e5} for device vs host cold placement. The affine
+  bytes(n) fit is inverted at a 16 GiB device budget: the headline is the
+  MAX POPULATION whose engine state fits on one HBM-class device
+  (acceptance: host placement fits >= 3x the device-paged ceiling AND
+  lands past 10^7 clients — host-tier bytes scale with n but are NOT
+  device bytes, and are reported separately).
+* **throughput** — rounds/sec at n = 1024, 32-round chunks, device data
+  plane: device placement (``run_device`` per chunk) vs host placement,
+  both sequential (prologue/dispatch/epilogue per chunk) and overlapped
+  (``engine_run_stream``, slab gather/upload of chunk j+1 concurrent with
+  chunk j's dispatch). Acceptance: host rounds/sec >= 0.75x device — the
+  population headroom may not cost more than a quarter of the throughput.
+
+Results go to ``experiments/bench/streaming.json`` AND the repo-root
+``BENCH_streaming.json`` (the perf-trajectory file).
+
+  PYTHONPATH=src:. python benchmarks/streaming_bench.py [--full|--smoke]
+
+``--smoke`` (the CI ``streaming`` job) runs the n = 1024 chunk-32
+throughput comparison plus the tier-accounting identities and exits
+non-zero if host placement falls under 0.75x device placement; smoke
+artifacts go to ``streaming_smoke.json`` and never overwrite the
+canonical files.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_artifact
+from repro.core.favas import FavasConfig, client_lambdas
+from repro.core.round_engine import RoundEngine, engine_resident_bytes_by_tier
+from repro.core.streaming import HostColdPool, engine_run_stream
+from repro.data.device_corpus import make_classification_corpus
+from repro.models.classifier import classifier_loss, mlp_apply, mlp_init
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+D_IN, D_HIDDEN, N_CLASSES = 16, 16, 10
+K, B = 1, 2
+S_MAX, COLD_BITS = 256, 4
+BUDGET_BYTES = 16 * 1024 ** 3          # 16 GiB — an HBM-class device
+
+
+def _make_engine(n_clients: int, *, placement: str):
+    key = jax.random.PRNGKey(0)
+    params = mlp_init(key, D_IN, D_HIDDEN, N_CLASSES)
+    s_sel = min(64, max(n_clients // 4, 1))
+    fcfg = FavasConfig(n_clients=n_clients, s_selected=s_sel,
+                       local_steps=K, eta=0.1)
+
+    def lfn(p, b):
+        return classifier_loss(p, mlp_apply, b["x"], b["y"], N_CLASSES)
+
+    eng = RoundEngine(params, fcfg, lfn,
+                      lambdas=jnp.asarray(client_lambdas(fcfg)),
+                      use_kernel=False, residency="paged",
+                      s_max=min(S_MAX, n_clients), cold_bits=COLD_BITS,
+                      cold_placement=placement)
+    return eng, fcfg, params, key
+
+
+def _tier_bytes(n_clients: int, *, placement: str) -> dict:
+    eng, fcfg, params, key = _make_engine(n_clients, placement=placement)
+    state = eng.init_state(params, key)
+    tiers = engine_resident_bytes_by_tier(state)
+    # accounting identities the tier split must keep (bench-level assert):
+    # the DEVICE number is exactly resident_bytes, host placement banks
+    # the whole cold pool on the host tier, device placement uses none
+    assert tiers["device"] == eng.resident_bytes(state)
+    if placement == "host":
+        assert isinstance(state.cold, HostColdPool)
+        assert tiers["host"] == state.cold.nbytes and tiers["host"] > 0
+    else:
+        assert tiers["host"] == 0
+    if placement == "host":
+        state = dataclasses.replace(state, cold=None)
+    jax.tree_util.tree_map(lambda x: x.delete(),
+                           jax.tree_util.tree_leaves(state))
+    return {k: int(v) for k, v in tiers.items()}
+
+
+def _fit_population(points: list, budget: int) -> dict:
+    """device bytes(n) is affine in n; fit on the two largest populations
+    and invert at the budget (same estimator as paged_state_bench)."""
+    (n1, b1), (n2, b2) = points[-2], points[-1]
+    per_client = (b2 - b1) / (n2 - n1)
+    fixed = b1 - per_client * n1
+    return {
+        "device_bytes_per_client": per_client,
+        "fixed_device_bytes": fixed,
+        "max_population_at_budget": int((budget - fixed) / per_client),
+    }
+
+
+def _corpus(n_clients: int, rng):
+    n_rows = 8192
+    x = rng.normal(0, 1, (n_rows, D_IN)).astype(np.float32)
+    y = rng.integers(0, N_CLASSES, n_rows).astype(np.int32)
+    per = n_rows // n_clients
+    parts = [rng.choice(n_rows, max(int(per * rng.uniform(0.5, 1.5)), B),
+                        replace=False)
+             for _ in range(n_clients)]
+    return make_classification_corpus(x, y, parts, B)
+
+
+def _throughput(n_clients: int, rounds: int, chunk: int, *,
+                placement: str, overlap: bool = False,
+                reps: int = 2) -> dict:
+    """rounds/sec on the device data plane, one chunk-round superstep per
+    dispatch. ``overlap=True`` (host placement only) drives the chunks
+    through ``engine_run_stream`` so slab gather/upload of chunk j+1 runs
+    concurrently with chunk j's dispatch."""
+    eng, fcfg, params, key = _make_engine(n_clients, placement=placement)
+    corpus = _corpus(n_clients, np.random.default_rng(0))
+    n_chunks = rounds // chunk
+    state = eng.init_state(params, key)
+    if overlap:
+        state, m = engine_run_stream(eng, state, n_chunks=1,
+                                     chunk_rounds=chunk, corpus=corpus)
+    else:
+        state, m = eng.run_device(state, corpus, chunk)        # compile
+    np.asarray(m["loss"])
+    best = float("inf")
+    for _ in range(reps):
+        state = eng.init_state(params, key)
+        t0 = time.perf_counter()
+        if overlap:
+            state, m = engine_run_stream(eng, state, n_chunks=n_chunks,
+                                         chunk_rounds=chunk, corpus=corpus)
+            np.asarray(m["loss"])
+        else:
+            for _ in range(n_chunks):
+                state, m = eng.run_device(state, corpus, chunk)
+                np.asarray(m["loss"])
+        jax.block_until_ready(state.server)
+        best = min(best, time.perf_counter() - t0)
+    if placement == "host":
+        state = dataclasses.replace(state, cold=None)
+    jax.tree_util.tree_map(lambda x: x.delete(),
+                           jax.tree_util.tree_leaves(state))
+    return {"seconds": best, "rounds_per_sec": rounds / best}
+
+
+def run(quick: bool = True, smoke: bool = False) -> dict:
+    if smoke:
+        n, rounds, chunk = 1024, 64, 32
+        tiers_d = _tier_bytes(n, placement="device")
+        tiers_h = _tier_bytes(n, placement="host")
+        t_dev = _throughput(n, rounds, chunk, placement="device")
+        t_host = _throughput(n, rounds, chunk, placement="host",
+                             overlap=True)
+        rel = t_host["rounds_per_sec"] / t_dev["rounds_per_sec"]
+        rows = {
+            "config": {"n_clients": n, "rounds": rounds, "chunk": chunk,
+                       "s_max": S_MAX, "cold_bits": COLD_BITS},
+            "tier_bytes": {"device_placement": tiers_d,
+                           "host_placement": tiers_h},
+            "device_placement": t_dev,
+            "host_placement_overlapped": t_host,
+            "host_over_device": rel,
+            "note": "CI smoke gate: overlapped host-placement rounds/sec "
+                    "must stay >= 0.75x device placement at n = 1024, "
+                    "32-round chunks, and the tier accounting identities "
+                    "must hold.",
+        }
+        save_artifact("streaming_smoke", rows)
+        return rows
+
+    populations = [1_000, 10_000, 100_000]
+    residency = []
+    for n in populations:
+        td = _tier_bytes(n, placement="device")
+        th = _tier_bytes(n, placement="host")
+        residency.append({"n_clients": n,
+                          "device_placement": td, "host_placement": th,
+                          "device_bytes_ratio": td["device"] / th["device"]})
+    fit_dev = _fit_population(
+        [(r["n_clients"], r["device_placement"]["device"])
+         for r in residency], BUDGET_BYTES)
+    fit_host = _fit_population(
+        [(r["n_clients"], r["host_placement"]["device"])
+         for r in residency], BUDGET_BYTES)
+    pop_ratio = (fit_host["max_population_at_budget"]
+                 / fit_dev["max_population_at_budget"])
+
+    rounds = 64 if quick else 256
+    t_dev = _throughput(1024, rounds, 32, placement="device")
+    t_host_seq = _throughput(1024, rounds, 32, placement="host")
+    t_host_ovl = _throughput(1024, rounds, 32, placement="host",
+                             overlap=True)
+    rel = t_host_ovl["rounds_per_sec"] / t_dev["rounds_per_sec"]
+
+    rows = {
+        "config": {"d_in": D_IN, "d_hidden": D_HIDDEN, "K": K, "batch": B,
+                   "s_max": S_MAX, "cold_bits": COLD_BITS,
+                   "budget_bytes": BUDGET_BYTES,
+                   "model": "classifier MLP under core.round_engine."
+                            "RoundEngine (jnp oracle path, CPU)"},
+        "residency_sweep": residency,
+        "max_population_at_fixed_device_memory": {
+            "device_placement": fit_dev, "host_placement": fit_host,
+            "population_ratio_host_vs_device": pop_ratio,
+        },
+        "throughput_n1024_chunk32": {
+            "rounds": rounds,
+            "device_placement": t_dev,
+            "host_placement_sequential": t_host_seq,
+            "host_placement_overlapped": t_host_ovl,
+            "overlap_gain": (t_host_ovl["rounds_per_sec"]
+                             / t_host_seq["rounds_per_sec"]),
+            "host_over_device": rel,
+        },
+        "note": "residency = measured per-tier EngineState bytes at init; "
+                "max population inverts the affine DEVICE bytes(n) fit at "
+                "a 16 GiB budget (host placement keeps only the s_max hot "
+                "stacks + per-client bookkeeping on device, so its ceiling "
+                "passes 10^7 clients; the cold pools live in host memory "
+                "and are streamed per 32-round chunk). throughput = device "
+                "data plane, one superstep dispatch per chunk; overlapped "
+                "= engine_run_stream double-buffered slab prefetch. "
+                "Acceptance: population ratio >= 3x with ceiling past "
+                "10^7, and overlapped host >= 0.75x device rounds/sec.",
+    }
+    save_artifact("streaming", rows)
+    with open(os.path.join(ROOT, "BENCH_streaming.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+def main() -> int:
+    smoke = "--smoke" in sys.argv
+    rows = run(quick="--full" not in sys.argv, smoke=smoke)
+    if smoke:
+        rel = rows["host_over_device"]
+        if rel < 0.75:
+            print(f"FAIL: overlapped host placement at {rel:.2f}x device "
+                  f"rounds/sec (need >= 0.75x)")
+            return 1
+        host_rps = rows["host_placement_overlapped"]["rounds_per_sec"]
+        print(f"smoke OK: host {host_rps:.1f} r/s vs device "
+              f"{rows['device_placement']['rounds_per_sec']:.1f} r/s "
+              f"({rel:.2f}x) at n=1024 chunk=32")
+        return 0
+    for r in rows["residency_sweep"]:
+        td, th = r["device_placement"], r["host_placement"]
+        print(f"n={r['n_clients']:7d} | device placement {td['device']:>12,}"
+              f" B on-device | host placement {th['device']:>10,} B "
+              f"on-device + {th['host']:>12,} B host "
+              f"({r['device_bytes_ratio']:.0f}x fewer device bytes)")
+    pop = rows["max_population_at_fixed_device_memory"]
+    print(f"max population @16GiB device: device placement "
+          f"{pop['device_placement']['max_population_at_budget']:,} | "
+          f"host placement "
+          f"{pop['host_placement']['max_population_at_budget']:,} "
+          f"({pop['population_ratio_host_vs_device']:.0f}x)")
+    t = rows["throughput_n1024_chunk32"]
+    print(f"rounds/sec n=1024 chunk=32: device "
+          f"{t['device_placement']['rounds_per_sec']:.1f} | host seq "
+          f"{t['host_placement_sequential']['rounds_per_sec']:.1f} | host "
+          f"overlapped {t['host_placement_overlapped']['rounds_per_sec']:.1f}"
+          f" ({t['host_over_device']:.2f}x device, overlap gain "
+          f"{t['overlap_gain']:.2f}x)")
+    ok = (pop["population_ratio_host_vs_device"] >= 3.0
+          and pop["host_placement"]["max_population_at_budget"] > 10 ** 7
+          and t["host_over_device"] >= 0.75)
+    if not ok:
+        print("FAIL: acceptance targets missed (need >= 3x population, "
+              "ceiling past 1e7 clients, and >= 0.75x rounds/sec)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

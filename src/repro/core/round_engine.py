@@ -44,7 +44,7 @@ from repro.core import sampler, reweight
 from repro.core.paging import PassthroughCodec, make_codec
 from repro.core.quant import quantize_tree
 from repro.kernels.favas_agg import CLIENT_TILE, TILE
-from repro.kernels.ops import favas_fused_flat
+from repro.kernels.ops import favas_fused_flat, favas_stream_flat
 from repro.utils.tree import tree_map
 
 
@@ -107,6 +107,11 @@ class FlatSpec:
     s_max: Optional[int] = None        # hot rows (logical), paged specs only
     s_hot_padded: Optional[int] = None  # hot rows incl. client-tile padding
     cold_codec: Any = None             # hashable codec (core.paging)
+    # cold-pool placement (docs/architecture.md §13): "device" keeps the
+    # encoded pools in HBM (the §9 layout); "host" keeps them in host
+    # memory — device-resident bytes then scale with s_max instead of n,
+    # and each chunk streams only its churned pages through a bounded slab
+    cold_placement: str = "device"
 
     @property
     def n_buckets(self) -> int:
@@ -137,7 +142,7 @@ def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
                    shard_axes: Optional[Sequence] = None,
                    model_shards: Optional[int] = None,
                    residency: str = "dense", s_max: Optional[int] = None,
-                   cold_codec=None) -> FlatSpec:
+                   cold_codec=None, cold_placement: str = "device") -> FlatSpec:
     """Build the layout from a pytree of arrays / ShapeDtypeStructs.
 
     ``n_clients``: make the spec client-aware (see class docstring). Row
@@ -160,7 +165,19 @@ def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
     pool covers all n clients. ``s_max`` defaults to (and is clamped at)
     ``n_clients``; at ``s_max == n_clients`` the hot set is the whole
     id-ordered population and the paged round is bit-exact with the dense
-    one. ``cold_codec`` defaults to the passthrough (identity) codec."""
+    one. ``cold_codec`` defaults to the passthrough (identity) codec.
+
+    ``cold_placement="host"`` (paged specs only, docs/architecture.md §13)
+    moves the encoded cold pools to HOST memory: the state carries a
+    ``core.streaming.HostColdPool`` instead of device arrays, every round
+    touches cold pages through a churn-bounded device slab planned ahead
+    of the chunk, and device-resident bytes scale with ``s_max`` instead
+    of ``n``. Values are bit-exact vs ``"device"`` placement — only where
+    the encoded bytes live changes."""
+    if cold_placement not in ("device", "host"):
+        raise ValueError(f"unknown cold_placement {cold_placement!r}")
+    if cold_placement == "host" and residency != "paged":
+        raise ValueError("cold_placement='host' requires residency='paged'")
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     S0 = model_shards or 1
     if mesh is not None and model_shards is None:
@@ -230,7 +247,9 @@ def make_flat_spec(tree, *, tile: int = TILE, n_clients: Optional[int] = None,
                     bucket_shard_padded=shard_padded,
                     mesh_axis="model" if any(s > 1 for s in shards_l) else None,
                     residency=residency, s_max=s_max,
-                    s_hot_padded=s_hot_padded, cold_codec=cold_codec)
+                    s_hot_padded=s_hot_padded, cold_codec=cold_codec,
+                    cold_placement=(cold_placement if residency == "paged"
+                                    else "device"))
 
 
 def flatten_tree(spec: FlatSpec, tree) -> tuple:
@@ -431,9 +450,12 @@ def engine_sharding(spec: FlatSpec, mesh):
     hot_ids, cold = None, None
     if spec.paged:
         hot_ids = rep
+    if spec.paged and spec.cold_placement == "device":
         # cold pools shard exactly like the dense stacked buckets (§6): the
         # encoded lane axis (packed codes / per-shard scales) splits on the
-        # model axis, the client-id row axis replicates
+        # model axis, the client-id row axis replicates. Host-placed pools
+        # are NOT device arrays (core.streaming.HostColdPool) and carry no
+        # sharding — their churn slab gets these specs per chunk instead.
         cold = tuple(
             jax.tree_util.tree_map(
                 lambda p: NamedSharding(mesh, p),
@@ -574,6 +596,107 @@ def fused_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
                  for o, p in zip(out, (lane, row, row)))
 
 
+def stream_bucket_update(spec: FlatSpec, b: int, server_b, trained_b, inits_b,
+                         alpha_p, mask_p, s: float, *, progress_b=None,
+                         progress_codes_b=None, progress_bits: int = 0,
+                         n_logical: Optional[int] = None, mesh=None,
+                         use_kernel: Optional[bool] = None):
+    """One bucket's STREAMED aggregation (docs/architecture.md §13):
+    the :func:`fused_bucket_update` dispatch contract (plain call /
+    shard_map kernel / pjit oracle), returning ONLY the new server vector.
+    The caller applies the selected-client reset as a churn-bounded scatter
+    of this row into the donated client/init buffers — unselected rows are
+    never rewritten, so per-bucket round traffic drops from ~2R+2W to
+    1R (+ O(s * Dp) scatter writes) per resident byte. Bit-identical
+    server to ``fused_bucket_update`` per dispatch path."""
+    if progress_b is not None and progress_codes_b is not None:
+        raise ValueError("progress_b and progress_codes_b are mutually "
+                         "exclusive")
+    if mesh is None or spec.shards(b) <= 1:
+        return favas_stream_flat(server_b, trained_b, inits_b, alpha_p,
+                                 mask_p, float(s), progress=progress_b,
+                                 progress_codes=progress_codes_b,
+                                 progress_bits=progress_bits,
+                                 progress_shards=max(1, spec.shards(b)),
+                                 client_tile=spec.client_tile,
+                                 n_logical=n_logical, use_kernel=use_kernel)
+    kernel_active = (use_kernel if use_kernel is not None
+                     else jax.default_backend() == "tpu")
+    from jax.sharding import PartitionSpec as P
+    lane, row, vec = P(spec.mesh_axis), P(None, spec.mesh_axis), P(None)
+    if kernel_active:
+        from jax.experimental.shard_map import shard_map
+
+        def body(*ops):
+            pr = pc = None
+            if progress_b is not None:
+                srv, cli, ini, pr, al, mk = ops
+            elif progress_codes_b is not None:
+                srv, cli, ini, cd, sc, al, mk = ops
+                pc = {"codes": cd, "scale": sc}
+            else:
+                srv, cli, ini, al, mk = ops
+            return favas_stream_flat(srv, cli, ini, al, mk, float(s),
+                                     progress=pr, progress_codes=pc,
+                                     progress_bits=progress_bits,
+                                     progress_shards=1,
+                                     client_tile=spec.client_tile,
+                                     n_logical=n_logical, use_kernel=True)
+
+        operands = [server_b, trained_b, inits_b]
+        in_specs = [lane, row, row]
+        if progress_b is not None:
+            operands.append(progress_b)
+            in_specs.append(row)
+        elif progress_codes_b is not None:
+            operands += [progress_codes_b["codes"], progress_codes_b["scale"]]
+            in_specs += [row, row]
+        operands += [alpha_p, mask_p]
+        in_specs += [vec, vec]
+        return shard_map(body, mesh=mesh, in_specs=tuple(in_specs),
+                         out_specs=lane, check_rep=False)(*operands)
+    from jax.sharding import NamedSharding
+    out = favas_stream_flat(server_b, trained_b, inits_b, alpha_p, mask_p,
+                            float(s), progress=progress_b,
+                            progress_codes=progress_codes_b,
+                            progress_bits=progress_bits,
+                            progress_shards=spec.shards(b),
+                            client_tile=spec.client_tile,
+                            n_logical=n_logical, use_kernel=False)
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, lane))
+
+
+def _streamed_reset(spec: FlatSpec, mesh, bufs, sel_idx, rows):
+    """Churn-bounded selected-client reset: scatter each bucket's new server
+    row into the ``sel_idx`` positions of the (donated) state buffers.
+    ``rows`` is the per-bucket new-server vector list. XLA performs the
+    scatter in place on donated inputs, so unselected rows are never
+    rewritten (the write-traffic audit in launch/roofline.py pins this).
+    Bit-exact vs the fused reset: the mask is exactly the indicator of
+    ``sel_idx`` and the fused ``m*s_new + (1-m)*x`` blend is ``x`` (exact
+    f32 round-trip) off-selection and ``s_new.astype(dtype)`` — the
+    scattered row — on it."""
+    out = [buf.at[sel_idx].set(row.astype(buf.dtype))
+           for buf, row in zip(bufs, rows)]
+    return _constrain_buckets(spec, mesh, out, stacked=True)
+
+
+def slab_shardings(spec: FlatSpec, mesh):
+    """Per-bucket ``NamedSharding`` tree for a host-tier churn slab — the
+    same §6 layout as the device-placed cold pools (encoded lane axis on
+    the model mesh axis, row axis replicated). None without a mesh."""
+    if mesh is None:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return tuple(
+        jax.tree_util.tree_map(
+            lambda p: NamedSharding(mesh, p),
+            spec.cold_codec.partition_specs(
+                spec.shards(b) > 1, spec.mesh_axis or "model"),
+            is_leaf=lambda x: isinstance(x, P))
+        for b in range(spec.n_buckets))
+
+
 def _encode_progress(spec: FlatSpec, trained, inits, k_q, bits: int, *,
                      mesh=None, use_kernel: Optional[bool] = None) -> tuple:
     """Per-bucket LUQ encode of the transmitted progress (``quant_fused``
@@ -682,10 +805,25 @@ def engine_init(spec: FlatSpec, params, cfg, key, *,
             enc1 = spec.cold_codec.encode_pair(
                 row, row, jax.random.fold_in(k_cold, b),
                 shards=spec.shards(b), use_kernel=use_kernel)
-            cold.append(jax.tree_util.tree_map(
-                lambda a: jnp.broadcast_to(a, (n,) + a.shape[1:]).copy(),
-                enc1))
-        cold = tuple(cold)
+            if spec.cold_placement == "host":
+                # host tier (§13): the encode still runs on device (bit-
+                # identical bytes to the device placement) but the n-row
+                # broadcast materializes in HOST memory — the device never
+                # holds an O(n) pool
+                import numpy as np
+                cold.append(jax.tree_util.tree_map(
+                    lambda a: np.broadcast_to(
+                        np.asarray(jax.device_get(a)),
+                        (n,) + a.shape[1:]).copy(), enc1))
+            else:
+                cold.append(jax.tree_util.tree_map(
+                    lambda a: jnp.broadcast_to(a, (n,) + a.shape[1:]).copy(),
+                    enc1))
+        if spec.cold_placement == "host":
+            from repro.core.streaming import HostColdPool  # lazy: no cycle
+            cold = HostColdPool(tuple(cold))
+        else:
+            cold = tuple(cold)
     else:
         clients = stack_server_rows(spec, server, n)
         inits = stack_server_rows(spec, server, n)
@@ -739,7 +877,8 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
                  loss_fn: Callable, lambdas,
                  det_alpha: Optional[jnp.ndarray] = None,
                  use_kernel: Optional[bool] = None, mesh=None,
-                 quant_fused: bool = False, corpus=None, batch_key=None):
+                 quant_fused: bool = False, corpus=None, batch_key=None,
+                 schedule: str = "streamed", slab=None, plan=None):
     """One FAVAS server round on flat buffers. Pure; jit/pjit this.
 
     The hot path is: unflatten clients -> vmapped local SGD -> flatten ->
@@ -778,6 +917,19 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
         resident :class:`repro.data.device_corpus.DeviceCorpus` plus the
         round's batch key; the round samples its own minibatches (and, on a
         paged spec, gathers corpus rows for the hot working set only).
+      schedule: "streamed" (default, docs/architecture.md §13) aggregates
+        with the single-sweep :func:`stream_bucket_update` and resets the
+        s selected rows by a churn-bounded scatter into the donated
+        buffers (~1R+1W per resident byte, no pass-through rewrites);
+        "two_sweep" keeps the historical fused aggregation+reset kernel
+        (~2R+2W). The two schedules are BIT-EXACT — the mask is exactly
+        the indicator of the Gumbel top-s index set — so the knob only
+        changes traffic, never values.
+      slab / plan: host-tier cold paging (paged specs with
+        ``cold_placement="host"`` only): the chunk's churned cold pages as
+        a device slab plus this round's slab positions — see
+        :func:`plan_rounds` and ``core.streaming``. The round then returns
+        ``(new_state, new_slab, metrics)``.
 
     On a ``residency="paged"`` spec the round runs the hot/cold body
     (:func:`_paged_round`): select -> promote/evict the hot working set ->
@@ -787,12 +939,18 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
 
     Returns ``(new_state, metrics)`` where metrics holds the live-step-
     weighted ``loss``, ``mean_steps``, ``selected`` and ``stale_rounds``."""
+    if schedule not in ("streamed", "two_sweep"):
+        raise ValueError(f"unknown schedule {schedule!r}")
     if spec.paged:
         return _paged_round(spec, state, batch, cfg=cfg, loss_fn=loss_fn,
                             lambdas=lambdas, det_alpha=det_alpha,
                             use_kernel=use_kernel, mesh=mesh,
                             quant_fused=quant_fused,
-                            corpus=corpus, batch_key=batch_key)
+                            corpus=corpus, batch_key=batch_key,
+                            schedule=schedule, slab=slab, plan=plan)
+    if slab is not None or plan is not None:
+        raise ValueError("slab/plan are host-tier paging arguments "
+                         "(paged specs with cold_placement='host')")
     if corpus is not None:
         batch = corpus.sample_round_batch(batch_key, cfg.R)
     n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
@@ -840,24 +998,42 @@ def engine_round(spec: FlatSpec, state: EngineState, batch=None, *, cfg,
         progress = _constrain_buckets(spec, mesh, flatten_stacked(spec, prog),
                                       stacked=True)
 
-    # 4+5. fused aggregation + selected-client reset: one pass per bucket.
+    # 4+5. aggregation + selected-client reset: one pass per bucket.
     # alpha/mask ride to the kernel padded alongside the buffers' client
     # rows (unit alpha / zero mask => padded rows aggregate exactly nothing
-    # and reset to themselves, i.e. stay zero).
-    m = sampler.sample_selection(k_sel, n, s)                  # (n,) float
+    # and reset to themselves, i.e. stay zero). sample_selection_indices is
+    # the SAME rng stream as sample_selection (the mask is derived from the
+    # indices), so taking the indices here changes no draw.
+    sel_idx, m = sampler.sample_selection_indices(k_sel, n, s)  # (s,), (n,)
     alpha_p = pad_client_vec(spec, alpha, 1.0)
     m_p = pad_client_vec(spec, m, 0.0)
     server_new, clients_new, inits_new = [], [], []
-    for b in range(spec.n_buckets):
-        srv, cli, ini = fused_bucket_update(
-            spec, b, state.server[b], trained[b], state.inits[b], alpha_p,
-            m_p, float(s), progress_b=progress[b],
-            progress_codes_b=progress_codes[b],
-            progress_bits=cfg.quant_bits, n_logical=n, mesh=mesh,
-            use_kernel=use_kernel)
-        server_new.append(srv)
-        clients_new.append(cli)
-        inits_new.append(ini)
+    if schedule == "streamed":
+        # §13: single-sweep aggregation, then ONE churn-bounded scatter of
+        # the new server row into the s selected rows of the donated
+        # trained/init buffers — unselected rows are never rewritten
+        for b in range(spec.n_buckets):
+            server_new.append(stream_bucket_update(
+                spec, b, state.server[b], trained[b], state.inits[b],
+                alpha_p, m_p, float(s), progress_b=progress[b],
+                progress_codes_b=progress_codes[b],
+                progress_bits=cfg.quant_bits, n_logical=n, mesh=mesh,
+                use_kernel=use_kernel))
+        clients_new = _streamed_reset(spec, mesh, trained, sel_idx,
+                                      server_new)
+        inits_new = _streamed_reset(spec, mesh, state.inits, sel_idx,
+                                    server_new)
+    else:
+        for b in range(spec.n_buckets):
+            srv, cli, ini = fused_bucket_update(
+                spec, b, state.server[b], trained[b], state.inits[b],
+                alpha_p, m_p, float(s), progress_b=progress[b],
+                progress_codes_b=progress_codes[b],
+                progress_bits=cfg.quant_bits, n_logical=n, mesh=mesh,
+                use_kernel=use_kernel)
+            server_new.append(srv)
+            clients_new.append(cli)
+            inits_new.append(ini)
 
     counters_new = jnp.where(m > 0, 0, new_counters).astype(jnp.int32)
     stale_new = jnp.where(m > 0, 0, state.stale + 1).astype(jnp.int32)
@@ -884,7 +1060,8 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
                  loss_fn: Callable, lambdas,
                  det_alpha: Optional[jnp.ndarray] = None,
                  use_kernel: Optional[bool] = None, mesh=None,
-                 quant_fused: bool = False, corpus=None, batch_key=None):
+                 quant_fused: bool = False, corpus=None, batch_key=None,
+                 schedule: str = "streamed", slab=None, plan=None):
     """One FAVAS round on a paged (hot/cold) spec — docs/architecture.md §9.
 
     Control flow inverts relative to the dense body: Gumbel top-s selection
@@ -901,10 +1078,30 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     earlier — and all codec randomness is folded off ``k_q``, never split
     from the chain. With the passthrough codec at ``s_max == n`` (hot stacks
     = all clients in id order, identical shapes, identical reduction trees)
-    the round is therefore bit-exact with the dense ``engine_round``."""
+    the round is therefore bit-exact with the dense ``engine_round``.
+
+    Host-placed cold tier (``spec.cold_placement == 'host'``, docs §13):
+    ``state.cold`` is None inside the trace — the full cold pools live in
+    host memory (:class:`repro.core.streaming.HostColdPool`) and the round
+    reads/writes a device-resident SLAB holding one encoded row per client
+    that churns anywhere in the current chunk. ``plan`` carries this
+    round's ``{"evict_slab", "promo_slab"}`` (s_churn,) slab positions
+    (precomputed by :func:`plan_rounds` + ``streaming.build_chunk_plan``
+    from the bookkeeping-only replay of the key chain; invalid churn slots
+    point at the all-zero dummy row), and the round returns ``(state, slab,
+    metrics)`` so the slab rides the superstep carry. Because each churning
+    id owns exactly one slab row, an evict at round t is visible to that
+    id's promotion at any later round of the chunk — the same read-after-
+    write order the device pools give for free."""
     n, s, K = cfg.n_clients, cfg.s_selected, cfg.local_steps
     s_hot = spec.s_max
     codec = spec.cold_codec
+    host_cold = spec.cold_placement == "host"
+    if host_cold and (slab is None or plan is None):
+        raise ValueError("cold_placement='host' rounds need the slab and "
+                         "per-round plan (see RoundEngine/engine_run_stream)")
+    if not host_cold and (slab is not None or plan is not None):
+        raise ValueError("slab/plan only apply to cold_placement='host'")
     key, k_inc, k_sel, k_q = jax.random.split(state.key, 4)
 
     # 1. heterogeneous progress + SELECT-FIRST
@@ -953,6 +1150,12 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     # FOLDED off k_q (not split), leaving the dense key chain intact.
     k_evict = jax.random.fold_in(k_q, 1)
     evict_ids = old_ids[evict_pos]
+    # host tier: churn ids become slab rows; invalid slots hit the all-zero
+    # dummy row and write back its own gathered value (a no-op). The id
+    # spaces differ but the ENCODED BYTES are identical — the codec key
+    # chain never branches on placement.
+    evict_rows = plan["evict_slab"] if host_cold else evict_ids
+    pools = slab if host_cold else state.cold
     cold = []
     for b in range(spec.n_buckets):
         enc = codec.encode_pair(
@@ -962,10 +1165,10 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
 
         def scatter(pool, e):
             sel = evict_valid.reshape((-1,) + (1,) * (e.ndim - 1))
-            return pool.at[evict_ids].set(
-                jnp.where(sel, e.astype(pool.dtype), pool[evict_ids]))
+            return pool.at[evict_rows].set(
+                jnp.where(sel, e.astype(pool.dtype), pool[evict_rows]))
 
-        cold.append(jax.tree_util.tree_map(scatter, state.cold[b], enc))
+        cold.append(jax.tree_util.tree_map(scatter, pools[b], enc))
     cold = _constrain_cold(spec, mesh, cold)
 
     # 4. promote: gather + dequant ONLY the rows entering the hot set. Rows
@@ -973,10 +1176,11 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
     # hot clients pay NO requant round-trip.
     rpad = spec.stacked_rows - s_hot
     promo_ids = members[promo_pos]
+    promo_rows = plan["promo_slab"] if host_cold else promo_ids
     clients_hot, inits_hot = [], []
     for b in range(spec.n_buckets):
         dt = jnp.dtype(spec.bucket_dtypes[b])
-        enc_rows = jax.tree_util.tree_map(lambda p: p[promo_ids], cold[b])
+        enc_rows = jax.tree_util.tree_map(lambda p: p[promo_rows], cold[b])
         dec_cli, dec_ini = codec.decode_pair(enc_rows, dt,
                                              shards=spec.shards(b),
                                              use_kernel=use_kernel)
@@ -1035,20 +1239,37 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
         progress = _constrain_buckets(spec, mesh, flatten_stacked(spec, prog),
                                       stacked=True)
 
-    # 8. fused aggregation + selected-client reset over the hot stacks
+    # 8. aggregation + selected-client reset over the hot stacks
     alpha_p = pad_client_vec(spec, alpha, 1.0)
     m_p = pad_client_vec(spec, m_hot, 0.0)
     server_new, clients_new, inits_new = [], [], []
-    for b in range(spec.n_buckets):
-        srv, cli, ini = fused_bucket_update(
-            spec, b, state.server[b], trained[b], inits_hot[b], alpha_p,
-            m_p, float(s), progress_b=progress[b],
-            progress_codes_b=progress_codes[b],
-            progress_bits=cfg.quant_bits, n_logical=s_hot,
-            mesh=mesh, use_kernel=use_kernel)
-        server_new.append(srv)
-        clients_new.append(cli)
-        inits_new.append(ini)
+    if schedule == "streamed":
+        # §13: every selected client is hot (engine_init enforces
+        # s <= s_max), so m_hot carries exactly s ones and the nonzero
+        # fill value is never consumed. Scatter replaces the second sweep.
+        sel_pos = jnp.nonzero(m_hot > 0, size=s, fill_value=0)[0]
+        for b in range(spec.n_buckets):
+            server_new.append(stream_bucket_update(
+                spec, b, state.server[b], trained[b], inits_hot[b],
+                alpha_p, m_p, float(s), progress_b=progress[b],
+                progress_codes_b=progress_codes[b],
+                progress_bits=cfg.quant_bits, n_logical=s_hot, mesh=mesh,
+                use_kernel=use_kernel))
+        clients_new = _streamed_reset(spec, mesh, trained, sel_pos,
+                                      server_new)
+        inits_new = _streamed_reset(spec, mesh, inits_hot, sel_pos,
+                                    server_new)
+    else:
+        for b in range(spec.n_buckets):
+            srv, cli, ini = fused_bucket_update(
+                spec, b, state.server[b], trained[b], inits_hot[b], alpha_p,
+                m_p, float(s), progress_b=progress[b],
+                progress_codes_b=progress_codes[b],
+                progress_bits=cfg.quant_bits, n_logical=s_hot,
+                mesh=mesh, use_kernel=use_kernel)
+            server_new.append(srv)
+            clients_new.append(cli)
+            inits_new.append(ini)
 
     # 9. scatter the hot counter updates back into the full-n view
     counters_new = state.counters.at[members].set(
@@ -1059,7 +1280,8 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
                             inits=tuple(inits_new),
                             counters=counters_new, stale=stale_new,
                             key=key, t=state.t + 1,
-                            hot_ids=members, cold=cold)
+                            hot_ids=members,
+                            cold=None if host_cold else cold)
     total_live = jnp.sum(live)
     metrics = {
         # live-step-weighted over the SELECTED HOT SET only: frozen cold
@@ -1071,7 +1293,65 @@ def _paged_round(spec: FlatSpec, state: EngineState, batch, *, cfg,
         "selected": jnp.sum(m),
         "stale_rounds": jnp.max(stale_new).astype(jnp.float32),
     }
+    if host_cold:
+        return new_state, tuple(cold), metrics
     return new_state, metrics
+
+
+def plan_rounds(spec: FlatSpec, cfg, key, stale, hot_ids, *,
+                n_rounds: int, device_plane: bool = False):
+    """Bookkeeping-only replay of ``n_rounds`` of the paged key chain — the
+    host-tier planner (docs §13). Hot-set membership depends only on
+    ``(key, stale, hot_ids)``: selection and the staleness lexsort never
+    read parameters, so the chunk's churn schedule is known BEFORE the
+    chunk runs — that is what lets the page streamer fetch the next
+    chunk's cold rows while this chunk computes. Returns ``(carry, plan)``:
+    ``carry = (key, stale, hot_ids)`` is the bookkeeping AFTER the chunk
+    (feed it back in to plan the next chunk ahead of time) and ``plan`` is
+    the stacked ``(n_rounds, s_churn)`` arrays ``{"evict_ids",
+    "evict_valid", "promo_ids", "promo_valid"}``; invalid churn slots
+    carry id 0 with valid=False (``streaming.build_chunk_plan`` routes
+    them to the slab's dummy row).
+
+    The replay draws the SAME splits as :func:`_paged_round` — ``k_inc``
+    and ``k_q`` are consumed but unused (a split is key arithmetic, not
+    state mutation, so skipping the unused streams changes nothing), and
+    ``device_plane=True`` burns the per-round batch key first, exactly
+    like the device-plane scan body in :func:`engine_multi_round`."""
+    n, s = cfg.n_clients, cfg.s_selected
+    s_hot = spec.s_max
+    s_churn = min(s, s_hot)
+
+    def body(carry, _):
+        key, stale, old_ids = carry
+        if device_plane:
+            key, _kb = jax.random.split(key)
+        key, _k_inc, k_sel, _k_q = jax.random.split(key, 4)
+        _, m = sampler.sample_selection_indices(k_sel, n, s)
+        stale_new = jnp.where(m > 0, 0, stale + 1).astype(jnp.int32)
+        order = jnp.lexsort((jnp.arange(n, dtype=jnp.int32), stale_new))
+        members = jnp.sort(order[:s_hot]).astype(jnp.int32)
+        pos_in_old = jnp.clip(jnp.searchsorted(old_ids, members),
+                              0, s_hot - 1)
+        was_hot = old_ids[pos_in_old] == members
+        pos_in_new = jnp.clip(jnp.searchsorted(members, old_ids),
+                              0, s_hot - 1)
+        evicted = members[pos_in_new] != old_ids
+
+        def _churn(flags, ids):
+            pos = jnp.nonzero(flags, size=s_churn, fill_value=s_hot)[0]
+            valid = pos < s_hot
+            safe = jnp.argmin(flags).astype(pos.dtype)
+            pos = jnp.where(valid, jnp.minimum(pos, s_hot - 1), safe)
+            return jnp.where(valid, ids[pos], 0).astype(jnp.int32), valid
+
+        evict_ids, evict_valid = _churn(evicted, old_ids)
+        promo_ids, promo_valid = _churn(~was_hot, members)
+        out = {"evict_ids": evict_ids, "evict_valid": evict_valid,
+               "promo_ids": promo_ids, "promo_valid": promo_valid}
+        return (key, stale_new, members), out
+
+    return jax.lax.scan(body, (key, stale, hot_ids), None, length=n_rounds)
 
 
 def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
@@ -1079,7 +1359,9 @@ def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
                        det_alpha: Optional[jnp.ndarray] = None,
                        use_kernel: Optional[bool] = None, mesh=None,
                        quant_fused: bool = False,
-                       corpus=None, n_rounds: Optional[int] = None):
+                       corpus=None, n_rounds: Optional[int] = None,
+                       schedule: str = "streamed",
+                       slab=None, plans=None):
     """A whole chunk of FAVAS rounds as ONE ``jax.lax.scan`` — the
     "superstep" (docs/architecture.md §7). Pure; jit/pjit this and donate
     ``state``: a T-round chunk then costs one dispatch instead of T.
@@ -1113,7 +1395,17 @@ def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
     shard_map / pjit dispatch sits inside the scan body, compiled once for
     the whole chunk.
 
+    Host-placed cold tier (``slab``/``plans`` not None, docs §13): the scan
+    carries ``(state, slab)`` and consumes the per-round plan xs, and the
+    call returns ``(new_state, new_slab, metrics)`` — the caller (the
+    :class:`RoundEngine` host prologue or ``streaming.engine_run_stream``)
+    owns the gather/writeback against the host pool around the dispatch.
+
     Returns ``(new_state, metrics)`` with every metric stacked to (T,)."""
+    host_cold = slab is not None
+    if host_cold and plans is None:
+        raise ValueError("a host-tier superstep needs the per-round plans "
+                         "(see plan_rounds / streaming.build_chunk_plan)")
     if corpus is not None:
         if batches is not None:
             raise ValueError("pass either batches (host plane) or corpus "
@@ -1122,24 +1414,54 @@ def engine_multi_round(spec: FlatSpec, state: EngineState, batches=None, *,
             raise ValueError("the device plane needs a static n_rounds "
                              "(there is no batches axis to infer it from)")
 
-        def body_c(st, _):
-            key, k_batch = jax.random.split(st.key)
-            st = dataclasses.replace(st, key=key)
+        def body_c(st, plan):
+            key, k_batch = jax.random.split(st[0].key if host_cold else st.key)
             # sampling happens INSIDE engine_round (same key, same draws as
             # sampling here): a paged spec must select its hot working set
             # before it knows which corpus rows to gather
+            if host_cold:
+                st0 = dataclasses.replace(st[0], key=key)
+                st1, sl, met = engine_round(
+                    spec, st0, None, cfg=cfg, loss_fn=loss_fn,
+                    lambdas=lambdas, det_alpha=det_alpha,
+                    use_kernel=use_kernel, mesh=mesh,
+                    quant_fused=quant_fused, corpus=corpus,
+                    batch_key=k_batch, schedule=schedule,
+                    slab=st[1], plan=plan)
+                return (st1, sl), met
+            st = dataclasses.replace(st, key=key)
             return engine_round(spec, st, None, cfg=cfg, loss_fn=loss_fn,
                                 lambdas=lambdas, det_alpha=det_alpha,
                                 use_kernel=use_kernel, mesh=mesh,
                                 quant_fused=quant_fused,
-                                corpus=corpus, batch_key=k_batch)
+                                corpus=corpus, batch_key=k_batch,
+                                schedule=schedule)
+        if host_cold:
+            (st1, sl1), metrics = jax.lax.scan(body_c, (state, slab), plans,
+                                               length=n_rounds)
+            return st1, sl1, metrics
         return jax.lax.scan(body_c, state, None, length=n_rounds)
+
+    if host_cold:
+        def body_h(carry, xs):
+            batch, plan = xs
+            st1, sl, met = engine_round(spec, carry[0], batch, cfg=cfg,
+                                        loss_fn=loss_fn, lambdas=lambdas,
+                                        det_alpha=det_alpha,
+                                        use_kernel=use_kernel, mesh=mesh,
+                                        quant_fused=quant_fused,
+                                        schedule=schedule,
+                                        slab=carry[1], plan=plan)
+            return (st1, sl), met
+        (st1, sl1), metrics = jax.lax.scan(body_h, (state, slab),
+                                           (batches, plans))
+        return st1, sl1, metrics
 
     def body(st, batch):
         return engine_round(spec, st, batch, cfg=cfg, loss_fn=loss_fn,
                             lambdas=lambdas, det_alpha=det_alpha,
                             use_kernel=use_kernel, mesh=mesh,
-                            quant_fused=quant_fused)
+                            quant_fused=quant_fused, schedule=schedule)
     return jax.lax.scan(body, state, batches)
 
 
@@ -1168,12 +1490,36 @@ def engine_variance(state: EngineState) -> jnp.ndarray:
     return tot
 
 
+def engine_resident_bytes_by_tier(state: EngineState) -> dict:
+    """Per-memory-tier byte accounting of the engine state — what the
+    residency benches and the CI resident-bytes gates measure. Host-side
+    accounting; not jittable.
+
+    ``device``: hot stacks + server + bookkeeping + (device-placed) cold
+    pools — everything that occupies accelerator HBM. ``host``: the
+    :class:`repro.core.streaming.HostColdPool` pools of a host-placed cold
+    tier (zero otherwise). Host pools must NEVER count against the device
+    budget — moving them off-device is the whole point of ``cold_placement
+    ='host'`` (docs §13); ``benchmarks.paged_state_bench`` asserts both
+    tiers against the live arrays."""
+    from repro.core.streaming import HostColdPool   # lazy: no import cycle
+    device = host = 0
+    leaves = jax.tree_util.tree_leaves(
+        state, is_leaf=lambda x: isinstance(x, HostColdPool))
+    for leaf in leaves:
+        if isinstance(leaf, HostColdPool):
+            host += leaf.nbytes
+        else:
+            device += leaf.size * jnp.dtype(leaf.dtype).itemsize
+    return {"device": device, "host": host}
+
+
 def engine_resident_bytes(state: EngineState) -> int:
-    """Actual bytes of every array in the state (hot stacks + cold pools +
-    bookkeeping) — what the paged-vs-dense residency bench and the CI
-    resident-bytes gate measure. Host-side accounting; not jittable."""
-    return sum(leaf.size * jnp.dtype(leaf.dtype).itemsize
-               for leaf in jax.tree_util.tree_leaves(state))
+    """DEVICE-tier bytes of the state (hot stacks + device-placed cold
+    pools + bookkeeping) — see :func:`engine_resident_bytes_by_tier`. For
+    device-placed specs this is every array in the state, the historical
+    meaning; host-placed cold pools are excluded by construction."""
+    return engine_resident_bytes_by_tier(state)["device"]
 
 
 # ---------------------------------------------------------------------------
@@ -1194,7 +1540,9 @@ class RoundEngine:
                  lambdas=None, det_alpha=None, use_kernel: Optional[bool] = None,
                  client_tile: int = CLIENT_TILE, mesh=None,
                  residency: str = "dense", s_max: Optional[int] = None,
-                 cold_bits: int = 0, quant_fused: bool = False):
+                 cold_bits: int = 0, quant_fused: bool = False,
+                 cold_placement: str = "device",
+                 schedule: str = "streamed"):
         from repro.core.favas import client_lambdas  # cycle-free at call time
         self.cfg = cfg
         self.mesh = mesh
@@ -1202,26 +1550,30 @@ class RoundEngine:
         self.spec = make_flat_spec(params_template, n_clients=cfg.n_clients,
                                    client_tile=client_tile, mesh=mesh,
                                    residency=residency, s_max=s_max,
-                                   cold_codec=codec)
+                                   cold_codec=codec,
+                                   cold_placement=cold_placement)
         self.loss_fn = loss_fn
         self.lambdas = (jnp.asarray(lambdas) if lambdas is not None
                         else jnp.asarray(client_lambdas(cfg)))
         self.det_alpha = None if det_alpha is None else jnp.asarray(det_alpha)
         self.use_kernel = use_kernel
         self.quant_fused = quant_fused
+        self.schedule = schedule
         self._round = jax.jit(
             functools.partial(engine_round, self.spec, cfg=self.cfg,
                               loss_fn=self.loss_fn, lambdas=self.lambdas,
                               det_alpha=self.det_alpha,
                               use_kernel=self.use_kernel, mesh=self.mesh,
-                              quant_fused=self.quant_fused),
+                              quant_fused=self.quant_fused,
+                              schedule=self.schedule),
             donate_argnums=(0,))
         self._multi = jax.jit(
             functools.partial(engine_multi_round, self.spec, cfg=self.cfg,
                               loss_fn=self.loss_fn, lambdas=self.lambdas,
                               det_alpha=self.det_alpha,
                               use_kernel=self.use_kernel, mesh=self.mesh,
-                              quant_fused=self.quant_fused),
+                              quant_fused=self.quant_fused,
+                              schedule=self.schedule),
             donate_argnums=(0,))
         # device data plane: the corpus rides as a pytree ARGUMENT (not a
         # closure) so its buffers are shared inputs, never baked into the
@@ -1231,8 +1583,40 @@ class RoundEngine:
                               loss_fn=self.loss_fn, lambdas=self.lambdas,
                               det_alpha=self.det_alpha,
                               use_kernel=self.use_kernel, mesh=self.mesh,
-                              quant_fused=self.quant_fused),
+                              quant_fused=self.quant_fused,
+                              schedule=self.schedule),
             static_argnames=("n_rounds",), donate_argnums=(0,))
+        # host-placed cold tier (docs §13): the slab rides positionally so
+        # it can be donated alongside the state; state.cold is None inside
+        # every trace — the HostColdPool never crosses into jit
+        if self.spec.paged and self.spec.cold_placement == "host":
+            common = dict(cfg=self.cfg, loss_fn=self.loss_fn,
+                          lambdas=self.lambdas, det_alpha=self.det_alpha,
+                          use_kernel=self.use_kernel, mesh=self.mesh,
+                          quant_fused=self.quant_fused,
+                          schedule=self.schedule)
+            spec = self.spec
+
+            def _rh(state, batch, slab, plan):
+                return engine_round(spec, state, batch, slab=slab,
+                                    plan=plan, **common)
+
+            def _mh(state, slab, batches, plans):
+                return engine_multi_round(spec, state, batches, slab=slab,
+                                          plans=plans, **common)
+
+            def _mdh(state, slab, plans, corpus, n_rounds):
+                return engine_multi_round(spec, state, corpus=corpus,
+                                          n_rounds=n_rounds, slab=slab,
+                                          plans=plans, **common)
+
+            self._round_host = jax.jit(_rh, donate_argnums=(0, 2))
+            self._multi_host = jax.jit(_mh, donate_argnums=(0, 1))
+            self._multi_device_host = jax.jit(
+                _mdh, static_argnames=("n_rounds",), donate_argnums=(0, 1))
+            self._plan = jax.jit(
+                functools.partial(plan_rounds, self.spec, self.cfg),
+                static_argnames=("n_rounds", "device_plane"))
         # dispatches into the jitted round/superstep — the regression guard
         # tests/test_superstep.py uses to pin "one chunk = one dispatch"
         self.dispatch_count = 0
@@ -1241,12 +1625,55 @@ class RoundEngine:
         state = engine_init(self.spec, params, self.cfg, key,
                             use_kernel=self.use_kernel)
         if self.mesh is not None:
+            # a host-placed cold pool is numpy, not a device array — it
+            # must not ride through device_put (engine_sharding's tree has
+            # cold=None for host placement, matching the stripped state)
+            pool = state.cold if self.spec.cold_placement == "host" else None
+            if pool is not None:
+                state = dataclasses.replace(state, cold=None)
             state = jax.device_put(state, engine_sharding(self.spec, self.mesh))
+            if pool is not None:
+                state = dataclasses.replace(state, cold=pool)
         return state
+
+    # -- host-placed cold tier: gather/writeback around each dispatch -----
+    def _host_prologue(self, state: EngineState, n_rounds: int,
+                       device_plane: bool):
+        """Plan the chunk's churn, gather its slab from the host pool, and
+        move both to device. Returns ``(state_sans_pool, pool, uids, slab,
+        plans)`` — see docs §13 and :mod:`repro.core.streaming`."""
+        from repro.core import streaming
+        pool = state.cold
+        state = dataclasses.replace(state, cold=None)
+        _, plan = self._plan(state.key, state.stale, state.hot_ids,
+                             n_rounds=n_rounds, device_plane=device_plane)
+        plan = jax.device_get(plan)
+        slab_rows = streaming.chunk_slab_rows(self.spec, self.cfg, n_rounds)
+        uids, slab_plan = streaming.build_chunk_plan(plan,
+                                                     slab_rows=slab_rows)
+        slab_np = pool.gather(uids, slab_rows)
+        shardings = slab_shardings(self.spec, self.mesh)
+        slab = (jax.device_put(slab_np, shardings) if shardings is not None
+                else jax.device_put(slab_np))
+        plans = jax.tree_util.tree_map(jnp.asarray, slab_plan)
+        return state, pool, uids, slab, plans
+
+    def _host_epilogue(self, state: EngineState, pool, uids, slab):
+        """Write the chunk's final slab rows back into the host pool and
+        re-attach it to the state."""
+        pool.writeback(uids, jax.device_get(slab))
+        return dataclasses.replace(state, cold=pool)
 
     def step(self, state: EngineState, batch):
         """Jitted round; donates the previous state's buffers."""
         self.dispatch_count += 1
+        if self.spec.paged and self.spec.cold_placement == "host":
+            state, pool, uids, slab, plans = self._host_prologue(
+                state, 1, device_plane=False)
+            plan0 = jax.tree_util.tree_map(lambda x: x[0], plans)
+            state, slab, metrics = self._round_host(state, batch, slab,
+                                                    plan0)
+            return self._host_epilogue(state, pool, uids, slab), metrics
         return self._round(state, batch)
 
     def run(self, state: EngineState, batches,
@@ -1264,6 +1691,12 @@ class RoundEngine:
             raise ValueError(
                 f"batches carry {T} rounds but n_rounds={n_rounds}")
         self.dispatch_count += 1
+        if self.spec.paged and self.spec.cold_placement == "host":
+            state, pool, uids, slab, plans = self._host_prologue(
+                state, T, device_plane=False)
+            state, slab, metrics = self._multi_host(state, slab, batches,
+                                                    plans)
+            return self._host_epilogue(state, pool, uids, slab), metrics
         return self._multi(state, batches)
 
     def run_device(self, state: EngineState, corpus, n_rounds: int):
@@ -1276,6 +1709,12 @@ class RoundEngine:
         shapes). Returns ``(new_state, metrics)`` with (T,)-stacked
         metrics."""
         self.dispatch_count += 1
+        if self.spec.paged and self.spec.cold_placement == "host":
+            state, pool, uids, slab, plans = self._host_prologue(
+                state, n_rounds, device_plane=True)
+            state, slab, metrics = self._multi_device_host(
+                state, slab, plans, corpus, n_rounds=n_rounds)
+            return self._host_epilogue(state, pool, uids, slab), metrics
         return self._multi_device(state, corpus=corpus, n_rounds=n_rounds)
 
     def server_params(self, state: EngineState):
@@ -1286,3 +1725,6 @@ class RoundEngine:
 
     def resident_bytes(self, state: EngineState) -> int:
         return engine_resident_bytes(state)
+
+    def resident_bytes_by_tier(self, state: EngineState) -> dict:
+        return engine_resident_bytes_by_tier(state)

@@ -1,0 +1,431 @@
+"""Host-offloaded cold tier + overlapped page streaming (docs §13).
+
+Moves a paged spec's cold pools out of accelerator HBM: the full
+``(n_clients,)``-row encoded pools live in host memory
+(:class:`HostColdPool`) and each dispatch sees only a device-resident
+SLAB of the rows that actually churn in that chunk — device bytes scale
+with ``s_max`` (the hot working set) instead of ``n``.
+
+Three pieces compose the tier:
+
+* :class:`HostColdPool` — the host-side pools, a registered pytree node
+  so the :class:`~repro.core.round_engine.EngineState` carries it through
+  checkpointing unchanged; it is STRIPPED before every jit dispatch (a
+  numpy leaf inside a trace is a bug, and it fails loudly).
+* :func:`build_chunk_plan` — turns the bookkeeping-only replay of
+  :func:`repro.core.round_engine.plan_rounds` into slab-row schedules:
+  every id that churns anywhere in the chunk owns exactly ONE slab row,
+  so a round-t evict is visible to any later round's promotion of the
+  same id — the read-after-write order device pools give for free.
+* :class:`PageStreamer` + :func:`engine_run_stream` — the double-buffered
+  driver: while the device runs chunk i's compiled superstep, one
+  background thread plans chunk i+1, gathers its slab from the host pool
+  and ``jax.device_put``-copies it. The producer follows the
+  ``data.pipeline.BatchPrefetcher`` contract: strict index order on a
+  single thread, errors re-raised at ``get()`` in stream position,
+  hardened ``close()``. Correctness under overlap: chunk i+1's slab is
+  gathered before chunk i writes back, so rows whose ids churn in BOTH
+  chunks are patched on device from chunk i's final slab
+  (:func:`_patch_slab`), and the producer never runs more than one
+  writeback ahead (the ``mark_written`` gate).
+"""
+from __future__ import annotations
+
+import functools
+import queue
+import threading
+import time
+import warnings
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+# slab-position ids are int32 client ids; the pad sentinel sorts AFTER
+# every real id so padded id vectors stay ascending for searchsorted
+ID_SENTINEL = np.iinfo(np.int32).max
+
+
+@jax.tree_util.register_pytree_node_class
+class HostColdPool:
+    """Host-memory cold pools: a tuple of per-bucket encoded-row pytrees
+    (the exact tree the device placement keeps in ``state.cold``), held as
+    numpy arrays. Registered as a pytree node so checkpoint save/load and
+    ``jax.device_get`` traverse it; unflattening coerces every leaf back
+    to numpy, so a restored pool never silently becomes device-resident.
+
+    The pool is MUTABLE host state: :meth:`writeback` updates rows in
+    place (the engine's host prologue/epilogue and the streamer own the
+    ordering). It must never cross into a jit trace — the engine strips
+    it off the state before every dispatch."""
+
+    def __init__(self, buckets):
+        self.buckets = tuple(buckets)
+
+    # -- pytree protocol ---------------------------------------------------
+    def tree_flatten(self):
+        leaves, treedef = jax.tree_util.tree_flatten(self.buckets)
+        return leaves, treedef
+
+    @classmethod
+    def tree_unflatten(cls, treedef, leaves):
+        # np.asarray of a jax array is a zero-copy READ-ONLY view — copy
+        # when needed so a checkpoint-restored pool stays writeback-able
+        def to_numpy(leaf):
+            a = np.asarray(leaf)
+            return a if a.flags.writeable else a.copy()
+
+        return cls(jax.tree_util.tree_unflatten(
+            treedef, [to_numpy(leaf) for leaf in leaves]))
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return sum(leaf.nbytes
+                   for leaf in jax.tree_util.tree_leaves(self.buckets))
+
+    def __len__(self) -> int:
+        return jax.tree_util.tree_leaves(self.buckets)[0].shape[0]
+
+    # -- slab traffic --------------------------------------------------------
+    def gather(self, uids, slab_rows: int):
+        """Rows ``uids`` of every pool leaf, zero-padded to ``slab_rows``
+        (the last row is the chunk's all-zero dummy: invalid churn slots
+        read/write it and decode to finite zeros). Returns a numpy tree
+        shaped like ``state.cold`` with ``slab_rows`` rows per leaf."""
+        uids = np.asarray(uids, dtype=np.int64)
+        if len(uids) > slab_rows - 1:
+            raise ValueError(
+                f"{len(uids)} churning ids exceed the slab's "
+                f"{slab_rows - 1} payload rows")
+
+        def one(leaf):
+            out = np.zeros((slab_rows,) + leaf.shape[1:], leaf.dtype)
+            out[:len(uids)] = leaf[uids]
+            return out
+
+        return jax.tree_util.tree_map(one, self.buckets)
+
+    def writeback(self, uids, slab) -> None:
+        """Scatter the chunk's final slab payload rows back into the pool
+        (in place). ``slab`` must already be host-side (``jax.device_get``
+        it first); rows past ``len(uids)`` — the zero tail and the dummy
+        row — are dropped."""
+        uids = np.asarray(uids, dtype=np.int64)
+        k = len(uids)
+
+        def one(pool_leaf, slab_leaf):
+            if k:
+                pool_leaf[uids] = np.asarray(slab_leaf)[:k]
+            return pool_leaf
+
+        jax.tree_util.tree_map(one, self.buckets, tuple(slab))
+
+
+def chunk_slab_rows(spec, cfg, n_rounds: int) -> int:
+    """Static slab height for a ``n_rounds`` chunk: at most ``s_churn``
+    evictions + ``s_churn`` promotions per round can touch distinct ids,
+    plus one all-zero dummy row for invalid churn slots."""
+    s_churn = min(cfg.s_selected, spec.s_max)
+    return 2 * n_rounds * s_churn + 1
+
+
+def build_chunk_plan(plan, slab_rows: int):
+    """Host-side (numpy) compilation of a chunk's churn schedule into slab
+    positions. ``plan`` is the device_get of
+    :func:`repro.core.round_engine.plan_rounds` output: ``(T, s_churn)``
+    arrays ``evict_ids/evict_valid/promo_ids/promo_valid``.
+
+    Returns ``(uids, {"evict_slab", "promo_slab"})``: ``uids`` is the
+    sorted unique valid churn ids (the slab's payload rows, in order) and
+    the two ``(T, s_churn)`` int32 arrays map every churn slot to its slab
+    row — invalid slots to the dummy row ``slab_rows - 1``."""
+    ev_ids = np.asarray(plan["evict_ids"])
+    ev_ok = np.asarray(plan["evict_valid"]).astype(bool)
+    pr_ids = np.asarray(plan["promo_ids"])
+    pr_ok = np.asarray(plan["promo_valid"]).astype(bool)
+    uids = np.unique(np.concatenate([ev_ids[ev_ok].ravel(),
+                                     pr_ids[pr_ok].ravel()]))
+    if len(uids) > slab_rows - 1:
+        raise ValueError(f"{len(uids)} churning ids exceed the slab's "
+                         f"{slab_rows - 1} payload rows")
+    dummy = slab_rows - 1
+
+    def pos(ids, ok):
+        if len(uids) == 0:
+            return np.full(ids.shape, dummy, np.int32)
+        p = np.minimum(np.searchsorted(uids, ids), len(uids) - 1)
+        return np.where(ok, p, dummy).astype(np.int32)
+
+    return uids, {"evict_slab": pos(ev_ids, ev_ok),
+                  "promo_slab": pos(pr_ids, pr_ok)}
+
+
+def pad_ids(uids, slab_rows: int):
+    """``uids`` padded to the slab's fixed ``slab_rows - 1`` payload height
+    with :data:`ID_SENTINEL` (sorts last, so the padded vector stays
+    ascending for the device-side searchsorted in :func:`_patch_slab`)."""
+    out = np.full((slab_rows - 1,), ID_SENTINEL, np.int32)
+    out[:len(uids)] = np.asarray(uids, np.int32)
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _patch_slab(slab_new, ids_new, slab_old, ids_old):
+    """Overwrite rows of the NEXT chunk's freshly gathered slab whose ids
+    also churned in the PREVIOUS chunk with the previous chunk's final
+    slab rows. This closes the overlap race: the streamer gathers chunk
+    i+1 from the host pool before chunk i has written back, so ids live in
+    both chunks would otherwise read stale pool bytes. The producer's
+    ``mark_written`` gate guarantees the pool already holds every chunk
+    ≤ i-1, so patching against chunk i alone is complete.
+
+    ``ids_*``: ``(slab_rows - 1,)`` int32, ascending, sentinel-padded
+    (:func:`pad_ids`) — all shapes static, so equal-length chunks compile
+    this once."""
+    pos = jnp.clip(jnp.searchsorted(ids_old, ids_new),
+                   0, ids_old.shape[0] - 1)
+    hit = (ids_old[pos] == ids_new) & (ids_new != ID_SENTINEL)
+
+    def one(new_leaf, old_leaf):
+        rows = old_leaf[pos]
+        sel = hit.reshape((-1,) + (1,) * (new_leaf.ndim - 1))
+        head = new_leaf[:ids_new.shape[0]]
+        return new_leaf.at[:ids_new.shape[0]].set(
+            jnp.where(sel, rows.astype(new_leaf.dtype), head))
+
+    return jax.tree_util.tree_map(one, slab_new, tuple(slab_old))
+
+
+class PageStreamer:
+    """Double-buffered background-thread page streamer — the cold-tier
+    sibling of ``data.pipeline.BatchPrefetcher``, same contract:
+
+    * **order & determinism** — ``make_chunk(i)`` runs strictly in index
+      order on ONE background thread, so the planner's bookkeeping chain
+      (a closure carried across calls) replays exactly the synchronous
+      stream;
+    * **bounded lookahead** — at most ``depth`` chunks buffered;
+    * **errors surface at get()** — a producer exception re-raises on the
+      consumer thread at its position in the stream, never swallowed;
+    * **hardened close()** — stop flag first, drain-and-join against a
+      monotonic deadline, ``RuntimeWarning`` on a leaked thread, pending
+      errors re-raised by ``__exit__``.
+
+    On top of the prefetcher contract it adds the WRITEBACK GATE: the
+    producer may gather chunk ``i`` from the host pool only once the
+    consumer has called :meth:`mark_written` for chunk ``i - 2`` — the
+    pool then already holds everything except chunk ``i - 1``, whose
+    updates :func:`_patch_slab` applies on device. ``make_chunk`` is
+    called only after the gate clears."""
+
+    def __init__(self, make_chunk: Callable[[int], Any],
+                 n_chunks: Optional[int] = None, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"depth must be >= 1, got {depth}")
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._err: Optional[BaseException] = None
+        self._n = n_chunks
+        self._served = 0
+        self._done = object()
+        self._make = make_chunk
+        self._wb = -1                     # last chunk written back to pool
+        self._wb_cond = threading.Condition()
+        self._thread = threading.Thread(target=self._produce, daemon=True)
+        self._thread.start()
+
+    def mark_written(self, i: int) -> None:
+        """Consumer: the pool now holds every chunk ``<= i``."""
+        with self._wb_cond:
+            self._wb = max(self._wb, i)
+            self._wb_cond.notify_all()
+
+    def _gate(self, i: int) -> bool:
+        """Wait until gathering chunk ``i`` is pool-consistent (writebacks
+        through chunk ``i - 2`` applied). False if closed while waiting."""
+        with self._wb_cond:
+            while self._wb < i - 2:
+                if self._stop.is_set():
+                    return False
+                self._wb_cond.wait(timeout=0.1)
+        return not self._stop.is_set()
+
+    def _produce(self):
+        try:
+            i = 0
+            while not self._stop.is_set() and (self._n is None
+                                               or i < self._n):
+                if not self._gate(i):
+                    break
+                c = self._make(i)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(c, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                i += 1
+        except BaseException as e:  # noqa: BLE001 — re-raised at get()
+            self._err = e
+        finally:
+            try:
+                self._q.put(self._done, timeout=0.1)
+            except queue.Full:
+                pass
+
+    def get(self):
+        """Next chunk, blocking until the producer has one ready. Chunks
+        built before a producer failure are still served (FIFO); the error
+        surfaces at its position in the stream."""
+        while True:
+            if self._n is not None and self._served >= self._n:
+                raise StopIteration
+            try:
+                c = self._q.get(timeout=0.1)
+            except queue.Empty:
+                if self._err is not None:
+                    err, self._err = self._err, None
+                    raise err
+                if not self._thread.is_alive():
+                    raise StopIteration from None
+                continue
+            if c is self._done:
+                if self._err is not None:
+                    err, self._err = self._err, None
+                    raise err
+                raise StopIteration
+            self._served += 1
+            return c
+
+    def __iter__(self):
+        while True:
+            try:
+                yield self.get()
+            except StopIteration:
+                return
+
+    def close(self, timeout: float = 30.0) -> bool:
+        """Stop the producer and drop buffered chunks. Deadlock-safe even
+        with the producer blocked on a full queue OR parked on the
+        writeback gate (both poll the stop flag every 0.1 s); monotonic
+        deadline, ``RuntimeWarning`` + False on a leak. A pending producer
+        error is NOT cleared here — ``__exit__`` re-raises it."""
+        self._stop.set()
+        with self._wb_cond:
+            self._wb_cond.notify_all()
+        deadline = time.monotonic() + timeout
+        while self._thread.is_alive():
+            while True:
+                try:
+                    self._q.get_nowait()
+                except queue.Empty:
+                    break
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            self._thread.join(timeout=min(0.25, remaining))
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        if self._thread.is_alive():
+            warnings.warn(
+                f"PageStreamer.close(): producer thread still alive after "
+                f"{timeout:.1f}s (slow gather/device_put?)",
+                RuntimeWarning, stacklevel=2)
+            return False
+        return True
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        self.close()
+        if self._err is not None and exc_type is None:
+            err, self._err = self._err, None
+            raise err
+        return False
+
+
+def engine_run_stream(engine, state, *, n_chunks: int, chunk_rounds: int,
+                      corpus=None, chunk_batches=None, depth: int = 2):
+    """Overlapped host-tier driver: ``n_chunks`` supersteps of
+    ``chunk_rounds`` rounds each, with the NEXT chunk's plan/gather/H2D
+    running on a :class:`PageStreamer` thread while the device computes
+    the current chunk. Bit-exact with ``n_chunks`` sequential
+    ``engine.run_device`` / ``engine.run`` calls (the plan chain, slab
+    bytes and key chain are identical; only the host scheduling differs —
+    pinned by tests/test_streaming.py).
+
+    ``corpus``: device data plane (one compile for all chunks);
+    ``chunk_batches``: host plane, a length-``n_chunks`` list of per-chunk
+    batch pytrees with a leading ``(chunk_rounds,)`` axis. Returns
+    ``(state, metrics)`` with metrics concatenated to
+    ``(n_chunks * chunk_rounds,)`` numpy arrays."""
+    import dataclasses
+
+    from repro.core.round_engine import slab_shardings
+
+    spec, cfg = engine.spec, engine.cfg
+    if not (spec.paged and spec.cold_placement == "host"):
+        raise ValueError("engine_run_stream needs a paged spec with "
+                         "cold_placement='host'")
+    if (corpus is None) == (chunk_batches is None):
+        raise ValueError("pass exactly one of corpus / chunk_batches")
+    if chunk_batches is not None and len(chunk_batches) != n_chunks:
+        raise ValueError(f"chunk_batches carries {len(chunk_batches)} "
+                         f"chunks but n_chunks={n_chunks}")
+    device_plane = corpus is not None
+    pool = state.cold
+    state = dataclasses.replace(state, cold=None)
+    slab_rows = chunk_slab_rows(spec, cfg, chunk_rounds)
+    shardings = slab_shardings(spec, engine.mesh)
+    carry = (state.key, state.stale, state.hot_ids)
+
+    def make_chunk(i):
+        # strict-order closure: the bookkeeping chain rides across calls
+        nonlocal carry
+        carry, plan = engine._plan(carry[0], carry[1], carry[2],
+                                   n_rounds=chunk_rounds,
+                                   device_plane=device_plane)
+        uids, slab_plan = build_chunk_plan(jax.device_get(plan),
+                                           slab_rows=slab_rows)
+        slab_np = pool.gather(uids, slab_rows)
+        slab = (jax.device_put(slab_np, shardings)
+                if shardings is not None else jax.device_put(slab_np))
+        plans = jax.tree_util.tree_map(jnp.asarray, slab_plan)
+        return uids, jnp.asarray(pad_ids(uids, slab_rows)), slab, plans
+
+    metrics_all = []
+    prev = None                       # (uids, ids_pad, final_slab) of i-1
+    with PageStreamer(make_chunk, n_chunks, depth=depth) as streamer:
+        for i in range(n_chunks):
+            uids, ids_pad, slab, plans = streamer.get()
+            if prev is not None:
+                slab = _patch_slab(slab, ids_pad, prev[2], prev[1])
+            engine.dispatch_count += 1
+            if device_plane:
+                state, slab_f, met = engine._multi_device_host(
+                    state, slab, plans, corpus, n_rounds=chunk_rounds)
+            else:
+                state, slab_f, met = engine._multi_host(
+                    state, slab, chunk_batches[i], plans)
+            if prev is not None:
+                # blocks on chunk i-1 only — chunk i is already enqueued,
+                # and the producer (gated on mark_written) can now gather
+                # chunk i+1 while the device runs chunk i
+                pool.writeback(prev[0], jax.device_get(prev[2]))
+                streamer.mark_written(i - 1)
+            prev = (uids, ids_pad, slab_f)
+            metrics_all.append(met)
+    if prev is not None:
+        pool.writeback(prev[0], jax.device_get(prev[2]))
+    state = dataclasses.replace(state, cold=pool)
+    metrics = jax.tree_util.tree_map(
+        lambda *xs: np.concatenate([np.asarray(x) for x in xs]),
+        *metrics_all) if metrics_all else {}
+    return state, metrics

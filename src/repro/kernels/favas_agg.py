@@ -90,7 +90,9 @@ def _pad_clients(n: int, client_tile: int, arrays, alpha, mask):
 
 def fused_block_vmem_bytes(n: int, dtype, *, progress: bool = False,
                            codec_bits: int = 0, tile: int = TILE,
-                           client_tile: int = CLIENT_TILE) -> int:
+                           client_tile: int = CLIENT_TILE,
+                           schedule: str = "two_sweep",
+                           double_buffered: bool = False) -> int:
     """Per-grid-step VMEM footprint of ``favas_fused_pallas`` computed from
     the declared BlockSpec shapes (inputs + outputs + scratch). For the
     tiled path (n > client_tile) this is independent of both n and D —
@@ -101,23 +103,41 @@ def fused_block_vmem_bytes(n: int, dtype, *, progress: bool = False,
     plus a (rows, 1) f32 scale block — the codec term of docs/
     architecture.md §10. At n=1024/fp32/bits=8 the total stays ~1.1 MiB
     (vs 1.29 MiB for the dense-progress operand), pinned < 2 MiB by
-    tests/test_quant_fused.py."""
+    tests/test_quant_fused.py.
+
+    ``schedule="streamed"`` accounts the single-sweep aggregation-only
+    kernel (``favas_stream_pallas``, docs/architecture.md §13): no
+    client/init out blocks (the churn-bounded reset happens outside the
+    kernel) and a single f32 accumulator scratch row. ``double_buffered``
+    makes the pipeline's double buffering EXPLICIT in the budget: the grid
+    pipeline keeps two copies of every in/out block resident (fetching
+    block j+1 while block j computes), so the honest peak footprint is
+    2x the block bytes (scratch rows are not pipelined and stay single).
+    The default (two_sweep, single-buffer) keeps the historical number
+    that tests pin."""
     if progress and codec_bits:
         raise ValueError("progress and codec_bits are mutually exclusive")
+    if schedule not in ("two_sweep", "streamed"):
+        raise ValueError(f"unknown schedule {schedule!r}")
     itemsize = jnp.dtype(dtype).itemsize
     rows = min(n, client_tile)
     row_block = rows * tile * itemsize          # clients / inits / progress
     srv_block = tile * itemsize                 # (1, TILE) server row
     scalar_block = rows * 4                     # (rows, 1) f32 alpha / mask
     n_row_in = 3 if progress else 2
-    total = (srv_block + n_row_in * row_block + 2 * scalar_block  # inputs
-             + srv_block + 2 * row_block)                         # outputs
+    inputs = srv_block + n_row_in * row_block + 2 * scalar_block
     if codec_bits:
-        total += rows * tile * codec_bits // 8  # packed progress codes
-        total += rows * 4                       # (rows, 1) f32 scale block
-    if n > client_tile:
-        total += 2 * tile * 4                   # f32 acc + new-server scratch
-    return total
+        inputs += rows * tile * codec_bits // 8  # packed progress codes
+        inputs += rows * 4                       # (rows, 1) f32 scale block
+    if schedule == "streamed":
+        outputs = srv_block                      # server row only
+        scratch = tile * 4 if n > client_tile else 0      # f32 acc
+    else:
+        outputs = srv_block + 2 * row_block      # server + client/init tiles
+        scratch = 2 * tile * 4 if n > client_tile else 0  # acc + new-server
+    if double_buffered:
+        inputs, outputs = 2 * inputs, 2 * outputs
+    return inputs + outputs + scratch
 
 
 # ---------------------------------------------------------------------------
@@ -531,3 +551,229 @@ def favas_fused_pallas(server, clients, inits, alpha, mask, s: float,
         interpret=interpret,
     )(*operands)
     return srv.reshape(Dp)[:D], cli[:n, :D], ini[:n, :D]
+
+
+# ---------------------------------------------------------------------------
+# Streamed single-sweep aggregation (docs/architecture.md §13)
+# ---------------------------------------------------------------------------
+# The two-sweep fused kernel above reads every client block TWICE (phase 0
+# accumulate, phase 1 reset) and rewrites every pass-through tile unchanged:
+# ~2R+2W per resident client byte. The streamed schedule splits the round:
+# this kernel does ONE pipelined sweep (the grid pipeline double-buffers the
+# HBM->VMEM block stream, prefetching client block j+1 while block j's
+# partial sum computes) and emits ONLY the new server row; the selected-
+# client reset happens OUTSIDE as a churn-bounded scatter of that row into
+# the s selected positions of the donated (aliased) client/init buffers —
+# unselected rows are never read for the reset nor rewritten. Steady-state
+# traffic drops to 1R per resident byte + O(s*D) scatter writes.
+#
+# Bit-exactness contract (why the split loses nothing): the selection mask
+# is exactly the 0/1 indicator of the Gumbel top-s index set, so the fused
+# reset `m*s_new + (1-m)*x` is `x` to the bit for unselected rows and
+# `s_new.astype(dtype)` — exactly the row this kernel returns — for
+# selected ones. The accumulation order matches `_fused_kernel_tiled`
+# phase 0 block-for-block, so streamed-vs-two-sweep server parity is exact
+# per dispatch path and kernel-vs-oracle parity bounds are unchanged.
+
+def _stream_kernel(server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
+                   srv_out_ref, *, s1: float, prog_ref=None, codes_ref=None,
+                   pscale_ref=None, bits: int = 0):
+    """One resident (n, TILE) block, aggregation only — the `msg`/`total`/
+    `s_new` expressions of ``_fused_kernel`` (same reduction axis, true
+    division), without the reset outputs."""
+    c = clients_ref[...].astype(jnp.float32)          # (n, T)
+    i = inits_ref[...].astype(jnp.float32)            # (n, T)
+    a = alpha_ref[...].astype(jnp.float32)            # (n, 1)
+    m = mask_ref[...].astype(jnp.float32)             # (n, 1)
+    if prog_ref is not None:
+        p = prog_ref[...].astype(jnp.float32)
+    elif codes_ref is not None:
+        p = dequant_block(codes_ref[...],
+                          pscale_ref[...].astype(jnp.float32), bits)
+    else:
+        p = c - i
+    msg = i + p / a
+    total = jnp.sum(m * msg, axis=0, keepdims=True)   # (1, T)
+    s_new = (server_ref[...].astype(jnp.float32) + total) / s1
+    srv_out_ref[...] = s_new.astype(srv_out_ref.dtype)
+
+
+def _stream_kernel_tiled(server_ref, clients_ref, inits_ref, alpha_ref,
+                         mask_ref, srv_out_ref, acc_ref, *, s1: float,
+                         n_blocks: int, prog_ref=None, codes_ref=None,
+                         pscale_ref=None, bits: int = 0):
+    """Single pipelined sweep over (CLIENT_TILE, TILE) client blocks: each
+    block's masked message partial sum accumulates into the f32 scratch
+    row (identical accumulation order to ``_fused_kernel_tiled`` phase 0),
+    and the epilogue on the last block folds in the server row. No client/
+    init outputs exist, so no pass-through tile is ever written back."""
+    j = pl.program_id(1)
+    c = clients_ref[...].astype(jnp.float32)          # (CT, T)
+    i = inits_ref[...].astype(jnp.float32)            # (CT, T)
+    a = alpha_ref[...].astype(jnp.float32)            # (CT, 1)
+    m = mask_ref[...].astype(jnp.float32)             # (CT, 1)
+    if prog_ref is not None:
+        p = prog_ref[...].astype(jnp.float32)
+    elif codes_ref is not None:
+        p = dequant_block(codes_ref[...],
+                          pscale_ref[...].astype(jnp.float32), bits)
+    else:
+        p = c - i
+    msg = i + p / a
+    part = jnp.sum(m * msg, axis=0, keepdims=True)
+
+    @pl.when(j == 0)
+    def _():
+        acc_ref[...] = part
+
+    @pl.when(j > 0)
+    def _():
+        acc_ref[...] = acc_ref[...] + part
+
+    @pl.when(j == n_blocks - 1)
+    def _epilogue():
+        s_new = (server_ref[...].astype(jnp.float32) + acc_ref[...]) / s1
+        srv_out_ref[...] = s_new.astype(srv_out_ref.dtype)
+
+
+def favas_stream_pallas(server, clients, inits, alpha, mask, s: float,
+                        *, progress=None, progress_codes=None,
+                        progress_bits: int = 0, progress_shards: int = 1,
+                        client_tile: int | None = None,
+                        interpret: bool = True):
+    """Aggregation-only half of the STREAMED round schedule.
+
+    Same operand contract as ``favas_fused_pallas`` (server (D,), clients/
+    inits (n, D), alpha/mask (n,), optional dense ``progress`` or packed
+    ``progress_codes`` + ``progress_bits``/``progress_shards``), but
+    returns ONLY the (D,) new server vector: the caller applies the
+    selected-client reset as a churn-bounded scatter of this row into the
+    donated state buffers (``core.round_engine.stream_bucket_update``).
+    One HBM read per resident client byte, ~zero client-buffer writes."""
+    n, D = clients.shape
+    ct = client_tile or CLIENT_TILE
+    pad = (-D) % TILE
+    codes = pscale = None
+    bits = progress_bits
+    if progress_codes is not None:
+        if progress is not None:
+            raise ValueError("progress and progress_codes are mutually "
+                             "exclusive")
+        if bits not in (2, 4, 8):
+            raise ValueError(f"progress_bits must be 2, 4 or 8 (got {bits})")
+        if D % progress_shards:
+            raise ValueError(f"D={D} does not divide into "
+                             f"{progress_shards} shards")
+        if progress_shards > 1 and (D // progress_shards) % TILE:
+            raise ValueError(
+                f"codes-in progress needs TILE-aligned shard segments "
+                f"(D={D}, shards={progress_shards}, tile={TILE})")
+        codes, pscale = progress_codes["codes"], progress_codes["scale"]
+    if pad:
+        server = jnp.pad(server, (0, pad))
+        clients = jnp.pad(clients, ((0, 0), (0, pad)))
+        inits = jnp.pad(inits, ((0, 0), (0, pad)))
+        if progress is not None:
+            progress = jnp.pad(progress, ((0, 0), (0, pad)))
+        if codes is not None:
+            codes = jnp.pad(codes, ((0, 0), (0, pad * bits // 8)))
+    Dp = D + pad
+    seg_tiles = (Dp // progress_shards) // TILE if codes is not None else 1
+
+    if n <= ct:                                   # whole client axis resident
+        alphac = jnp.maximum(alpha.astype(jnp.float32), 1e-9).reshape(n, 1)
+        maskc = mask.astype(jnp.float32).reshape(n, 1)
+        row_spec = pl.BlockSpec((n, TILE), lambda i: (0, i))
+        scalar_spec = pl.BlockSpec((n, 1), lambda i: (0, 0))
+        srv_spec = pl.BlockSpec((1, TILE), lambda i: (0, i))
+        if codes is not None:
+            def kernel(server_ref, clients_ref, inits_ref, codes_ref,
+                       pscale_ref, alpha_ref, mask_ref, srv_out_ref):
+                return _stream_kernel(
+                    server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
+                    srv_out_ref, s1=float(s) + 1.0,
+                    codes_ref=codes_ref, pscale_ref=pscale_ref, bits=bits)
+            in_specs = [srv_spec, row_spec, row_spec,
+                        pl.BlockSpec((n, TILE * bits // 8),
+                                     lambda i: (0, i)),
+                        pl.BlockSpec((n, 1),
+                                     lambda i: (0, i // seg_tiles)),
+                        scalar_spec, scalar_spec]
+            operands = (server.reshape(1, Dp), clients, inits, codes,
+                        pscale, alphac, maskc)
+        elif progress is None:
+            kernel = functools.partial(_stream_kernel, s1=float(s) + 1.0)
+            in_specs = [srv_spec, row_spec, row_spec, scalar_spec,
+                        scalar_spec]
+            operands = (server.reshape(1, Dp), clients, inits, alphac, maskc)
+        else:
+            def kernel(server_ref, clients_ref, inits_ref, prog_ref,
+                       alpha_ref, mask_ref, srv_out_ref):
+                return _stream_kernel(
+                    server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
+                    srv_out_ref, s1=float(s) + 1.0, prog_ref=prog_ref)
+            in_specs = [srv_spec, row_spec, row_spec, row_spec, scalar_spec,
+                        scalar_spec]
+            operands = (server.reshape(1, Dp), clients, inits, progress,
+                        alphac, maskc)
+        srv = pl.pallas_call(
+            kernel,
+            grid=(Dp // TILE,),
+            in_specs=in_specs,
+            out_specs=srv_spec,
+            out_shape=jax.ShapeDtypeStruct((1, Dp), server.dtype),
+            interpret=interpret,
+        )(*operands)
+        return srv.reshape(Dp)[:D]
+
+    npad, (clients, inits, progress, codes, pscale), alpha, mask = \
+        _pad_clients(n, ct, (clients, inits, progress, codes, pscale),
+                     alpha, mask)
+    nb = npad // ct
+    alphac = jnp.maximum(alpha.astype(jnp.float32), 1e-9).reshape(npad, 1)
+    maskc = mask.astype(jnp.float32).reshape(npad, 1)
+    # single-phase inner grid dim: j in [0, nb) — every block exactly once,
+    # double-buffered by the grid pipeline (block j+1 prefetches during j)
+    row_spec = pl.BlockSpec((ct, TILE), lambda i, j: (j, i))
+    scalar_spec = pl.BlockSpec((ct, 1), lambda i, j: (j, 0))
+    srv_spec = pl.BlockSpec((1, TILE), lambda i, j: (0, i))
+    if codes is not None:
+        def kernel(server_ref, clients_ref, inits_ref, codes_ref, pscale_ref,
+                   alpha_ref, mask_ref, srv_out_ref, acc_ref):
+            return _stream_kernel_tiled(
+                server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
+                srv_out_ref, acc_ref, s1=float(s) + 1.0, n_blocks=nb,
+                codes_ref=codes_ref, pscale_ref=pscale_ref, bits=bits)
+        in_specs = [srv_spec, row_spec, row_spec,
+                    pl.BlockSpec((ct, TILE * bits // 8),
+                                 lambda i, j: (j, i)),
+                    pl.BlockSpec((ct, 1), lambda i, j: (j, i // seg_tiles)),
+                    scalar_spec, scalar_spec]
+        operands = (server.reshape(1, Dp), clients, inits, codes, pscale,
+                    alphac, maskc)
+    elif progress is None:
+        kernel = functools.partial(_stream_kernel_tiled, s1=float(s) + 1.0,
+                                   n_blocks=nb)
+        in_specs = [srv_spec, row_spec, row_spec, scalar_spec, scalar_spec]
+        operands = (server.reshape(1, Dp), clients, inits, alphac, maskc)
+    else:
+        def kernel(server_ref, clients_ref, inits_ref, prog_ref, alpha_ref,
+                   mask_ref, srv_out_ref, acc_ref):
+            return _stream_kernel_tiled(
+                server_ref, clients_ref, inits_ref, alpha_ref, mask_ref,
+                srv_out_ref, acc_ref, s1=float(s) + 1.0, n_blocks=nb,
+                prog_ref=prog_ref)
+        in_specs = [srv_spec, row_spec, row_spec, row_spec, scalar_spec,
+                    scalar_spec]
+        operands = (server.reshape(1, Dp), clients, inits, progress, alphac,
+                    maskc)
+    srv = pl.pallas_call(
+        kernel,
+        grid=(Dp // TILE, nb),
+        in_specs=in_specs,
+        out_specs=srv_spec,
+        out_shape=jax.ShapeDtypeStruct((1, Dp), server.dtype),
+        scratch_shapes=[pltpu.VMEM((1, TILE), jnp.float32)],
+        interpret=interpret,
+    )(*operands)
+    return srv.reshape(Dp)[:D]

@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.favas_agg import favas_agg_pallas, favas_fused_pallas
+from repro.kernels.favas_agg import (favas_agg_pallas, favas_fused_pallas,
+                                     favas_stream_pallas)
 from repro.kernels.luq import (luq_decode_pallas, luq_encode_pallas,
                                luq_pallas)
 
@@ -93,6 +94,45 @@ def favas_fused_flat(server, clients, inits, alpha, mask, s: float,
         return srv, jnp.pad(cli, rpad), jnp.pad(ini, rpad)
     return ref.favas_fused_ref(server, clients, inits, alpha, mask, s,
                                progress=progress)
+
+
+def favas_stream_flat(server, clients, inits, alpha, mask, s: float,
+                      *, progress=None, progress_codes=None,
+                      progress_bits: int = 0, progress_shards: int = 1,
+                      client_tile=None, n_logical=None, use_kernel=None):
+    """Aggregation-only half of the STREAMED round schedule (docs §13):
+    the ``favas_fused_flat`` contract, returning ONLY the (D,) new server
+    vector. The caller applies the selected-client reset as a churn-
+    bounded scatter of this row into the donated state buffers
+    (``core.round_engine.stream_bucket_update``), so unselected rows are
+    never rewritten. Same ``use_kernel`` dispatch and the same fp32
+    expressions as the fused path — the server it returns is bit-identical
+    to ``favas_fused_flat``'s per dispatch path."""
+    if progress is not None and progress_codes is not None:
+        raise ValueError("progress and progress_codes are mutually exclusive")
+    if use_kernel is None:
+        use_kernel = _is_tpu()
+    if use_kernel:
+        return favas_stream_pallas(server, clients, inits, alpha, mask, s,
+                                   progress=progress,
+                                   progress_codes=progress_codes,
+                                   progress_bits=progress_bits,
+                                   progress_shards=progress_shards,
+                                   client_tile=client_tile,
+                                   interpret=not _is_tpu())
+    if progress_codes is not None:
+        from repro.core.paging import luq_decode_rows   # lazy: no cycle
+        progress = luq_decode_rows(progress_codes, progress_bits,
+                                   jnp.float32, shards=progress_shards)
+    rows = clients.shape[0]
+    nl = rows if n_logical is None else n_logical
+    if nl < rows:
+        # padded rows are zero with zero mask: exact no-ops under the sum
+        return ref.favas_stream_ref(
+            server, clients[:nl], inits[:nl], alpha[:nl], mask[:nl], s,
+            progress=None if progress is None else progress[:nl])
+    return ref.favas_stream_ref(server, clients, inits, alpha, mask, s,
+                                progress=progress)
 
 
 def favas_aggregate_flat(server, clients, inits, alpha, mask, s: float,

@@ -45,6 +45,30 @@ def favas_fused_ref(server, clients, inits, alpha, mask, s: float,
     return server_new, clients_new, inits_new
 
 
+def favas_stream_ref(server, clients, inits, alpha, mask, s: float,
+                     *, progress=None):
+    """Aggregation-only oracle of the STREAMED schedule (docs §13): the
+    exact ``favas_fused_ref`` server expressions, emitting ONLY the new
+    server row. The selected-client reset happens outside the kernel as a
+    churn-bounded scatter of this row into the s selected positions.
+
+    Bit-exactness with the fused reset: ``mask`` is exactly the 0/1
+    indicator of the selected index set (Gumbel top-s), so for every
+    unselected row ``m*s_new + (1-m)*x == x`` to the bit (the f32
+    round-trip of a finite value is identity for f32/bf16 states) and for
+    every selected row it equals ``s_new.astype(dtype)`` — the row this
+    oracle returns."""
+    c = clients.astype(jnp.float32)
+    i = inits.astype(jnp.float32)
+    a = jnp.maximum(alpha.astype(jnp.float32), 1e-9)[:, None]
+    m = mask.astype(jnp.float32)[:, None]
+    p = (c - i) if progress is None else progress.astype(jnp.float32)
+    msg = i + p / a
+    total = jnp.sum(m * msg, axis=0, keepdims=True)
+    s_new = (server.astype(jnp.float32)[None] + total) / (float(s) + 1.0)
+    return s_new[0].astype(server.dtype)
+
+
 def luq_ref(x, u_prune, u_round, scale, bits: int):
     """LUQ log-domain unbiased quantization (see core/quant.py), with the
     randomness and the global scale passed in (kernel parity)."""

@@ -142,6 +142,88 @@ def dense_materializations(hlo_text: str, *, rows: int, min_cols: int = 128,
     return out
 
 
+# entry-output defining opcodes that do NOT rewrite the full buffer: the
+# output either aliases a donated input directly or is produced by an
+# in-place churn-bounded update (scatter / dynamic-update-slice; XLA:CPU
+# expands a row scatter to a while loop whose result surfaces through
+# get-tuple-element). Everything else writes the whole buffer.
+_IN_PLACE_OPS = frozenset({
+    "parameter", "get-tuple-element", "dynamic-update-slice", "scatter",
+    "bitcast", "copy-start", "copy-done", "optimization-barrier", "tuple",
+})
+_OPCODE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(?:\([^)]*\)|[\w\[\]{},]+)\s+([\w\-]+)\(")
+_ROOT_OPERAND_RE = re.compile(r"(\w+)\[([\d,]*)\][^\s]*\s+%?([\w.\-]+)")
+
+
+def pass_through_copies(hlo_text: str, *, rows: int, min_cols: int = 128,
+                        dtypes: Tuple[str, ...] = ("f32", "bf16")
+                        ) -> List[Tuple[str, str, Tuple[int, ...]]]:
+    """Write-traffic audit of a compiled round (docs/architecture.md §13):
+    entry outputs of shape ``(rows, >=min_cols, ...)`` in a full-precision
+    dtype whose defining op REWRITES the whole buffer.
+
+    The streamed schedule's contract is that the donated client/init
+    stacks are only ever touched by churn-bounded in-place updates
+    (scatter / dynamic-update-slice on the aliased input), so unselected
+    rows are never rewritten — under the two-sweep schedule the same
+    outputs are full ``(n, D)`` elementwise fusions (the ``m*s_new +
+    (1-m)*x`` blend), ~1 extra read + 1 extra write per resident byte.
+    Returns ``(output_name, defining_opcode, dims)`` per violation; a
+    compiled streamed round must return ``[]`` (pinned in
+    tests/test_streaming.py beside the ``dense_materializations`` gate
+    this mirrors). ``rows`` is the client-stack row count (n padded, or
+    s_max-stack rows for a paged round)."""
+    lines = hlo_text.splitlines()
+    opcodes: Dict[str, str] = {}
+    for ln in lines:
+        m = _OPCODE_RE.match(ln)
+        if m:
+            opcodes[m.group(1)] = m.group(2)
+    # the ENTRY computation's ROOT line carries the typed operand list
+    root = None
+    in_entry = False
+    for ln in lines:
+        s = ln.strip()
+        if s.startswith("ENTRY"):
+            in_entry = True
+        elif in_entry and s.startswith("ROOT"):
+            root = s
+            break
+        elif in_entry and s == "}":
+            in_entry = False
+    if root is None:
+        return []
+    args = root.split("(", 2)[-1]
+    out = []
+    for dtype, dims, name in _ROOT_OPERAND_RE.findall(args):
+        if dtype not in dtypes or not dims.strip():
+            continue
+        d = tuple(int(x) for x in dims.split(","))
+        if len(d) < 2 or d[0] != rows or max(d[1:]) < min_cols:
+            continue
+        op = opcodes.get(name, "?")
+        if op not in _IN_PLACE_OPS:
+            out.append((name, op, d))
+    return out
+
+
+def round_traffic_report(compiled, *, rows: int, min_cols: int = 128) -> Dict:
+    """HBM bytes-accessed-per-round audit of a compiled round executable:
+    total "bytes accessed" from ``compiled.cost_analysis()`` (normalized —
+    the ONE accessor, per ROADMAP) plus the :func:`pass_through_copies`
+    write census. The streamed-vs-two-sweep traffic-reduction gate in
+    tests/test_streaming.py and ``benchmarks.streaming_bench`` read this."""
+    from repro.launch.dryrun import normalize_cost_analysis
+    cost = normalize_cost_analysis(compiled.cost_analysis())
+    return {
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0) or 0.0),
+        "pass_through_copies": pass_through_copies(
+            compiled.as_text(), rows=rows, min_cols=min_cols),
+    }
+
+
 def parse_hlo_collectives(hlo_text: str, *, bf16_dot_comms: bool = False) -> Dict:
     """Trip-count-aware collective byte accounting (per-device program).
 

@@ -101,6 +101,15 @@ def build_cli():
                          "passthrough (full precision, bit-exact parity "
                          "tool), 2/4/8 = bit-packed LUQ codes + per-(row, "
                          "shard) scales (kernels/luq.py math)")
+    ap.add_argument("--cold-placement", default="device",
+                    choices=["device", "host"],
+                    help="where --residency paged keeps the cold pools "
+                         "(docs/architecture.md §13): device (default) "
+                         "holds them in HBM; host offloads them to host "
+                         "memory and streams each superstep's churn-bounded "
+                         "slab in/out around the dispatch — device bytes "
+                         "scale with --s-max instead of --n-clients, "
+                         "bit-exact with device placement")
     ap.add_argument("--use-kernel", default="auto",
                     choices=["auto", "on", "off"],
                     help="fused Pallas aggregation kernel: auto = TPU only "
@@ -149,11 +158,17 @@ def run(args):
                          det_alpha=det_alpha, use_kernel=use_kernel,
                          mesh=mesh, residency=args.residency,
                          s_max=args.s_max, cold_bits=args.cold_bits,
+                         cold_placement=args.cold_placement,
                          quant_fused=args.quant_fused)
     if args.residency == "paged":
         print(f"residency: paged (s_max={engine.spec.s_max} hot rows, "
-              f"cold codec {engine.spec.cold_codec})")
+              f"cold codec {engine.spec.cold_codec}, "
+              f"cold tier on {engine.spec.cold_placement})")
     state = engine.init_state(params, key)
+    if args.residency == "paged":
+        tiers = engine.resident_bytes_by_tier(state)
+        print(f"resident bytes: device {tiers['device']:,} | "
+              f"host {tiers['host']:,}")
     del params  # the flat buffers are now the authoritative copy
 
     if args.ckpt_dir:

@@ -1,0 +1,103 @@
+"""Perf-trajectory collation: one table over every repo-root BENCH_*.json.
+
+Each performance PR leaves its headline numbers in a root ``BENCH_<name>.
+json`` artifact (written by the matching ``benchmarks/<name>_bench.py``
+full run). This tool collates them into a single table — the repo's
+performance trajectory at a glance — and is printed at the end of the CI
+``bench`` job so every run shows the full history, not just the benchmark
+it exercised.
+
+Usage:  python tools/bench_trajectory.py [--root PATH]
+Exit status 0 when every BENCH file parses (missing files are fine — the
+trajectory grows PR by PR); 1 on a corrupt file.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _get(d, *path, default=None):
+    for p in path:
+        if not isinstance(d, dict) or p not in d:
+            return default
+        d = d[p]
+    return d
+
+
+def _headline(name: str, d: dict) -> str:
+    """One human-meaningful cell per trajectory file (same spirit as
+    ``benchmarks.run._derive``, but over the persisted artifacts)."""
+    if name == "round_loop":
+        s32 = _get(d, "cpu_oracle", "superstep", "32", default={})
+        return (f"superstep32 {s32.get('rounds_per_sec', 0):.0f} r/s "
+                f"(x{s32.get('speedup_vs_host_loop', 0):.2f} vs host loop)")
+    if name == "data_plane":
+        rows = [r for r in d.get("chunk_sweep_n64", []) if r.get("chunk") == 32]
+        if rows:
+            r = rows[0]
+            return (f"device plane {_get(r, 'device', 'rounds_per_sec', default=0):.0f} r/s "
+                    f"(x{_get(r, 'device', 'speedup_vs_host_v1', default=0):.2f} vs host)")
+    if name == "paged_state":
+        pop = _get(d, "max_population_at_fixed_memory",
+                   "population_ratio_paged_vs_dense", default=0)
+        rel = _get(d, "throughput_n1024_chunk32", "paged_over_dense",
+                   default=0)
+        return f"population x{pop:.1f} @16GiB, rounds/sec x{rel:.2f}"
+    if name == "quant_fused":
+        r = (d.get("sweep") or [{}])[-1]
+        return (f"fused x{r.get('fused_over_unfused', 0):.2f} r/s, "
+                f"progress bytes x{r.get('progress_bytes_ratio', 0):.1f} smaller")
+    if name == "async_server":
+        return (f"real {_get(d, 'real', 'rounds_per_sec', default=0):.1f} r/s vs "
+                f"sim {_get(d, 'simulated', 'rounds_per_sec', default=0):.1f} r/s, "
+                f"selection_identical={d.get('selection_identical')}")
+    if name == "recovery":
+        ov = _get(d, "overhead", "overhead_frac", default=0)
+        return (f"WAL overhead {ov * 100:.1f}%, "
+                f"bit_exact={_get(d, 'overhead', 'bit_exact')}")
+    if name == "streaming":
+        pop = _get(d, "max_population_at_fixed_device_memory",
+                   "population_ratio_host_vs_device", default=0)
+        ceil = _get(d, "max_population_at_fixed_device_memory",
+                    "host_placement", "max_population_at_budget", default=0)
+        rel = _get(d, "throughput_n1024_chunk32", "host_over_device",
+                   default=0)
+        return (f"host tier x{pop:.0f} population ({ceil:,} @16GiB), "
+                f"rounds/sec x{rel:.2f} vs device placement")
+    keys = [k for k in d if k not in ("config", "note")]
+    return f"keys: {', '.join(keys[:4])}"
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=ROOT)
+    args = ap.parse_args()
+    files = sorted(glob.glob(os.path.join(args.root, "BENCH_*.json")))
+    if not files:
+        print("no BENCH_*.json trajectory files yet")
+        return 0
+    rows, bad = [], 0
+    for path in files:
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                d = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            rows.append((name, f"CORRUPT: {e}"))
+            bad += 1
+            continue
+        rows.append((name, _headline(name, d)))
+    width = max(len(n) for n, _ in rows)
+    print("perf trajectory (repo-root BENCH_*.json):")
+    for name, cell in rows:
+        print(f"  {name:<{width}}  {cell}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
